@@ -1,0 +1,66 @@
+"""Paper Tables 4–6 / Figures 7–8: IHTC + k-means / HAC on the six datasets.
+
+Offline container ⇒ synthetic analogs with the exact (n, d, k) of Table 3.
+Reports run time, working set, BSS/TSS and prototype counts per m — the
+paper's claim is BSS/TSS preserved while time/memory drop."""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import PAPER_DATASETS, dataset_analog, live_mb, print_csv, timed
+from repro.cluster.metrics import bss_tss
+from repro.core import ihtc
+
+
+def run(max_n: int = 200_000, ms=(0, 1, 2, 3), datasets=None, hac_ms=None):
+    rows_km, rows_hac = [], []
+    for spec in datasets or PAPER_DATASETS:
+        x = dataset_analog(spec, max_n=max_n)
+        xj = jnp.asarray(x)
+        n = len(x)
+        for m in ms:
+            def work():
+                return ihtc(xj, 2, m, "kmeans", k=spec.k,
+                            key=jax.random.PRNGKey(1))
+            res, sec = timed(work)
+            ratio = float(bss_tss(xj, res.labels, spec.k))
+            rows_km.append((spec.name, n, m, round(sec, 4),
+                            round(live_mb(), 1), int(res.n_prototypes),
+                            round(ratio, 4)))
+        # HAC needs enough reduction first (Table 5/6 pattern)
+        m0 = 0
+        while n // (2**m0) > 4096:
+            m0 += 1
+        for m in (hac_ms or (m0, m0 + 1)):
+            def work_h():
+                return ihtc(xj, 2, m, "hac", k=spec.k, linkage="ward",
+                            key=jax.random.PRNGKey(1))
+            res, sec = timed(work_h)
+            ratio = float(bss_tss(xj, res.labels, spec.k))
+            rows_hac.append((spec.name, n, m, round(sec, 4),
+                             round(live_mb(), 1), int(res.n_prototypes),
+                             round(ratio, 4)))
+    print_csv("table4_datasets_kmeans", rows_km,
+              "dataset,n,m,seconds,live_mb,n_prototypes,bss_tss")
+    print_csv("table5_datasets_hac", rows_hac,
+              "dataset,n,m,seconds,live_mb,n_prototypes,bss_tss")
+    return rows_km, rows_hac
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--max-n", type=int, default=200_000)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    if args.quick:
+        run(max_n=20_000, ms=(0, 1, 2), datasets=PAPER_DATASETS[:2])
+    else:
+        run(max_n=args.max_n)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Paper Tables 7–8 / Figures 9–11 (Appendix A): one ITIS iteration (m=1)
+at varying threshold t*. The paper finds: small t* cuts time/memory with
+flat accuracy; large t* eventually costs more time than no preprocessing
+(the kNN graph construction scales with t*)."""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import gmm_sample, live_mb, print_csv, timed
+from repro.cluster.metrics import clustering_accuracy
+from repro.core import ihtc
+
+
+def run(n=100_000, ts=(2, 4, 8, 16, 32, 64), seed: int = 0):
+    x, true = gmm_sample(n, seed)
+    xj = jnp.asarray(x)
+    rows = []
+    # the t*=None (no preprocessing) baseline
+    res, sec = timed(lambda: ihtc(xj, 2, 0, "kmeans", k=3,
+                                  key=jax.random.PRNGKey(seed)))
+    acc = clustering_accuracy(true, np.asarray(res.labels), 3)
+    rows.append((n, "none", round(sec, 4), round(live_mb(), 1), n,
+                 round(acc, 4)))
+    for t in ts:
+        def work():
+            return ihtc(xj, t, 1, "kmeans", k=3, key=jax.random.PRNGKey(seed))
+        res, sec = timed(work)
+        acc = clustering_accuracy(true, np.asarray(res.labels), 3)
+        rows.append((n, t, round(sec, 4), round(live_mb(), 1),
+                     int(res.n_prototypes), round(acc, 4)))
+    print_csv("table7_threshold_sweep", rows,
+              "n,t_star,seconds,live_mb,n_prototypes,accuracy")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=100_000)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    if args.quick:
+        run(n=5_000, ts=(2, 4, 8))
+    else:
+        run(n=args.n)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Paper Table 9 (Appendix B): IHTC + DBSCAN on the four smaller datasets.
+ε calibrated on a 1k subsample (paper uses 10-fold CV; we use the median
+4-NN distance heuristic on the subsample, same spirit)."""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import PAPER_DATASETS, dataset_analog, live_mb, print_csv, timed
+from repro.cluster.metrics import bss_tss
+from repro.core import ihtc
+from repro.core.knn import knn_graph
+
+
+def calibrate_eps(x: np.ndarray, seed: int = 0) -> float:
+    rng = np.random.default_rng(seed)
+    sub = x[rng.choice(len(x), size=min(1000, len(x)), replace=False)]
+    d, _ = knn_graph(jnp.asarray(sub), 4)
+    return float(np.sqrt(np.median(np.asarray(d)[:, -1])))
+
+
+def run(max_n: int = 50_000, ms=(0, 1, 2)):
+    rows = []
+    for spec in PAPER_DATASETS[:4]:
+        x = dataset_analog(spec, max_n=max_n)
+        xj = jnp.asarray(x)
+        eps = calibrate_eps(x)
+        for m in ms:
+            def work():
+                return ihtc(xj, 2, m, "dbscan", eps=eps, min_pts=16.0,
+                            key=jax.random.PRNGKey(2))
+            res, sec = timed(work)
+            lab = np.asarray(res.labels)
+            k_found = int(lab.max()) + 1 if lab.max() >= 0 else 0
+            ratio = float(bss_tss(xj, res.labels, max(k_found, 1)))
+            noise = float((lab < 0).mean())
+            rows.append((spec.name, len(x), m, round(sec, 4),
+                         round(live_mb(), 1), k_found, round(ratio, 4),
+                         round(noise, 3)))
+    print_csv("table9_ihtc_dbscan", rows,
+              "dataset,n,m,seconds,live_mb,clusters,bss_tss,noise_frac")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--max-n", type=int, default=50_000)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(max_n=4_000 if args.quick else args.max_n,
+        ms=(1, 2) if args.quick else (0, 1, 2))
+
+
+if __name__ == "__main__":
+    main()

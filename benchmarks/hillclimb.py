@@ -1,0 +1,73 @@
+"""§Perf hillclimb driver: runs the hypothesis→change→measure iterations on
+the three chosen cells and writes tagged JSON artifacts. Each knob here maps
+to a hypothesis recorded in EXPERIMENTS.md §Perf."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import dataclasses
+import json
+import sys
+import traceback
+
+from repro.configs import ARCHS
+from repro.launch.dryrun import run_cell
+
+OUT = "benchmarks/results/hillclimb"
+
+
+def save(tag, res):
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, tag + ".json"), "w") as f:
+        json.dump(res, f, indent=1)
+    if res["status"] == "ok":
+        r = res["roofline"]
+        print(f">>> {tag}: compute {r['compute_term_s']:.2e} | "
+              f"memory {r['memory_term_s']:.2e} | "
+              f"collective {r['collective_term_s']:.2e} | {r['dominant']} | "
+              f"MFU {r['mfu_bound']*100:.2f}% | "
+              f"peak {res['memory']['peak_gb']:.1f} GB\n")
+
+
+RUNS = {
+    # --- cell 1: deepseek train_4k pod1 (collective-bound) ---
+    "ds_iter1_groups": lambda: run_cell(
+        "deepseek-moe-16b", "train_4k", "pod1",
+        cfg_override=dataclasses.replace(ARCHS["deepseek-moe-16b"],
+                                         moe_groups=32)),
+    "ds_iter2_groups_bf16": lambda: run_cell(
+        "deepseek-moe-16b", "train_4k", "pod1", param_dtype="bfloat16",
+        cfg_override=dataclasses.replace(ARCHS["deepseek-moe-16b"],
+                                         moe_groups=32)),
+    # --- cell 2: qwen train_4k pod1 (memory-bound) ---
+    "qwen_iter1_seqheads": lambda: run_cell(
+        "qwen2.5-32b", "train_4k", "pod1", heads_mode="seq"),
+    "qwen_iter2_seqheads_bf16": lambda: run_cell(
+        "qwen2.5-32b", "train_4k", "pod1", heads_mode="seq",
+        param_dtype="bfloat16"),
+    # --- cell 3: granite long_500k (paper technique) ---
+    "gr_ref_uncompressed": lambda: run_cell(
+        "granite-20b", "long_500k", "pod1", force=True),
+    "gr_iter1_ihtc_bf16": lambda: run_cell(
+        "granite-20b", "long_500k", "pod1", variant="ihtc-kv",
+        param_dtype="bfloat16"),
+    # bonus: serving-shape cells for the compression story at batch
+    "qwen_decode_baseline_bf16": lambda: run_cell(
+        "qwen2.5-32b", "decode_32k", "pod1", param_dtype="bfloat16"),
+    "qwen_decode_ihtc_bf16": lambda: run_cell(
+        "qwen2.5-32b", "decode_32k", "pod1", variant="ihtc-kv",
+        param_dtype="bfloat16"),
+}
+
+if __name__ == "__main__":
+    only = sys.argv[1:] or list(RUNS)
+    for tag in only:
+        try:
+            save(tag, RUNS[tag]())
+        except Exception:
+            traceback.print_exc()
+            print(f">>> {tag}: FAILED")
+
+# appended iterations (see EXPERIMENTS.md §Perf for the hypothesis log)
+RUNS["qwen_iter2_bf16p_bf16params"] = lambda: run_cell(
+    "qwen2.5-32b", "train_4k", "pod1", param_dtype="bfloat16")
+RUNS["ds_iter3_groups_bf16_all"] = RUNS["ds_iter2_groups_bf16"]

@@ -1,0 +1,78 @@
+"""Roofline table builder: aggregates the dry-run JSON artifacts
+(benchmarks/results/dryrun/*.json) into the §Roofline markdown table and
+ranks hillclimb candidates."""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+HEADER = (
+    "| arch | shape | mesh | compute(s) | memory(s) | collective(s) | "
+    "bound | useful | MFU-bound | GB/chip |\n"
+    "|---|---|---|---|---|---|---|---|---|---|"
+)
+
+
+def load(results_dir: str):
+    cells = []
+    for fn in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(fn) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def table(cells, variant="baseline") -> str:
+    lines = [HEADER]
+    for c in cells:
+        if c.get("variant", "baseline") != variant:
+            continue
+        if c["status"] == "skip":
+            lines.append(
+                f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | — | — | "
+                f"skip | — | — | — |")
+            continue
+        if c["status"] != "ok":
+            lines.append(
+                f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | — | — | "
+                f"ERROR | — | — | — |")
+            continue
+        r = c["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compute_term_s']:.2e} | {r['memory_term_s']:.2e} | "
+            f"{r['collective_term_s']:.2e} | {r['dominant']} | "
+            f"{r['useful_ratio']:.2f} | {r['mfu_bound']*100:.1f}% | "
+            f"{c['memory']['peak_gb']:.1f} |")
+    return "\n".join(lines)
+
+
+def hillclimb_candidates(cells, top: int = 5):
+    ok = [c for c in cells if c["status"] == "ok"
+          and c.get("variant") == "baseline"]
+    by_mfu = sorted(ok, key=lambda c: c["roofline"]["mfu_bound"])[:top]
+    coll = sorted(
+        ok, key=lambda c: -(c["roofline"]["collective_term_s"]
+                            / max(c["roofline"]["step_time_bound_s"], 1e-12)))[:top]
+    return {"worst_mfu": [(c["arch"], c["shape"], c["mesh"],
+                           round(c["roofline"]["mfu_bound"] * 100, 2))
+                          for c in by_mfu],
+            "most_collective_bound": [(c["arch"], c["shape"], c["mesh"],
+                                       round(c["roofline"]["collective_term_s"], 3))
+                                      for c in coll]}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="benchmarks/results/dryrun")
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args()
+    cells = load(args.dir)
+    print(table(cells, args.variant))
+    print()
+    print(json.dumps(hillclimb_candidates(cells), indent=1))
+
+
+if __name__ == "__main__":
+    main()

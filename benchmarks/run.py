@@ -1,0 +1,113 @@
+"""Benchmark driver: one harness per paper table (+ the LM-stack micro
+benches and the dry-run roofline summary). Default mode is sized for a CPU
+container; pass --full for paper-scale sweeps.
+
+Output: `name,<row>` CSV per table (see each bench module's header line).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _lm_microbench(quick: bool = True):
+    """LM-stack sanity perf: per-token train cost of smoke models."""
+    from benchmarks.common import print_csv, timed
+    from repro.configs import ARCHS, SHAPES, smoke_config
+    from repro.data import make_batch
+    from repro.models import build
+    from repro.train import OptConfig, init_opt_state, make_train_step
+
+    rows = []
+    for name in ("qwen2.5-32b", "mamba2-370m", "jamba-v0.1-52b"):
+        cfg = smoke_config(ARCHS[name])
+        bundle = build(cfg)
+        params = bundle.init(jax.random.PRNGKey(0))
+        opt = init_opt_state(params)
+        step = jax.jit(make_train_step(bundle, OptConfig()))
+        batch = make_batch(cfg, SHAPES["train_4k"], 0, batch_override=4,
+                           seq_override=64)
+        (_, _, m), sec = timed(lambda: step(params, opt, batch), warmup=1,
+                               iters=3)
+        us_per_tok = sec / (4 * 64) * 1e6
+        rows.append((name, "train_step", round(sec * 1e3, 2),
+                     round(us_per_tok, 2)))
+    print_csv("lm_microbench", rows, "arch,phase,ms_per_step,us_per_token")
+
+
+def _kernel_microbench():
+    """Clustering hot-spot timings (oracle path on CPU)."""
+    import numpy as np
+
+    from benchmarks.common import print_csv, timed
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    rows = []
+    x = jnp.asarray(rng.normal(size=(4096, 8)), jnp.float32)
+    f = jax.jit(lambda a: ops.knn(a, 3, impl="ref"))
+    _, sec = timed(f, x, warmup=1, iters=3)
+    rows.append(("knn_4096x8_k3", round(sec * 1e3, 2),
+                 round(sec / 4096 * 1e9, 1)))
+    ids = jnp.asarray(rng.integers(0, 2048, size=4096), jnp.int32)
+    g = jax.jit(lambda a, i: ops.segment_sum(a, i, 2048, impl="ref"))
+    _, sec = timed(g, x, ids, warmup=1, iters=3)
+    rows.append(("segment_sum_4096", round(sec * 1e3, 2),
+                 round(sec / 4096 * 1e9, 1)))
+    print_csv("kernel_microbench", rows, "kernel,ms,ns_per_point")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sweeps (hours on CPU)")
+    ap.add_argument("--max-n", type=int, default=0)
+    args, _ = ap.parse_known_args()
+    quick = not args.full
+
+    from benchmarks import (bench_table1_kmeans, bench_table2_hac,
+                            bench_table4_datasets, bench_table7_threshold,
+                            bench_table9_dbscan)
+    from benchmarks.common import PAPER_DATASETS
+
+    t0 = time.time()
+    if quick:
+        bench_table1_kmeans.run(ns=(2_000, 20_000), ms=(0, 1, 2, 3))
+        bench_table2_hac.run(ns=(4_000,), budget=512)
+        bench_table4_datasets.run(max_n=20_000, ms=(0, 1, 2),
+                                  datasets=PAPER_DATASETS[:3])
+        bench_table7_threshold.run(n=5_000, ts=(2, 4, 8, 16))
+        bench_table9_dbscan.run(max_n=4_000, ms=(1, 2))
+        _lm_microbench()
+        _kernel_microbench()
+    else:
+        mx = args.max_n or 1_000_000
+        bench_table1_kmeans.run(
+            ns=tuple(n for n in (10_000, 100_000, 1_000_000) if n <= mx))
+        bench_table2_hac.run(
+            ns=tuple(n for n in (10_000, 100_000, 1_000_000) if n <= mx))
+        bench_table4_datasets.run(max_n=min(mx, 600_000))
+        bench_table7_threshold.run(n=min(mx, 100_000))
+        bench_table9_dbscan.run(max_n=min(mx, 50_000))
+        _lm_microbench()
+        _kernel_microbench()
+
+    # dry-run roofline summary, if artifacts exist
+    results = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+    if os.path.isdir(results) and os.listdir(results):
+        from benchmarks import roofline
+
+        cells = roofline.load(results)
+        ok = sum(1 for c in cells if c["status"] == "ok")
+        skip = sum(1 for c in cells if c["status"] == "skip")
+        err = sum(1 for c in cells if c["status"] not in ("ok", "skip"))
+        print(f"# dryrun_cells: ok={ok} skip={skip} error={err}")
+    print(f"# total_bench_seconds,{round(time.time() - t0, 1)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Distributed IHTC: hierarchical (sharded) ITIS over a device mesh.
+
+Demonstrates the 1000-node pattern at laptop scale: each shard runs TC
+locally (ring-kNN available for exact cross-shard graphs), reduces to
+weighted prototypes, prototypes all-gather, the host driver iterates, and
+the final small prototype set is clustered with weighted k-means. The
+composition is exact ITIS semantics — ITIS is already hierarchical.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python examples/massive_clustering.py --n 65536
+"""
+import argparse
+import os
+import sys
+
+if "--xla-devices" in sys.argv or os.environ.get("XLA_FLAGS") is None:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+sys.path.insert(0, "src")
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+def main():
+    from repro.cluster.kmeans import kmeans
+    from repro.cluster.metrics import clustering_accuracy
+    from repro.core import itis_step
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=65_536)
+    ap.add_argument("--t", type=int, default=2)
+    ap.add_argument("--m", type=int, default=4)
+    args = ap.parse_args()
+
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    print(f"devices: {n_dev}; n = {args.n}; t* = {args.t}; m = {args.m}")
+
+    rng = np.random.default_rng(0)
+    mus = np.array([[1, 2], [7, 8], [3, 5]], float)
+    sds = np.array([[1, 0.5], [2, 1], [3, 4]], float) ** 0.5
+    comp = rng.choice(3, size=args.n, p=[0.5, 0.3, 0.2])
+    x = jnp.asarray(mus[comp] + rng.normal(size=(args.n, 2)) * sds[comp],
+                    jnp.float32)
+
+    # --- sharded ITIS level: per-shard TC + prototype reduction ---
+    def level(x_loc, mass_loc, valid_loc, t):
+        out = itis_step(x_loc, mass_loc, valid_loc, t,
+                        key=jax.random.PRNGKey(0), weighted=True, impl="ref")
+        return out.protos, out.mass, out.valid
+
+    t0 = time.perf_counter()
+    cur_x, cur_m, cur_v = x, jnp.ones((args.n,)), jnp.ones((args.n,), bool)
+    for lvl in range(args.m):
+        fn = shard_map(
+            functools.partial(level, t=args.t), mesh=mesh,
+            in_specs=(P("data", None), P("data"), P("data")),
+            out_specs=(P("data", None), P("data"), P("data")),
+        )
+        cur_x, cur_m, cur_v = fn(cur_x, cur_m, cur_v)
+        n_valid = int(jnp.sum(cur_v))
+        print(f"  level {lvl + 1}: {n_valid} prototypes "
+              f"(mass check: {float(jnp.sum(jnp.where(cur_v, cur_m, 0))):.0f})")
+
+    # --- final: weighted k-means on the gathered prototypes ---
+    r = kmeans(cur_x, 3, valid=cur_v, weights=cur_m,
+               key=jax.random.PRNGKey(1))
+    sec = time.perf_counter() - t0
+    # back out through nearest-prototype assignment for scoring
+    from repro.kernels import ops
+
+    d = ops.pairwise_sq_l2(x, r.centers, impl="ref")
+    labels = np.asarray(jnp.argmin(d, axis=1))
+    acc = clustering_accuracy(comp, labels, 3)
+    print(f"hierarchical IHTC: {sec:.2f}s total, accuracy {acc:.4f}")
+
+
+if __name__ == "__main__":
+    main()

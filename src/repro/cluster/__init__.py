@@ -1,0 +1,2 @@
+"""Sophisticated clustering backends hybridized by IHTC (paper baselines)."""
+from . import dbscan, hac, kmeans, metrics  # noqa: F401

@@ -1,0 +1,120 @@
+"""Clustering quality metrics used by the paper's tables.
+
+* prediction accuracy (GMM simulation, Tables 1–2) — best label matching;
+* BSS/TSS (real-data tables 4–6, 9);
+* bottleneck objective (max within-cluster dissimilarity) — the quantity TC
+  4-approximates; used by the property tests.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def bss_tss(
+    x: jax.Array,
+    labels: jax.Array,
+    k: int,
+    *,
+    weights: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Between-cluster SS / total SS (higher = tighter clusters)."""
+    n = x.shape[0]
+    w = jnp.ones((n,), jnp.float32) if weights is None else weights.astype(jnp.float32)
+    ok = labels >= 0
+    w = jnp.where(ok, w, 0.0)
+    tot_w = jnp.maximum(jnp.sum(w), 1e-30)
+    mu = jnp.sum(x * w[:, None], axis=0) / tot_w
+    tss = jnp.sum(w * jnp.sum(jnp.square(x - mu), axis=1))
+
+    lab_safe = jnp.where(ok, labels, k)
+    sums = jax.ops.segment_sum(x * w[:, None], lab_safe, num_segments=k + 1)[:k]
+    mass = jax.ops.segment_sum(w, lab_safe, num_segments=k + 1)[:k]
+    cent = sums / jnp.maximum(mass, 1e-30)[:, None]
+    wss = jnp.sum(w * jnp.sum(jnp.square(x - cent[jnp.where(ok, labels, 0)]), axis=1)
+                  * ok.astype(jnp.float32))
+    return (tss - wss) / tss
+
+
+def confusion(true: np.ndarray, pred: np.ndarray, k_true: int, k_pred: int) -> np.ndarray:
+    m = np.zeros((k_true, k_pred), dtype=np.int64)
+    ok = (true >= 0) & (pred >= 0)
+    np.add.at(m, (true[ok], pred[ok]), 1)
+    return m
+
+
+def clustering_accuracy(true, pred, k: int) -> float:
+    """Paper's 'prediction accuracy': fraction correct under the best
+    assignment of predicted clusters to true classes. Exact permutation
+    search for k ≤ 8, greedy otherwise. Unmatched points (label -1) count
+    as errors."""
+    true = np.asarray(true)
+    pred = np.asarray(pred)
+    n = true.shape[0]
+    k_pred = max(int(pred.max()) + 1, k) if pred.size and pred.max() >= 0 else k
+    m = confusion(true, pred, k, k_pred)
+    if k_pred <= 8:
+        best = 0
+        for perm in itertools.permutations(range(k_pred), min(k, k_pred)):
+            best = max(best, sum(m[i, p] for i, p in enumerate(perm) if i < k))
+        return best / n
+    # greedy: repeatedly take the largest cell
+    m = m.astype(np.float64).copy()
+    total = 0.0
+    for _ in range(min(k, k_pred)):
+        i, j = np.unravel_index(np.argmax(m), m.shape)
+        total += m[i, j]
+        m[i, :] = -1
+        m[:, j] = -1
+    return total / n
+
+
+def bottleneck_objective(x, labels) -> float:
+    """Max within-cluster pairwise distance (brute force — small n only)."""
+    x = np.asarray(x, dtype=np.float64)
+    labels = np.asarray(labels)
+    worst = 0.0
+    for c in np.unique(labels[labels >= 0]):
+        pts = x[labels == c]
+        if len(pts) < 2:
+            continue
+        d = np.sqrt(((pts[:, None, :] - pts[None, :, :]) ** 2).sum(-1))
+        worst = max(worst, float(d.max()))
+    return worst
+
+
+def optimal_bottleneck(x, t: int) -> float:
+    """Exact optimum λ of BTPP by brute force over set partitions (tiny n).
+
+    Used by the property test asserting TC ≤ 4λ."""
+    x = np.asarray(x, dtype=np.float64)
+    n = len(x)
+    assert n <= 10, "brute force only"
+    d = np.sqrt(((x[:, None, :] - x[None, :, :]) ** 2).sum(-1))
+
+    best = [np.inf]
+
+    def rec(i, parts):
+        if i == n:
+            if all(len(p) >= t for p in parts):
+                worst = 0.0
+                for p in parts:
+                    for a in range(len(p)):
+                        for b in range(a + 1, len(p)):
+                            worst = max(worst, d[p[a], p[b]])
+                best[0] = min(best[0], worst)
+            return
+        for p in parts:
+            p.append(i)
+            rec(i + 1, parts)
+            p.pop()
+        parts.append([i])
+        rec(i + 1, parts)
+        parts.pop()
+
+    rec(0, [])
+    return best[0]

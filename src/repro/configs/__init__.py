@@ -1,0 +1,15 @@
+"""Config registry: ModelConfig per assigned architecture + input shapes."""
+from repro.configs.archs import ARCHS, smoke_config  # noqa: F401
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    ModelConfig,
+    ParallelConfig,
+    RunConfig,
+    ShapeConfig,
+)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]

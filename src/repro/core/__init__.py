@@ -1,0 +1,11 @@
+"""The paper's primary contribution: TC / ITIS / IHTC, TPU-native in JAX."""
+from repro.core.ihtc import IHTCResult, ihtc  # noqa: F401
+from repro.core.itis import ITISResult, itis, itis_step  # noqa: F401
+from repro.core.knn import knn_graph, knn_graph_blocked, ring_knn  # noqa: F401
+from repro.core.prototypes import (  # noqa: F401
+    PrototypeSet,
+    compose_assignments,
+    reduce_to_prototypes,
+    standardize,
+)
+from repro.core.tc import TCResult, threshold_clustering  # noqa: F401

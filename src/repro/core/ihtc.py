@@ -1,0 +1,90 @@
+"""IHTC — Iterative Hybridized Threshold Clustering (the paper's §3.2).
+
+ITIS reduces n units to ≤ n/(t*)^m weighted prototypes, a "sophisticated"
+clusterer (k-means / HAC / DBSCAN / any callable) runs on the prototypes,
+and labels are backed out to all n units. Guarantee: every final cluster
+contains ≥ (t*)^m original units.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.itis import ITISResult, itis
+from repro.core.prototypes import compose_assignments
+
+BackendFn = Callable[..., jax.Array]
+
+
+class IHTCResult(NamedTuple):
+    labels: jax.Array           # (n,) int32 final cluster label per original unit
+    proto_labels: jax.Array     # (n_max,) labels of final-level prototypes (-1 pad)
+    protos: jax.Array           # (n_max, d)
+    proto_mass: jax.Array       # (n_max,)
+    proto_valid: jax.Array      # (n_max,) bool
+    n_prototypes: jax.Array     # () int32
+    assignments: Sequence[jax.Array]
+
+
+def _resolve_backend(backend: Union[str, BackendFn]) -> BackendFn:
+    if callable(backend):
+        return backend
+    from repro.cluster import dbscan, hac, kmeans  # local import: no cycle
+
+    table = {
+        "kmeans": kmeans.kmeans_masked,
+        "hac": hac.hac_masked,
+        "dbscan": dbscan.dbscan_masked,
+    }
+    if backend not in table:
+        raise ValueError(f"unknown backend {backend!r}; have {sorted(table)}")
+    return table[backend]
+
+
+def ihtc(
+    x: jax.Array,
+    t: int,
+    m: int,
+    backend: Union[str, BackendFn] = "kmeans",
+    *,
+    weights: Optional[jax.Array] = None,
+    weighted: bool = False,
+    use_mass_in_backend: bool = True,
+    key: Optional[jax.Array] = None,
+    impl: str = "auto",
+    knn_block: int = 0,
+    **backend_kwargs,
+) -> IHTCResult:
+    """Full IHTC pipeline (host driver).
+
+    ``weighted`` controls ITIS centroid weighting (paper-faithful default:
+    False). ``use_mass_in_backend`` feeds prototype masses as sample weights
+    to the backend clusterer (paper runs backends unweighted; mass-weighting
+    is the statistically consistent variant — both supported).
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    key_itis, key_backend = jax.random.split(key)
+
+    r: ITISResult = itis(
+        x, t, m, weights=weights, key=key_itis, weighted=weighted,
+        impl=impl, knn_block=knn_block,
+    )
+    fn = _resolve_backend(backend)
+    w = r.mass if use_mass_in_backend else None
+    proto_labels = fn(
+        r.protos, valid=r.valid, weights=w, key=key_backend, impl=impl,
+        **backend_kwargs,
+    )
+    proto_labels = jnp.where(r.valid, proto_labels, -1).astype(jnp.int32)
+
+    if r.assignments:
+        labels = compose_assignments(r.assignments, proto_labels)
+    else:  # m == 0 or early-stop before the first level: backend ran on x itself
+        labels = proto_labels[: x.shape[0]]
+    return IHTCResult(
+        labels.astype(jnp.int32), proto_labels, r.protos, r.mass, r.valid,
+        r.n_prototypes, r.assignments,
+    )

@@ -1,0 +1,102 @@
+"""ITIS — Iterated Threshold Instance Selection (the paper's §3.1).
+
+Repeat {TC at threshold t* → collapse clusters to prototypes} m times.
+Each iteration shrinks the point set by ≥ t*, so ITIS level l lives in a
+*static* padded buffer of size n₀ // (t*)^l — fully jit-compatible fixed
+shapes with validity masks (one XLA program per level shape; the geometric
+shrink means total compile+run cost is dominated by level 0).
+
+The host-level driver (`itis`) orchestrates the per-level jitted step and
+keeps the level assignment maps needed for IHTC back-out.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.prototypes import PrototypeSet, reduce_to_prototypes
+from repro.core.tc import TCResult, threshold_clustering
+
+
+class ITISLevelOut(NamedTuple):
+    protos: jax.Array      # (n_out_max, d)
+    mass: jax.Array        # (n_out_max,)
+    valid: jax.Array       # (n_out_max,) bool
+    assignment: jax.Array  # (n_in,) int32 → [0, n_out_max), -1 for padding
+    n_clusters: jax.Array  # () int32
+
+
+class ITISResult(NamedTuple):
+    protos: jax.Array               # final level prototypes (padded)
+    mass: jax.Array
+    valid: jax.Array
+    assignments: Sequence[jax.Array]  # one per level, for back-out
+    n_prototypes: jax.Array           # () int32 — valid count at final level
+
+
+@functools.partial(jax.jit, static_argnames=("t", "weighted", "impl", "knn_block"))
+def itis_step(
+    x: jax.Array,
+    mass: jax.Array,
+    valid: jax.Array,
+    t: int,
+    *,
+    key: jax.Array,
+    weighted: bool = False,
+    impl: str = "auto",
+    knn_block: int = 0,
+) -> ITISLevelOut:
+    """One ITIS level: TC on the valid points, reduce to ≤ n//t prototypes."""
+    n = x.shape[0]
+    n_out = max(n // t, 1)
+    tc: TCResult = threshold_clustering(
+        x, t, valid=valid, key=key, impl=impl, knn_block=knn_block
+    )
+    ps: PrototypeSet = reduce_to_prototypes(
+        x, tc.labels, n_out, weights=mass, weighted=weighted, impl=impl
+    )
+    return ITISLevelOut(ps.x, ps.mass, ps.valid, tc.labels, tc.n_clusters)
+
+
+def itis(
+    x: jax.Array,
+    t: int,
+    m: int,
+    *,
+    weights: Optional[jax.Array] = None,
+    key: Optional[jax.Array] = None,
+    weighted: bool = False,
+    impl: str = "auto",
+    knn_block: int = 0,
+    min_points: int = 4,
+) -> ITISResult:
+    """Run m ITIS iterations (host driver).
+
+    Stops early if fewer than ``max(min_points, 2*t)`` valid points remain
+    (further reduction would collapse everything into one cluster).
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    n = x.shape[0]
+    mass = jnp.ones((n,), jnp.float32) if weights is None else weights.astype(jnp.float32)
+    valid = jnp.ones((n,), bool)
+
+    assignments = []
+    cur_x, cur_m, cur_v = x, mass, valid
+    n_protos = jnp.sum(cur_v).astype(jnp.int32)
+    for level in range(m):
+        n_valid = int(jnp.sum(cur_v))
+        if n_valid < max(min_points, 2 * t):
+            break
+        key, sub = jax.random.split(key)
+        out = itis_step(
+            cur_x, cur_m, cur_v, t,
+            key=sub, weighted=weighted, impl=impl, knn_block=knn_block,
+        )
+        assignments.append(out.assignment)
+        cur_x, cur_m, cur_v = out.protos, out.mass, out.valid
+        n_protos = out.n_clusters
+    return ITISResult(cur_x, cur_m, cur_v, assignments, n_protos)

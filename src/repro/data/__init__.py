@@ -1,0 +1,2 @@
+"""Data path: deterministic synthetic pipeline + ITIS instance selection."""
+from repro.data.pipeline import DataConfig, batch_iterator, make_batch  # noqa: F401

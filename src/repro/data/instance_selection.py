@@ -1,0 +1,125 @@
+"""ITIS instance selection as a first-class data-pipeline stage — the paper's
+technique applied to LM training corpora.
+
+Flow: featurize each training example (mean-pooled embedding — either the
+model's own embedding table or a fixed random projection), run ITIS at
+threshold t* for m iterations, keep one *representative example* per
+prototype (the medoid: the member nearest the centroid) weighted by cluster
+mass. The train step's weighted CE (train_step.cross_entropy) then optimizes
+an unbiased estimate of the full-corpus loss on ≥(t*)^m-fold less data.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ihtc import ihtc
+from repro.core.itis import itis
+from repro.core.prototypes import compose_assignments, standardize
+from repro.kernels import ops
+
+
+@dataclass(frozen=True)
+class SelectionConfig:
+    threshold: int = 2          # t*
+    iterations: int = 2         # m  → ≥ 4× corpus reduction
+    feature_dim: int = 64       # random-projection feature width
+    standardize: bool = True
+    weighted: bool = True       # mass-correct centroids through levels
+    impl: str = "auto"
+
+
+class SelectedCorpus(NamedTuple):
+    indices: jax.Array   # (n_selected_max,) int32 example ids (-1 padding)
+    weights: jax.Array   # (n_selected_max,) float32 cluster masses
+    valid: jax.Array     # (n_selected_max,) bool
+    assignment: jax.Array  # (n,) int32 — which selected example covers each original
+
+
+def featurize(
+    tokens: jax.Array,  # (n, s) int32
+    vocab: int,
+    dim: int,
+    *,
+    key: Optional[jax.Array] = None,
+    embed_table: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Mean-pooled embedding features (n, dim). Uses the model's embedding
+    table when given, else a fixed random projection of token counts."""
+    if embed_table is not None:
+        emb = embed_table[tokens]                    # (n, s, d)
+        feats = jnp.mean(emb.astype(jnp.float32), axis=1)
+        return feats[:, :dim]
+    if key is None:
+        key = jax.random.PRNGKey(7)
+    proj = jax.random.normal(key, (vocab, dim), jnp.float32) / (dim**0.5)
+    # bag-of-tokens projection == mean of projected one-hots (cheap gather)
+    return jnp.mean(proj[tokens], axis=1)
+
+
+def select_instances(
+    tokens: jax.Array,
+    vocab: int,
+    scfg: SelectionConfig = SelectionConfig(),
+    *,
+    key: Optional[jax.Array] = None,
+    embed_table: Optional[jax.Array] = None,
+) -> SelectedCorpus:
+    """Run ITIS over example features; pick the medoid example per prototype."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    kf, ki = jax.random.split(key)
+    feats = featurize(tokens, vocab, scfg.feature_dim, key=kf,
+                      embed_table=embed_table)
+    if scfg.standardize:
+        feats = standardize(feats)
+
+    r = itis(feats, scfg.threshold, scfg.iterations, key=ki,
+             weighted=scfg.weighted, impl=scfg.impl)
+
+    # back out: original example -> final prototype id
+    n = feats.shape[0]
+    if r.assignments:
+        ident = jnp.arange(r.protos.shape[0], dtype=jnp.int32)
+        assign = compose_assignments(r.assignments, ident)  # (n,) -> proto id
+    else:
+        assign = jnp.arange(n, dtype=jnp.int32)
+
+    # medoid per prototype: member closest to the prototype centroid
+    n_max = r.protos.shape[0]
+    d = ops.pairwise_sq_l2(feats, r.protos, impl=scfg.impl)  # (n, n_max)
+    dmem = d[jnp.arange(n), jnp.where(assign >= 0, assign, 0)]
+    dmem = jnp.where(assign >= 0, dmem, jnp.inf)
+    order = jnp.argsort(dmem)  # best members first
+    # first occurrence of each prototype id along `order` is its medoid
+    seen = jnp.zeros((n_max + 1,), bool)
+    sel = jnp.full((n_max,), -1, jnp.int32)
+
+    def body(i, carry):
+        seen, sel = carry
+        ex = order[i]
+        pid = jnp.where(assign[ex] >= 0, assign[ex], n_max)
+        take = (~seen[pid]) & (pid < n_max)
+        sel = jnp.where(take, sel.at[jnp.minimum(pid, n_max - 1)].set(ex), sel)
+        seen = seen.at[pid].set(True)
+        return seen, sel
+
+    _, sel = jax.lax.fori_loop(0, n, body, (seen, sel))
+    return SelectedCorpus(sel, r.mass, r.valid & (sel >= 0), assign)
+
+
+def reduced_batch(
+    corpus_tokens: jax.Array, selected: SelectedCorpus
+) -> Dict[str, jax.Array]:
+    """Materialize the weighted reduced training set (padded rows weight 0)."""
+    safe = jnp.where(selected.indices >= 0, selected.indices, 0)
+    toks = corpus_tokens[safe]
+    w = jnp.where(selected.valid, selected.weights, 0.0)
+    return {
+        "tokens": toks[:, :-1],
+        "labels": jnp.where(selected.valid[:, None], toks[:, 1:], -1),
+        "weights": w,
+    }

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the compute hot-spots of IHTC + the LM stack.
+
+Each kernel module ships ``pl.pallas_call`` + explicit BlockSpec VMEM tiling;
+``ops.py`` holds the jit'd dispatch wrappers and ``ref.py`` the pure-jnp
+oracles the kernels are validated against (interpret mode on CPU).
+"""
+from . import ops, ref  # noqa: F401

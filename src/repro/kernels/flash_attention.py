@@ -1,0 +1,141 @@
+"""Blocked (flash) attention forward kernel with prototype-mass bias.
+
+Standard online-softmax tiling: the kv axis is the innermost grid dimension,
+running max / denominator / accumulator live in the revisited output blocks,
+and the final kv step normalizes. Logit soft-capping (gemma2) and an additive
+per-key bias are fused; the bias is how IHTC KV-cache prototype compression
+enters attention (``+log(count)`` mass correction, see
+``repro/serve/kv_compression.py``).
+
+Grid: (batch*heads, Lq/Bq, Lk/Bk). Blocks are 128-aligned for the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_MASKED = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, bias_ref, o_ref, m_ref, l_ref, *, scale, causal, softcap,
+    lq, lk, bq, bk,
+):
+    jk = pl.program_id(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, _MASKED)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # (bq, dh)
+    k = k_ref[0].astype(jnp.float32)  # (bk, dh)
+    v = v_ref[0].astype(jnp.float32)  # (bk, dh)
+    b = bias_ref[0].astype(jnp.float32)  # (bk,)
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (bq, bk)
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    logits = logits + b[None, :]
+    if causal:
+        iq = pl.program_id(1)
+        qpos = jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + iq * bq + (lk - lq)
+        kpos = jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1) + jk * bk
+        logits = jnp.where(kpos <= qpos, logits, _MASKED)
+
+    m_prev = m_ref[...]  # (1, bq)
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1)[None, :])
+    alpha = jnp.exp(m_prev - m_new)  # (1, bq)
+    p = jnp.exp(logits - m_new[0][:, None])  # (bq, bk)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1)[None, :]
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (bq, dh)
+    o_ref[...] = o_ref[...] * alpha[0][None, :, None] + pv[None]
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(jk == pl.num_programs(2) - 1)
+    def _final():
+        o_ref[...] = o_ref[...] / jnp.maximum(l_ref[...][0][None, :, None], 1e-30)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "logit_softcap", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    kv_bias: jax.Array | None = None,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    logit_softcap: float = 0.0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Flash attention fwd. q: (b, h, lq, dh); k, v: (b, h, lk, dh) (heads
+    already matched — GQA repeat happens in ops.py). kv_bias: (b, h, lk)."""
+    bsz, h, lq, dh = q.shape
+    lk = k.shape[2]
+    s = (1.0 / (dh**0.5)) if scale is None else scale
+
+    bq = min(block_q, max(lq, 8))
+    bk = min(block_k, max(lk, 8))
+    pq = (-lq) % bq
+    pk = (-lk) % bk
+    dpad = (-dh) % 128 if dh > 128 else (128 - dh)
+
+    if kv_bias is None:
+        kv_bias = jnp.zeros((bsz, h, lk), jnp.float32)
+    # fold kv padding into the bias mask
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, dpad)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, dpad)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, dpad)))
+    bp = jnp.pad(kv_bias.astype(jnp.float32), ((0, 0), (0, 0), (0, pk)),
+                 constant_values=_MASKED)
+
+    bh = bsz * h
+    qp = qp.reshape(bh, lq + pq, dh + dpad)
+    kp = kp.reshape(bh, lk + pk, dh + dpad)
+    vp = vp.reshape(bh, lk + pk, dh + dpad)
+    bp = bp.reshape(bh, lk + pk)
+
+    grid = (bh, (lq + pq) // bq, (lk + pk) // bk)
+    kernel = functools.partial(
+        _flash_kernel, scale=s, causal=causal, softcap=float(logit_softcap),
+        lq=lq, lk=lk, bq=bq, bk=bk,
+    )
+    o, _, _ = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh + dpad), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, dh + dpad), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, dh + dpad), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk), lambda b, i, j: (b, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, dh + dpad), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, lq + pq, dh + dpad), jnp.float32),
+            jax.ShapeDtypeStruct((bh, lq + pq), jnp.float32),
+            jax.ShapeDtypeStruct((bh, lq + pq), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp, bp)
+    out = o[:, :lq, :dh].reshape(bsz, h, lq, dh)
+    return out.astype(q.dtype)

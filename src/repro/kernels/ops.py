@@ -1,0 +1,107 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Dispatch policy (``impl=``):
+  * ``"auto"``   — Pallas on TPU, jnp reference elsewhere (XLA:CPU/GPU compile
+    the references well; Pallas-interpret would be orders slower).
+  * ``"pallas"`` — force the kernel; on non-TPU backends runs ``interpret=True``
+    (that is exactly what the correctness tests do).
+  * ``"ref"``    — force the pure-jnp oracle.
+
+The dry-run/roofline path always uses ``"ref"`` so that
+``compiled.cost_analysis()`` sees real FLOPs (a Pallas custom-call is opaque
+to HLO cost analysis — see DESIGN.md §7).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import knn_topk as _knn
+from . import pairwise_l2 as _pw
+from . import ref
+from . import segment_sum as _ss
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return impl
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pairwise_sq_l2(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    y_valid: Optional[jax.Array] = None,
+    impl: str = "auto",
+) -> jax.Array:
+    if _resolve(impl) == "pallas":
+        return _pw.pairwise_sq_l2(x, y, y_valid, interpret=_interpret())
+    return ref.pairwise_sq_l2(x, y, y_valid=y_valid)
+
+
+def knn(
+    x: jax.Array,
+    k: int,
+    *,
+    valid: Optional[jax.Array] = None,
+    exclude_self: bool = True,
+    impl: str = "auto",
+) -> Tuple[jax.Array, jax.Array]:
+    if _resolve(impl) == "pallas":
+        return _knn.knn_topk(
+            x, k, valid, exclude_self=exclude_self, interpret=_interpret()
+        )
+    return ref.knn(x, k, valid=valid, exclude_self=exclude_self)
+
+
+def segment_sum(
+    x: jax.Array,
+    segment_ids: jax.Array,
+    num_segments: int,
+    *,
+    weights: Optional[jax.Array] = None,
+    impl: str = "auto",
+) -> Tuple[jax.Array, jax.Array]:
+    if _resolve(impl) == "pallas":
+        return _ss.segment_sum(
+            x, segment_ids, num_segments, weights, interpret=_interpret()
+        )
+    return ref.segment_sum(x, segment_ids, num_segments, weights=weights)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    kv_bias: Optional[jax.Array] = None,
+    logit_softcap: float = 0.0,
+    impl: str = "auto",
+) -> jax.Array:
+    """GQA-aware attention entry point: q (b, hq, lq, dh); k/v (b, hkv, lk, dh)."""
+    hq, hkv = q.shape[1], k.shape[1]
+    if hkv != hq:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+        if kv_bias is not None and kv_bias.shape[1] != hq:
+            kv_bias = jnp.repeat(kv_bias, rep, axis=1)
+    if _resolve(impl) == "pallas":
+        return _fa.flash_attention(
+            q, k, v, kv_bias, causal=causal, scale=scale,
+            logit_softcap=float(logit_softcap), interpret=_interpret(),
+        )
+    return ref.flash_attention(
+        q, k, v, causal=causal, scale=scale, kv_bias=kv_bias,
+        logit_softcap=float(logit_softcap),
+    )

@@ -1,0 +1,145 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the *reference semantics*. Each TPU kernel in this directory is
+validated (in interpret mode on CPU, and on real TPUs via the same tests)
+against these functions with ``assert_allclose`` across shape/dtype sweeps.
+
+They are also the production execution path on non-TPU backends (XLA:CPU
+compiles these well), selected by :mod:`repro.kernels.ops`.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = float("-inf")
+
+
+def pairwise_sq_l2(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    y_valid: Optional[jax.Array] = None,
+    precision=jax.lax.Precision.HIGHEST,
+) -> jax.Array:
+    """Squared Euclidean distance matrix  ``D[i, j] = ||x_i - y_j||^2``.
+
+    Args:
+      x: (n, d) queries.
+      y: (m, d) keys.
+      y_valid: optional (m,) bool; invalid keys get distance ``+inf``.
+
+    Returns:
+      (n, m) float32 distances (clamped at >= 0 to absorb round-off).
+    """
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    xn = jnp.sum(x * x, axis=-1)  # (n,)
+    yn = jnp.sum(y * y, axis=-1)  # (m,)
+    cross = jnp.dot(x, y.T, precision=precision)  # (n, m) -- MXU shaped
+    d = xn[:, None] + yn[None, :] - 2.0 * cross
+    d = jnp.maximum(d, 0.0)
+    if y_valid is not None:
+        d = jnp.where(y_valid[None, :], d, jnp.inf)
+    return d
+
+
+def knn(
+    x: jax.Array,
+    k: int,
+    *,
+    valid: Optional[jax.Array] = None,
+    exclude_self: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Exact k-nearest-neighbours of each row of ``x`` within ``x``.
+
+    Args:
+      x: (n, d) points.
+      k: neighbours per point (static).
+      valid: optional (n,) bool mask; invalid points are neither queries whose
+        output matters nor eligible neighbours.
+      exclude_self: drop the trivial self-match.
+
+    Returns:
+      (dists, idx): both (n, k); ``dists`` are squared L2, ascending. Slots
+      that could not be filled (fewer than k valid candidates) have ``inf``
+      distance and index ``-1``.
+    """
+    n = x.shape[0]
+    d = pairwise_sq_l2(x, x, y_valid=valid)
+    if exclude_self:
+        d = d.at[jnp.arange(n), jnp.arange(n)].set(jnp.inf)
+    neg_d, idx = jax.lax.top_k(-d, k)
+    dists = -neg_d
+    idx = jnp.where(jnp.isfinite(dists), idx, -1)
+    return dists, idx
+
+
+def segment_sum(
+    x: jax.Array,
+    segment_ids: jax.Array,
+    num_segments: int,
+    *,
+    weights: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Weighted segment sum: out[s] = sum_{i: seg[i]==s} w_i * x_i.
+
+    ``segment_ids`` outside [0, num_segments) are dropped (use that for
+    masking invalid rows).
+
+    Returns:
+      (sums (num_segments, d), masses (num_segments,)).
+    """
+    w = jnp.ones(x.shape[0], x.dtype) if weights is None else weights.astype(x.dtype)
+    xw = x * w[:, None]
+    sums = jax.ops.segment_sum(xw, segment_ids, num_segments=num_segments)
+    masses = jax.ops.segment_sum(w, segment_ids, num_segments=num_segments)
+    return sums, masses
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    kv_bias: Optional[jax.Array] = None,
+    logit_softcap: float = 0.0,
+) -> jax.Array:
+    """Reference multi-head attention.
+
+    Args:
+      q: (b, h, lq, dh)
+      k, v: (b, h, lk, dh)   (GQA repeat is done by the caller)
+      causal: causal mask aligned to the *end* of the kv sequence (so a
+        decode step with lq=1 attends to everything).
+      kv_bias: optional (b, h, lk) additive logit bias — this is where the
+        IHTC prototype ``log(count)`` mass-correction enters.
+      logit_softcap: if > 0, gemma2-style ``cap * tanh(logits / cap)``.
+
+    Returns:
+      (b, h, lq, dh), same dtype as q.
+    """
+    orig_dtype = q.dtype
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    dh = q.shape[-1]
+    s = (1.0 / jnp.sqrt(dh)) if scale is None else scale
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * s
+    if logit_softcap and logit_softcap > 0.0:
+        logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+    if kv_bias is not None:
+        logits = logits + kv_bias[:, :, None, :]
+    if causal:
+        lq, lk = logits.shape[-2], logits.shape[-1]
+        # query i (global position lk - lq + i) sees key j iff j <= lk - lq + i
+        qpos = jnp.arange(lq)[:, None] + (lk - lq)
+        kpos = jnp.arange(lk)[None, :]
+        logits = jnp.where(kpos <= qpos, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v)
+    return out.astype(orig_dtype)

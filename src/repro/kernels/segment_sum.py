@@ -1,0 +1,91 @@
+"""Prototype aggregation (weighted segment-sum) as a one-hot MXU matmul.
+
+Cluster-centroid computation is a scatter-add, which is slow on TPU (serialized
+DMA). Instead each program builds the (Bn, Bs) one-hot membership tile for its
+segment range on the VPU and contracts it against the (Bn, d) data tile on the
+MXU: ``sums[s] += onehot.T @ (w * x)``. Mass (cluster size) falls out of the
+same contraction against a column of ones.
+
+Grid: (S/Bs, n/Bn), point axis innermost (accumulation pattern).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _segsum_kernel(ids_ref, w_ref, x_ref, sums_ref, mass_ref, *, bs, bn):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        mass_ref[...] = jnp.zeros_like(mass_ref)
+
+    ids = ids_ref[...]  # (bn,) global segment ids; out-of-range = dropped
+    w = w_ref[...].astype(jnp.float32)  # (bn,)
+    x = x_ref[...].astype(jnp.float32)  # (bn, d)
+
+    s0 = pl.program_id(0) * bs
+    local = ids - s0  # in [0, bs) iff this block owns the segment
+    seg_cols = jax.lax.broadcasted_iota(jnp.int32, (bn, bs), 1)
+    onehot = (seg_cols == local[:, None]).astype(jnp.float32) * w[:, None]  # (bn, bs)
+
+    sums_ref[...] += jax.lax.dot_general(
+        onehot, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (bs, d) — MXU
+    mass_ref[...] += jnp.sum(onehot, axis=0)  # (bs,)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_segments", "block_s", "block_n", "interpret")
+)
+def segment_sum(
+    x: jax.Array,
+    segment_ids: jax.Array,
+    num_segments: int,
+    weights: jax.Array | None = None,
+    *,
+    block_s: int = 512,
+    block_n: int = 1024,
+    interpret: bool = False,
+):
+    """Weighted segment sum; ids outside [0, num_segments) are dropped.
+
+    Returns (sums (num_segments, d) f32, masses (num_segments,) f32).
+    """
+    n, d = x.shape
+    w = jnp.ones((n,), jnp.float32) if weights is None else weights.astype(jnp.float32)
+
+    bs = min(block_s, max(num_segments, 8))
+    bn = min(block_n, max(n, 8))
+    s_pad = (-num_segments) % bs
+    n_pad = (-n) % bn
+    xp = jnp.pad(x, ((0, n_pad), (0, 0)))
+    wp = jnp.pad(w, (0, n_pad))  # zero weight -> no contribution
+    idp = jnp.pad(segment_ids.astype(jnp.int32), (0, n_pad), constant_values=-1)
+    S = num_segments + s_pad
+
+    grid = (S // bs, xp.shape[0] // bn)
+    sums, mass = pl.pallas_call(
+        functools.partial(_segsum_kernel, bs=bs, bn=bn),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn,), lambda s, j: (j,)),
+            pl.BlockSpec((bn,), lambda s, j: (j,)),
+            pl.BlockSpec((bn, d), lambda s, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bs, d), lambda s, j: (s, 0)),
+            pl.BlockSpec((bs,), lambda s, j: (s,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, d), jnp.float32),
+            jax.ShapeDtypeStruct((S,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(idp, wp, xp)
+    return sums[:num_segments], mass[:num_segments]

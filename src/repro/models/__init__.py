@@ -1,0 +1,3 @@
+"""Composable model zoo: dense / MoE / SSD / hybrid / enc-dec / VLM backbones."""
+from repro.models.registry import ModelBundle, build  # noqa: F401
+from repro.models.transformer import ShardingPlan  # noqa: F401

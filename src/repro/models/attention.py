@@ -1,0 +1,282 @@
+"""GQA attention: chunked-flash XLA path, Pallas path, KV cache, local/global.
+
+The XLA path implements the flash algorithm with `lax.scan` over kv chunks
+(online softmax), so even 32k-token prefill never materializes (S, S) logits
+— this is both the production non-TPU path and the path the dry-run lowers
+for faithful roofline accounting (DESIGN.md §7). On TPU, `impl='pallas'`
+switches the inner loop to the fused kernel.
+
+Decode attends one query against the cache with a position mask folded into
+``kv_bias`` — the same slot the IHTC prototype ``log(mass)`` correction uses
+(serve/kv_compression.py), so compressed and raw caches share one code path.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models.layers import COMPUTE_DTYPE, _dense_init, rope
+
+_MASKED = -1e30
+
+
+# ------------------------------------------------------------- params
+def init_attention(key, cfg: ModelConfig) -> dict:
+    hd, hq, hkv, d = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads, cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, hq * hd)),
+        "wk": _dense_init(ks[1], (d, hkv * hd)),
+        "wv": _dense_init(ks[2], (d, hkv * hd)),
+        "wo": _dense_init(ks[3], (hq * hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((hkv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((hkv * hd,), jnp.float32)
+    return p
+
+
+def attention_specs(cfg: ModelConfig, tp: str = "model", tp_size: int = 1) -> dict:
+    kv_dim = cfg.n_kv_heads * cfg.head_dim
+    kv_spec = P(None, tp) if kv_dim % max(tp_size, 1) == 0 else P(None, None)
+    kv_bias_spec = kv_spec[1] if isinstance(kv_spec[1], str) else None
+    p = {
+        "wq": P(None, tp),
+        "wk": kv_spec,
+        "wv": kv_spec,
+        "wo": P(tp, None),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = P(tp)
+        p["bk"] = P(kv_bias_spec)
+        p["bv"] = P(kv_bias_spec)
+    return p
+
+
+# ------------------------------------------------------------- core attend
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: int = 0,
+    kv_bias: Optional[jax.Array] = None,
+    softcap: float = 0.0,
+    scale: Optional[float] = None,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Flash-style GQA attention in pure XLA: scan over kv chunks, online
+    softmax, grouped-query einsums (kv heads are NEVER repeated/materialized
+    at full query-head width — that costs b·hq·lk·dh bytes on long context).
+
+    q: (b, hq, lq, dh); k/v: (b, hkv, lk, dh); kv_bias: (b, hkv, lk).
+    Peak intermediate is (b, hq, lq, chunk).
+    """
+    b, hq, lq, dh = q.shape
+    hkv, lk = k.shape[1], k.shape[2]
+    g = hq // hkv
+    s = (1.0 / (dh**0.5)) if scale is None else scale
+    qf = (q.astype(jnp.float32) * s).reshape(b, hkv, g, lq, dh)
+
+    ck = min(chunk, lk)
+    pad = (-lk) % ck
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        if kv_bias is None:
+            kv_bias = jnp.zeros((b, hkv, lk), jnp.float32)
+        kv_bias = jnp.pad(kv_bias, ((0, 0), (0, 0), (0, pad)), constant_values=_MASKED)
+    nc = (lk + pad) // ck
+    qpos = jnp.arange(lq) + (lk - lq)  # global query positions
+
+    # NOTE: the chunk loop is UNROLLED (nc is static and small), not a
+    # lax.scan: (a) HloCostAnalysis is blind to while-loop trip counts, so an
+    # unrolled loop keeps the dry-run roofline exact; (b) XLA pipelines the
+    # chunks better without a loop carrier. Fully-masked chunks (causal:
+    # kpos > max qpos; local window: kpos < min qpos - window) are SKIPPED —
+    # that is the block-sparsity win of flash attention.
+    m = jnp.full((b, hkv, g, lq), _MASKED, jnp.float32)
+    l = jnp.zeros((b, hkv, g, lq), jnp.float32)
+    acc = jnp.zeros((b, hkv, g, lq, dh), jnp.float32)
+    for j in range(nc):
+        k0 = j * ck
+        if causal and k0 > (lk - 1):
+            continue  # chunk entirely in the future of the last query
+        if window > 0 and (k0 + ck) <= (lk - lq) - window + 1:
+            continue  # chunk entirely outside every query's window
+        kj = jax.lax.slice_in_dim(k, k0, k0 + ck, axis=2).astype(jnp.float32)
+        vj = jax.lax.slice_in_dim(v, k0, k0 + ck, axis=2).astype(jnp.float32)
+        bj = (jax.lax.slice_in_dim(kv_bias, k0, k0 + ck, axis=2)
+              if kv_bias is not None else None)
+        logits = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kj)
+        if softcap > 0.0:
+            logits = softcap * jnp.tanh(logits / softcap)
+        if bj is not None:
+            logits = logits + bj[:, :, None, None, :]
+        kpos = k0 + jnp.arange(ck)
+        if causal:
+            logits = jnp.where(
+                kpos[None, None, None, None, :] <= qpos[None, None, None, :, None],
+                logits, _MASKED,
+            )
+        if window > 0:
+            logits = jnp.where(
+                kpos[None, None, None, None, :]
+                > qpos[None, None, None, :, None] - window,
+                logits, _MASKED,
+            )
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        pl_ = jnp.exp(logits - m_new[..., None])
+        l = l * alpha + jnp.sum(pl_, axis=-1)
+        # probabilities in bf16 for the PV matmul: the (bq, ck) prob tile is
+        # the largest attention buffer; halving it halves attention HBM
+        # traffic at <1e-3 output error (stats m/l stay fp32)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", pl_.astype(jnp.bfloat16),
+            vj.astype(jnp.bfloat16)).astype(jnp.float32)
+        m = m_new
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, hq, lq, dh).astype(q.dtype)
+
+
+def attend(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    kv_bias: Optional[jax.Array] = None,
+    softcap: float = 0.0,
+    scale: Optional[float] = None,
+    impl: str = "xla",
+    chunk: int = 1024,
+) -> jax.Array:
+    """GQA dispatcher: picks XLA-flash (grouped, no kv repeat) / Pallas."""
+    if impl == "pallas" and window == 0:
+        return ops.flash_attention(
+            q, k, v, causal=causal, scale=scale, kv_bias=kv_bias,
+            logit_softcap=softcap, impl="pallas",
+        )
+    if q.shape[2] == 1:  # decode: single query, direct einsum is optimal
+        return chunked_attention(
+            q, k, v, causal=causal, window=window, kv_bias=kv_bias,
+            softcap=softcap, scale=scale, chunk=k.shape[2],
+        )
+    return chunked_attention(
+        q, k, v, causal=causal, window=window, kv_bias=kv_bias,
+        softcap=softcap, scale=scale, chunk=chunk,
+    )
+
+
+# ------------------------------------------------------------- module apply
+def attention_apply(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    layer: int,
+    positions: jax.Array,
+    cache: Optional[dict] = None,
+    kv_bias: Optional[jax.Array] = None,
+    causal: bool = True,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+    act_spec: Optional[P] = None,
+    kv_spec: Optional[P] = None,
+    impl: str = "xla",
+) -> Tuple[jax.Array, Optional[dict]]:
+    """One attention block (self or cross). x: (b, s, d).
+
+    cache: {"k": (b, hkv, S, hd), "v": ..., "pos": ()} — decode writes the
+    new kv at `pos` and attends over the whole buffer with a position mask.
+    """
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+
+    q = x @ params["wq"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+    q = q.reshape(b, s, hq, hd)
+
+    if cross_kv is None:
+        k = x @ params["wk"].astype(dt)
+        v = x @ params["wv"].astype(dt)
+        if cfg.qkv_bias:
+            k = k + params["bk"].astype(dt)
+            v = v + params["bv"].astype(dt)
+        k = k.reshape(b, s, hkv, hd)
+        v = v.reshape(b, s, hkv, hd)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    else:
+        k, v = cross_kv  # (b, s_enc, hkv, hd) — already projected, no rope
+
+    q = q.transpose(0, 2, 1, 3)  # (b, hq, s, hd)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+
+    window = cfg.local_window if cfg.attn_type(layer) == "local" else 0
+    new_cache = None
+    if cache is not None:
+        pos = cache["pos"]
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, 0, pos, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, 0, pos, 0))
+        new_cache = {"k": ck, "v": cv, "pos": pos + s}
+        if "bias" in cache:  # IHTC-compressed cache: log-mass prototype bias
+            new_cache["bias"] = cache["bias"]
+            new_cache["mass"] = cache["mass"]
+        if s == 1:  # decode: attend over the whole buffer with a position mask
+            S = ck.shape[2]
+            kpos = jnp.arange(S)
+            ok = kpos <= pos
+            if window > 0:
+                ok = ok & (kpos > pos - window)
+            pos_mask = jnp.where(ok, 0.0, _MASKED)  # (S,)
+            pm = jnp.broadcast_to(pos_mask, (b, hkv, S)).astype(jnp.float32)
+            if "bias" in cache:
+                pm = pm + cache["bias"]
+            kv_bias = pm if kv_bias is None else kv_bias + pm
+            k, v = ck, cv
+            causal = False  # position mask subsumes causality (and the window)
+            window = 0
+        # prefill (s > 1): attend causally over the fresh k/v; cache is only
+        # written (assumes prefill starts at pos == 0, as the serve engine does)
+    scale = 1.0 / (hd**0.5)
+    if cfg.name.startswith("gemma2"):
+        scale = 1.0 / (256.0**0.5)  # query_pre_attn_scalar
+
+    if act_spec is not None:
+        q = jax.lax.with_sharding_constraint(q, act_spec)
+    if kv_spec is not None and cache is None and cross_kv is None:
+        k = jax.lax.with_sharding_constraint(k, kv_spec)
+        v = jax.lax.with_sharding_constraint(v, kv_spec)
+    out = attend(
+        q, k.astype(dt), v.astype(dt), causal=causal, window=window,
+        kv_bias=kv_bias, softcap=cfg.attn_logit_softcap, scale=scale, impl=impl,
+        chunk=cfg.attn_chunk,
+    )
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
+    out = out @ params["wo"].astype(dt)
+    return out, new_cache
+
+
+def init_cache(
+    cfg: ModelConfig, batch: int, max_len: int, layer: int, dtype=COMPUTE_DTYPE
+) -> dict:
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, hkv, max_len, hd), dtype),
+        "v": jnp.zeros((batch, hkv, max_len, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }

@@ -1,0 +1,233 @@
+"""Encoder-decoder assembly (seamless-m4t backbone), scanned layer stacks.
+
+Encoder consumes precomputed frame embeddings (the speech frontend is a stub
+per the assignment); decoder is a causal LM with cross-attention into the
+encoder output. Both stacks are uniform, so parameters are stacked on a
+leading axis and driven by ``lax.scan`` (see transformer.py for why).
+Cross-attention K/V are projected once per sequence and live in the cache.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import (
+    COMPUTE_DTYPE,
+    embed_apply,
+    embed_specs,
+    init_embed,
+    init_mlp,
+    init_norm,
+    mlp_apply,
+    mlp_specs,
+    rms_norm,
+    unembed_apply,
+)
+from repro.models.transformer import ShardingPlan, _prepend_none
+
+
+def init_enc_layer(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    return {
+        "ln1": init_norm(d), "attn": attn.init_attention(k1, cfg),
+        "ln2": init_norm(d), "mlp": init_mlp(k2, d, cfg.d_ff, cfg.mlp),
+    }
+
+
+def init_dec_layer(key, cfg: ModelConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "ln1": init_norm(d), "self_attn": attn.init_attention(k1, cfg),
+        "ln_x": init_norm(d), "cross_attn": attn.init_attention(k2, cfg),
+        "ln2": init_norm(d), "mlp": init_mlp(k3, d, cfg.d_ff, cfg.mlp),
+    }
+
+
+def init_encdec(key, cfg: ModelConfig) -> dict:
+    ke, kd, kx = jax.random.split(key, 3)
+    enc = jax.vmap(lambda k: init_enc_layer(k, cfg))(
+        jax.random.split(ke, cfg.n_enc_layers)
+    )
+    dec = jax.vmap(lambda k: init_dec_layer(k, cfg))(
+        jax.random.split(kd, cfg.n_layers)
+    )
+    return {
+        "embed": init_embed(kx, cfg),
+        "enc": enc, "dec": dec,
+        "ln_enc": init_norm(cfg.d_model), "ln_f": init_norm(cfg.d_model),
+    }
+
+
+def encdec_specs(cfg: ModelConfig, tp: str = "model", tp_size: int = 1) -> dict:
+    a = attn.attention_specs(cfg, tp, tp_size)
+    m = mlp_specs(cfg.mlp, tp)
+    stack = lambda tree: jax.tree_util.tree_map(
+        _prepend_none, tree, is_leaf=lambda x: isinstance(x, P)
+    )
+    enc = stack({"ln1": P(None), "attn": a, "ln2": P(None), "mlp": m})
+    dec = stack({"ln1": P(None), "self_attn": a, "ln_x": P(None),
+                 "cross_attn": a, "ln2": P(None), "mlp": m})
+    return {
+        "embed": embed_specs(cfg, tp), "enc": enc, "dec": dec,
+        "ln_enc": P(None), "ln_f": P(None),
+    }
+
+
+def encode(
+    params: dict, frames: jax.Array, cfg: ModelConfig,
+    *, plan: ShardingPlan = ShardingPlan(), impl: str = "xla", remat: str = "none",
+) -> jax.Array:
+    """frames: (b, s_enc, d) precomputed frontend embeddings → (b, s_enc, d)."""
+    x = frames.astype(COMPUTE_DTYPE)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def enc_block(x, lp):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        y, _ = attn.attention_apply(
+            lp["attn"], h, cfg, layer=0, positions=positions, causal=False,
+            act_spec=plan.heads, impl=impl,
+        )
+        x = x + y
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(lp["mlp"], h2, cfg.mlp)
+        if plan.resid is not None:
+            x = jax.lax.with_sharding_constraint(x, plan.resid)
+        return x, None
+
+    body = jax.checkpoint(enc_block) if remat != "none" else enc_block
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["enc"])
+    else:  # unrolled (cost-accounting probes)
+        for i in range(cfg.n_enc_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["enc"])
+            x, _ = body(x, lp)
+    return rms_norm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def _project_cross_kv(lp: dict, enc_out: jax.Array, cfg: ModelConfig):
+    b, s, _ = enc_out.shape
+    dt = enc_out.dtype
+    k = (enc_out @ lp["cross_attn"]["wk"].astype(dt)).reshape(
+        b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = (enc_out @ lp["cross_attn"]["wv"].astype(dt)).reshape(
+        b, s, cfg.n_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def decode(
+    params: dict,
+    tokens: jax.Array,
+    enc_out: jax.Array,
+    cfg: ModelConfig,
+    *,
+    caches: Optional[List[dict]] = None,
+    start_pos: Optional[jax.Array] = None,
+    plan: ShardingPlan = ShardingPlan(),
+    impl: str = "xla",
+    remat: str = "none",
+) -> Tuple[jax.Array, Optional[dict]]:
+    """Decoder forward. caches (stacked): {"self": attn-cache, "cross_k",
+    "cross_v"} with leading n_layers dim on every leaf."""
+    x = embed_apply(params["embed"], tokens, cfg).astype(COMPUTE_DTYPE)
+    b, s, _ = x.shape
+    if start_pos is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    else:
+        positions = jnp.broadcast_to(start_pos + jnp.arange(s), (b, s))
+
+    def dec_block(x, lp, cache):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        y, new_self = attn.attention_apply(
+            lp["self_attn"], h, cfg, layer=0, positions=positions,
+            cache=cache["self"] if cache is not None else None,
+            act_spec=plan.heads, impl=impl,
+        )
+        x = x + y
+        hx = rms_norm(x, lp["ln_x"], cfg.norm_eps)
+        if cache is not None and s == 1:
+            cross_kv = (cache["cross_k"], cache["cross_v"])  # decode: reuse
+        else:
+            cross_kv = _project_cross_kv(lp, enc_out, cfg)   # prefill: project
+        yx, _ = attn.attention_apply(
+            lp["cross_attn"], hx, cfg, layer=0, positions=positions,
+            causal=False, cross_kv=cross_kv, act_spec=plan.heads, impl=impl,
+        )
+        x = x + yx
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(lp["mlp"], h2, cfg.mlp)
+        if plan.resid is not None:
+            x = jax.lax.with_sharding_constraint(x, plan.resid)
+        new_cache = (
+            {"self": new_self, "cross_k": cross_kv[0], "cross_v": cross_kv[1]}
+            if cache is not None else None
+        )
+        return x, new_cache
+
+    if caches is None:
+        def body(x, lp):
+            x, _ = dec_block(x, lp, None)
+            return x, None
+        body = jax.checkpoint(body) if remat != "none" else body
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(body, x, params["dec"])
+        else:  # unrolled (cost-accounting probes)
+            for i in range(cfg.n_layers):
+                lp = jax.tree_util.tree_map(lambda a: a[i], params["dec"])
+                x, _ = body(x, lp)
+        new_caches = None
+    else:
+        def body(x, xs):
+            lp, cache = xs
+            return dec_block(x, lp, cache)
+        if cfg.scan_layers:
+            x, new_caches = jax.lax.scan(body, x, (params["dec"], caches))
+        else:
+            outs = []
+            for i in range(cfg.n_layers):
+                sl = jax.tree_util.tree_map(lambda a: a[i],
+                                            (params["dec"], caches))
+                x, nc = body(x, sl)
+                outs.append(nc)
+            new_caches = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *outs)
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = unembed_apply(params["embed"], x, cfg)
+    if plan.logits is not None:
+        logits = jax.lax.with_sharding_constraint(logits, plan.logits)
+    return logits, new_caches
+
+
+def init_encdec_caches(
+    cfg: ModelConfig, batch: int, max_len: int, enc_len: int, dtype=COMPUTE_DTYPE
+) -> dict:
+    one = {
+        "self": attn.init_cache(cfg, batch, max_len, 0, dtype),
+        "cross_k": jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "cross_v": jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }
+    return jax.tree_util.tree_map(
+        lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), one
+    )
+
+
+def encdec_cache_specs(cfg: ModelConfig, plan: ShardingPlan, tp_size: int = 1):
+    from repro.models.transformer import _layer_cache_spec
+
+    dp = plan.resid[0] if plan.resid is not None else None
+    one = {
+        "self": _layer_cache_spec(cfg, 0, plan, tp_size),
+        "cross_k": P(dp, None, None, None),
+        "cross_v": P(dp, None, None, None),
+    }
+    return jax.tree_util.tree_map(
+        _prepend_none, one, is_leaf=lambda x: isinstance(x, P)
+    )

@@ -1,0 +1,28 @@
+"""Modality frontend STUBS (per assignment: audio/vlm configs exercise the
+transformer backbone; ``input_specs()`` provides precomputed frame/patch
+embeddings as if a real speech encoder / CLIP tower had produced them)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import COMPUTE_DTYPE
+
+VISION_PREFIX_TOKENS = 256   # CLIP-style patch-embedding prefix length
+
+
+def frontend_embed_shape(cfg: ModelConfig, batch: int, seq_len: int):
+    """Shape of the stubbed frontend output for this arch/shape."""
+    if cfg.frontend == "audio":
+        return (batch, seq_len, cfg.d_model)          # encoder frames
+    if cfg.frontend == "vision":
+        return (batch, VISION_PREFIX_TOKENS, cfg.d_model)  # patch prefix
+    return None
+
+
+def fake_frontend_embeddings(key, cfg: ModelConfig, batch: int, seq_len: int):
+    shape = frontend_embed_shape(cfg, batch, seq_len)
+    if shape is None:
+        return None
+    return jax.random.normal(key, shape, jnp.float32).astype(COMPUTE_DTYPE) * 0.02

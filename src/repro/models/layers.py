@@ -1,0 +1,129 @@
+"""Shared neural-net layers (pure functional JAX; params are dict pytrees).
+
+Init functions are `jax.eval_shape`-safe (the dry-run materializes parameter
+ShapeDtypeStructs without ever allocating), and every init has a sibling
+`*_specs` builder producing the matching PartitionSpec pytree.
+
+Sharding conventions (Megatron-style TP over the 'model' axis, DP over
+('pod','data')): column-parallel up/QKV, row-parallel down/out, vocab-sharded
+embedding/unembedding.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+Dtype = jnp.dtype
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def _dense_init(key, shape, scale: Optional[float] = None):
+    fan_in = shape[0]
+    scale = (1.0 / fan_in) ** 0.5 if scale is None else scale
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------- norms
+def rms_norm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def init_norm(d: int) -> jax.Array:
+    return jnp.zeros((d,), jnp.float32)  # (1 + w) parameterization (gemma-style)
+
+
+# ---------------------------------------------------------------- rope
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., seq, n_heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., seq, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., seq, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- mlp
+def init_mlp(key, d: int, ff: int, kind: str) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"down": _dense_init(ks[2], (ff, d))}
+    if kind == "swiglu":
+        p["gate"] = _dense_init(ks[0], (d, ff))
+        p["up"] = _dense_init(ks[1], (d, ff))
+    else:
+        p["up"] = _dense_init(ks[1], (d, ff))
+    return p
+
+
+def mlp_specs(kind: str, tp: str = "model") -> dict:
+    p = {"down": P(tp, None), "up": P(None, tp)}
+    if kind == "swiglu":
+        p["gate"] = P(None, tp)
+    return p
+
+
+def mlp_apply(params: dict, x: jax.Array, kind: str) -> jax.Array:
+    # activations stay in the compute dtype (bf16): non-linearities are
+    # numerically benign and an fp32 upcast doubles the FFN's HBM traffic
+    dt = x.dtype
+    up = x @ params["up"].astype(dt)
+    if kind == "swiglu":
+        gate = x @ params["gate"].astype(dt)
+        h = jax.nn.silu(gate) * up
+    elif kind == "relu2":
+        h = jnp.square(jax.nn.relu(up))
+    else:  # gelu
+        h = jax.nn.gelu(up)
+    return h @ params["down"].astype(dt)
+
+
+# ---------------------------------------------------------------- embedding
+def init_embed(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    v = cfg.padded_vocab_size  # TP-shardable; pad logits masked at the head
+    p = {"table": _dense_init(k1, (v, cfg.d_model), scale=1.0)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = _dense_init(k2, (cfg.d_model, v))
+    return p
+
+
+def embed_specs(cfg: ModelConfig, tp: str = "model") -> dict:
+    p = {"table": P(tp, None)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = P(None, tp)
+    return p
+
+
+def embed_apply(params: dict, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = params["table"].astype(COMPUTE_DTYPE)[tokens]
+    if cfg.family in ("dense",) and cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model**0.5, COMPUTE_DTYPE)
+    return x
+
+
+def unembed_apply(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dt = x.dtype
+    if cfg.tie_embeddings:
+        logits = x @ params["table"].astype(dt).T
+    else:
+        logits = x @ params["unembed"].astype(dt)
+    logits = logits.astype(jnp.float32)
+    if cfg.final_logit_softcap:
+        c = cfg.final_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    if cfg.padded_vocab_size != cfg.vocab_size:  # mask the padding columns
+        col = jnp.arange(cfg.padded_vocab_size)
+        logits = jnp.where(col < cfg.vocab_size, logits, -1e30)
+    return logits

@@ -1,0 +1,218 @@
+"""Mamba-2 SSD (state-space duality) block — chunked train/prefill + O(1)
+recurrent decode.
+
+Chunked SSD (arXiv:2405.21060 §6): sequence split into chunks of Q tokens;
+within-chunk term is a masked quadratic form (attention-shaped, MXU-friendly),
+across-chunk term is a tiny recurrent scan over chunk states (b, h, p, n).
+Per-token state is constant-size — this is why ssm/hybrid archs run the
+`long_500k` shape that full attention cannot.
+
+Jamba note (DESIGN.md §9): Jamba uses Mamba-1; we substitute the SSD block
+with Jamba's dims (state 16) — per the SSD paper, Mamba-1 ≈ SSD with scalar
+per-head decay, and SSD is the TPU-native formulation of the same insight.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dense_init, rms_norm
+
+_CHUNK = 128
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = d_in // cfg.ssm_head_dim
+    return d_in, n_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_mamba(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_in, h, _, n = _dims(cfg)
+    conv_dim = d_in + 2 * n
+    ks = jax.random.split(key, 8)
+    return {
+        "wz": _dense_init(ks[0], (d, d_in)),
+        "wx": _dense_init(ks[1], (d, d_in)),
+        "wB": _dense_init(ks[2], (d, n)),
+        "wC": _dense_init(ks[3], (d, n)),
+        "wdt": _dense_init(ks[4], (d, h)),
+        "conv_w": _dense_init(ks[5], (cfg.ssm_conv, conv_dim), scale=0.5),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.zeros((h,), jnp.float32),       # A = -exp(A_log) = -1
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),  # softplus ≈ 0.12
+        "norm": jnp.zeros((d_in,), jnp.float32),
+        "out": _dense_init(ks[6], (d_in, d)),
+    }
+
+
+def mamba_specs(cfg: ModelConfig, tp: str = "model", tp_size: int = 1) -> dict:
+    d_in, h, _, _ = _dims(cfg)
+    ts = max(tp_size, 1)
+    col = P(None, tp) if d_in % ts == 0 else P(None, None)
+    head = P(tp) if h % ts == 0 else P(None)
+    return {
+        "wz": col, "wx": col,
+        "wB": P(None, None), "wC": P(None, None),
+        "wdt": P(None, tp) if h % ts == 0 else P(None, None),
+        "conv_w": P(None, None), "conv_b": P(None),
+        "A_log": head, "D": head, "dt_bias": head,
+        "norm": P(None),
+        "out": P(tp, None) if d_in % ts == 0 else P(None, None),
+    }
+
+
+def _segsum_exp(a: jax.Array) -> jax.Array:
+    """exp of pairwise within-chunk decay sums. a: (..., q, h) per-step log
+    decay → (..., h, q, q) lower-triangular L[i, j] = exp(Σ_{j<k≤i} a_k)."""
+    q = a.shape[-2]
+    cs = jnp.cumsum(a, axis=-2)  # (..., q, h)
+    diff = cs[..., :, None, :] - cs[..., None, :, :]  # (..., q, q, h)
+    iq = jnp.arange(q)
+    mask = iq[:, None] >= iq[None, :]
+    out = jnp.where(mask[..., None], jnp.exp(diff), 0.0)
+    return jnp.moveaxis(out, -1, -3)  # (..., h, q, q)
+
+
+def ssd_chunked(
+    x_dt: jax.Array,   # (b, l, h, p)  inputs pre-multiplied by dt
+    a_log: jax.Array,  # (b, l, h)     per-step log decay (dt * A, negative)
+    B: jax.Array,      # (b, l, n)
+    C: jax.Array,      # (b, l, n)
+    init_state: Optional[jax.Array] = None,  # (b, h, p, n)
+    chunk: int = _CHUNK,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (b, l, h, p), final_state (b, h, p, n)). fp32 internally."""
+    b, l, h, p = x_dt.shape
+    n = B.shape[-1]
+    q = min(chunk, l)
+    pad = (-l) % q
+    if pad:
+        x_dt = jnp.pad(x_dt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    nc = (l + pad) // q
+    xc = x_dt.reshape(b, nc, q, h, p).astype(jnp.float32)
+    ac = a_log.reshape(b, nc, q, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, q, n).astype(jnp.float32)
+    Cc = C.reshape(b, nc, q, n).astype(jnp.float32)
+
+    # 1. intra-chunk (quadratic, MXU-shaped)
+    L = _segsum_exp(ac)  # (b, nc, h, q, q)
+    G = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)  # (b, nc, q, q)
+    y_diag = jnp.einsum("bcqk,bchqk,bckhp->bcqhp", G, L, xc)
+
+    # 2. per-chunk output states
+    a_cum = jnp.cumsum(ac, axis=2)  # (b, nc, q, h)
+    decay_out = jnp.exp(a_cum[:, :, -1:, :] - a_cum)  # (b, nc, q, h)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", Bc, decay_out, xc)
+
+    # 3. inter-chunk recurrence (scan over chunk index)
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])  # (b, nc, h)
+    s0 = (
+        jnp.zeros((b, h, p, n), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def step(s, inp):
+        dec, st = inp  # (b, h), (b, h, p, n)
+        s_next = s * dec[..., None, None] + st
+        return s_next, s  # emit state *before* this chunk
+
+    final, prev = jax.lax.scan(
+        step, s0, (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4))
+    )
+    prev = prev.transpose(1, 0, 2, 3, 4)  # (b, nc, h, p, n)
+
+    # 4. contribution of carried-in state
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cc, prev, jnp.exp(a_cum))
+
+    y = (y_diag + y_off).reshape(b, nc * q, h, p)[:, :l]
+    return y, final
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 cache: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d. x: (batch, l, c); w: (k, c). Returns
+    (out (batch, l, c), new_cache (batch, k-1, c))."""
+    k = w.shape[0]
+    if cache is None:
+        cache = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    xin = jnp.concatenate([cache, x], axis=1)  # (batch, l+k-1, c)
+    out = sum(
+        xin[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    ) + b[None, None, :]
+    new_cache = xin[:, -(k - 1):, :]
+    return out, new_cache
+
+
+def mamba_apply(
+    params: dict,
+    u: jax.Array,  # (b, s, d)
+    cfg: ModelConfig,
+    *,
+    cache: Optional[dict] = None,
+    act_spec: Optional[P] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """Full mamba2 block. cache = {"ssm": (b,h,p,n) f32, "conv": (b,k-1,cdim)}."""
+    b, s, d = u.shape
+    dt_ = u.dtype
+    d_in, h, p, n = _dims(cfg)
+
+    z = u @ params["wz"].astype(dt_)
+    x = u @ params["wx"].astype(dt_)
+    Br = u @ params["wB"].astype(dt_)
+    Cr = u @ params["wC"].astype(dt_)
+    dt_raw = u @ params["wdt"].astype(dt_)
+
+    xbc = jnp.concatenate([x, Br, Cr], axis=-1)
+    conv_cache = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(
+        xbc, params["conv_w"].astype(dt_), params["conv_b"].astype(dt_), conv_cache
+    )
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(dt_)
+    x, Br, Cr = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (b,s,h)
+    A = -jnp.exp(params["A_log"])  # (h,)
+    xh = x.reshape(b, s, h, p)
+    if act_spec is not None:
+        xh = jax.lax.with_sharding_constraint(xh, act_spec)
+    x_dt = xh.astype(jnp.float32) * dt[..., None]
+    a_log = dt * A  # (b, s, h)
+
+    new_cache = None
+    if cache is not None and s == 1:  # recurrent decode step
+        st = cache["ssm"].astype(jnp.float32)  # (b, h, p, n)
+        dec = jnp.exp(a_log[:, 0, :])  # (b, h)
+        outer = jnp.einsum("bn,bhp->bhpn", Br[:, 0].astype(jnp.float32), x_dt[:, 0])
+        st = st * dec[..., None, None] + outer
+        y = jnp.einsum("bn,bhpn->bhp", Cr[:, 0].astype(jnp.float32), st)[:, None]
+        new_cache = {"ssm": st, "conv": new_conv}
+    else:
+        init = cache["ssm"] if cache is not None else None
+        y, final = ssd_chunked(x_dt, a_log, Br, Cr, init_state=init)
+        if cache is not None:
+            new_cache = {"ssm": final, "conv": new_conv}
+
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, d_in).astype(dt_)
+    gated = y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_)
+    gated = rms_norm(gated, params["norm"], cfg.norm_eps)
+    return gated @ params["out"].astype(dt_), new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    d_in, h, p, n = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, h, p, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, d_in + 2 * n), dtype),
+    }

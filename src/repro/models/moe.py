@@ -1,0 +1,142 @@
+"""Mixture-of-Experts layer: top-k routing, capacity dispatch, EP sharding.
+
+Dispatch is the sort-based capacity scheme (MaxText-style): token slots are
+ranked within their expert queue via one argsort, scattered into a static
+(E, C, d) buffer (overflow drops — capacity_factor controls slack), the
+expert GEMM runs as one grouped einsum ``(E, C, d) × (E, d, f)`` that shards
+cleanly with experts over the 'model' axis (EP), and results gather back to
+token order weighted by router probabilities. Compiled FLOPs are
+``capacity_factor × active`` — not ``n_experts ×`` — which keeps the
+roofline's MODEL_FLOPS/HLO_FLOPs ratio honest.
+
+Supports deepseek-style fine-grained MoE: shared experts (always-on, fused
+as one dense MLP of width n_shared·d_ff) + many small routed experts.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dense_init, init_mlp, mlp_apply, mlp_specs
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense_init(ks[0], (d, e)),
+        "gate": _dense_init(ks[1], (e, d, f)),
+        "up": _dense_init(ks[2], (e, d, f)),
+        "down": _dense_init(ks[3], (e, f, d)),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, cfg.n_shared_experts * f, "swiglu")
+    return p
+
+
+def moe_specs(cfg: ModelConfig, tp: str = "model", tp_size: int = 1) -> dict:
+    ep = P(tp, None, None) if cfg.n_experts % max(tp_size, 1) == 0 else P(None, None, None)
+    p = {"router": P(None, None), "gate": ep, "up": ep, "down": ep}
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_specs("swiglu", tp)
+    return p
+
+
+def _dispatch_indices(expert_ids: jax.Array, n_experts: int, capacity: int):
+    """Slot ranks within each expert queue (stable, one sort).
+
+    expert_ids: (T*k,). Returns flat buffer indices (T*k,), with overflow and
+    invalid slots pointing at E*C (out-of-range ⇒ dropped by scatter/gather).
+    """
+    tk = expert_ids.shape[0]
+    order = jnp.argsort(expert_ids, stable=True)            # slots grouped by expert
+    sorted_e = expert_ids[order]
+    # rank within group = position − first position of this expert id
+    first = jnp.searchsorted(sorted_e, jnp.arange(n_experts), side="left")
+    rank_sorted = jnp.arange(tk) - first[jnp.clip(sorted_e, 0, n_experts - 1)]
+    rank = jnp.zeros((tk,), jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+    ok = (expert_ids >= 0) & (expert_ids < n_experts) & (rank < capacity)
+    flat = jnp.where(ok, expert_ids * capacity + rank, n_experts * capacity)
+    return flat, ok
+
+
+def moe_apply(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    capacity_factor: Optional[float] = None,
+    ep_spec: Optional[P] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output (b, s, d), aux load-balancing loss ())."""
+    if capacity_factor is None:
+        capacity_factor = cfg.moe_capacity_factor
+    b, s, d = x.shape
+    dt = x.dtype
+    e, k = cfg.n_experts, cfg.n_experts_per_tok
+    t = b * s
+    xt = x.reshape(t, d)
+
+    # --- route (router in fp32 for stability) ---
+    logits = xt.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)                  # (T, E)
+    topv, topi = jax.lax.top_k(probs, k)                     # (T, k)
+    topv = topv / jnp.maximum(jnp.sum(topv, axis=-1, keepdims=True), 1e-9)
+
+    # aux loss (Switch): E * Σ_e fraction_tokens_e · mean_prob_e
+    counts = jnp.zeros((e,), jnp.float32).at[topi.reshape(-1)].add(1.0)
+    frac = counts / (t * k)
+    aux = e * jnp.sum(frac * jnp.mean(probs, axis=0))
+
+    # --- dispatch to (G, E, C, d) ---
+    # Grouped (shard-local) capacity: tokens are ranked within G independent
+    # groups, so the slot computation and the scatter stay LOCAL to the data
+    # shard that owns the group — without groups, the global argsort/scatter
+    # forces XLA to all-gather the whole token buffer per MoE layer
+    # (measured ~2.8 TB/chip/step on deepseek train_4k; EXPERIMENTS.md §Perf).
+    ng = cfg.moe_groups if cfg.moe_groups > 0 else 1
+    if t % ng != 0:
+        ng = 1
+    tg = t // ng
+    if ep_spec is not None and len(tuple(ep_spec)) == 3:  # legacy 3-D spec
+        ep_spec = P(*((None,) + tuple(ep_spec)))
+    # floor prevents pathological drops at tiny token counts (decode steps)
+    capacity = max(int(k * tg * capacity_factor / e), min(tg * k, 8))
+    grp_e = topi.reshape(ng, tg * k)                          # (G, Tg*k)
+    flat_idx, ok = jax.vmap(
+        lambda ee: _dispatch_indices(ee, e, capacity))(grp_e)  # (G, Tg*k)
+    tok_of_slot = jnp.repeat(jnp.arange(tg), k)               # (Tg*k,)
+    xg = xt.reshape(ng, tg, d)
+    buf = jax.vmap(
+        lambda idx, xs: jnp.zeros((e * capacity + 1, d), dt)
+        .at[idx].set(xs[tok_of_slot])
+    )(flat_idx, xg)                                           # (G, E*C+1, d)
+    buf = buf[:, : e * capacity].reshape(ng, e, capacity, d)
+    if ep_spec is not None:
+        buf = jax.lax.with_sharding_constraint(buf, ep_spec)
+
+    # --- expert GEMMs (grouped einsum, EP over 'model', G over 'data') ---
+    g = jnp.einsum("gecd,edf->gecf", buf, params["gate"].astype(dt))
+    u = jnp.einsum("gecd,edf->gecf", buf, params["up"].astype(dt))
+    h = jax.nn.silu(g) * u  # bf16 activation: halves the (G,E,C,f) traffic
+    out_buf = jnp.einsum("gecf,efd->gecd", h, params["down"].astype(dt))
+    if ep_spec is not None:
+        out_buf = jax.lax.with_sharding_constraint(out_buf, ep_spec)
+
+    # --- combine back to token order ---
+    out_flat = out_buf.reshape(ng, e * capacity, d)
+    slot_out = jax.vmap(
+        lambda ob, idx, okk: jnp.where(
+            okk[:, None], ob[jnp.minimum(idx, e * capacity - 1)], 0.0)
+    )(out_flat, flat_idx, ok)                                 # (G, Tg*k, d)
+    weighted = (slot_out.reshape(t * k, d).astype(jnp.float32)
+                * topv.reshape(-1)[:, None])
+    out = jnp.sum(weighted.reshape(t, k, d), axis=1).astype(dt)
+
+    if cfg.n_shared_experts:
+        out = out + mlp_apply(params["shared"], xt, "swiglu")
+    return out.reshape(b, s, d), aux.astype(jnp.float32)

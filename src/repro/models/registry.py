@@ -1,0 +1,142 @@
+"""Model registry: binds every arch family to a uniform bundle of callables
+used by the trainer, server, dry-run and tests.
+
+Batch conventions (all inputs produced by data/pipeline.py or input_specs):
+  decoder-only:  {"tokens": (b,s) i32, "labels": (b,s) i32[, "weights": (b,)]}
+  vlm:           + "patch_embeds": (b, 256, d)
+  audio enc-dec: {"frames": (b,s,d), "tokens": (b,s), "labels": (b,s)}
+  decode step:   {"tokens": (b,1)}
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, transformer
+from repro.models.frontends import VISION_PREFIX_TOKENS
+from repro.models.transformer import ShardingPlan
+
+
+@dataclass(frozen=True)
+class ModelBundle:
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    forward: Callable[..., Tuple[jax.Array, jax.Array]]         # (logits, aux)
+    prefill: Callable[..., Tuple[jax.Array, Any]]               # (logits, caches)
+    decode_step: Callable[..., Tuple[jax.Array, Any]]           # (logits, caches)
+    init_caches: Callable[..., Any]
+    param_specs: Callable[..., Any]
+    cache_specs: Callable[..., Any]
+
+
+def _lm_bundle(cfg: ModelConfig) -> ModelBundle:
+    is_vlm = cfg.frontend == "vision"
+
+    def init(key):
+        return transformer.init_lm(key, cfg)
+
+    def forward(params, batch, *, plan=ShardingPlan(), impl="xla", remat="none"):
+        prefix = batch.get("patch_embeds") if is_vlm else None
+        logits, _, aux = transformer.lm_apply(
+            params, batch["tokens"], cfg, prefix_embeds=prefix,
+            plan=plan, impl=impl, remat=remat,
+        )
+        if prefix is not None:
+            logits = logits[:, prefix.shape[1]:]
+        return logits, aux
+
+    def prefill(params, caches, batch, *, plan=ShardingPlan(), impl="xla"):
+        prefix = batch.get("patch_embeds") if is_vlm else None
+        logits, caches, _ = transformer.lm_apply(
+            params, batch["tokens"], cfg, prefix_embeds=prefix, caches=caches,
+            plan=plan, impl=impl,
+        )
+        return logits[:, -1:], caches
+
+    def decode_step(params, caches, batch, *, plan=ShardingPlan(), impl="xla"):
+        start = _cache_pos(cfg, caches)
+        logits, caches, _ = transformer.lm_apply(
+            params, batch["tokens"], cfg, caches=caches, start_pos=start,
+            plan=plan, impl=impl,
+        )
+        return logits, caches
+
+    def init_caches(batch, max_len, dtype=None):
+        kw = {} if dtype is None else {"dtype": dtype}
+        if is_vlm:  # room for the patch-embedding prefix
+            max_len = max_len + VISION_PREFIX_TOKENS
+        return transformer.init_lm_caches(cfg, batch, max_len, **kw)
+
+    def param_specs(tp="model", tp_size=1):
+        return transformer.lm_specs(cfg, tp, tp_size)
+
+    def cache_specs(plan=ShardingPlan(), tp_size=1):
+        return transformer.cache_specs(cfg, plan, tp_size)
+
+    return ModelBundle(cfg, init, forward, prefill, decode_step, init_caches,
+                       param_specs, cache_specs)
+
+
+def _cache_pos(cfg: ModelConfig, caches) -> jax.Array:
+    if "self" in caches:  # stacked enc-dec caches
+        return caches["self"]["pos"][0]
+    return transformer.cache_start_pos(caches)
+
+
+def _encdec_bundle(cfg: ModelConfig) -> ModelBundle:
+    def init(key):
+        return encdec.init_encdec(key, cfg)
+
+    def forward(params, batch, *, plan=ShardingPlan(), impl="xla", remat="none"):
+        enc_out = encdec.encode(
+            params, batch["frames"], cfg, plan=plan, impl=impl, remat=remat
+        )
+        logits, _ = encdec.decode(
+            params, batch["tokens"], enc_out, cfg, plan=plan, impl=impl, remat=remat
+        )
+        return logits, jnp.zeros((), jnp.float32)
+
+    def prefill(params, caches, batch, *, plan=ShardingPlan(), impl="xla"):
+        enc_out = encdec.encode(params, batch["frames"], cfg, plan=plan, impl=impl)
+        logits, caches = encdec.decode(
+            params, batch["tokens"], enc_out, cfg, caches=caches,
+            plan=plan, impl=impl,
+        )
+        return logits[:, -1:], caches
+
+    def decode_step(params, caches, batch, *, plan=ShardingPlan(), impl="xla"):
+        start = _cache_pos(cfg, caches)
+        enc_out = jnp.zeros(  # unused: cross kv comes from the cache
+            (batch["tokens"].shape[0], caches["cross_k"].shape[2], cfg.d_model),
+            jnp.bfloat16,
+        )
+        logits, caches = encdec.decode(
+            params, batch["tokens"], enc_out, cfg, caches=caches, start_pos=start,
+            plan=plan, impl=impl,
+        )
+        return logits, caches
+
+    def init_caches(batch, max_len, enc_len=None, dtype=None):
+        kw = {} if dtype is None else {"dtype": dtype}
+        return encdec.init_encdec_caches(
+            cfg, batch, max_len, enc_len or max_len, **kw
+        )
+
+    def param_specs(tp="model", tp_size=1):
+        return encdec.encdec_specs(cfg, tp, tp_size)
+
+    def cache_specs(plan=ShardingPlan(), tp_size=1):
+        return encdec.encdec_cache_specs(cfg, plan, tp_size)
+
+    return ModelBundle(cfg, init, forward, prefill, decode_step, init_caches,
+                       param_specs, cache_specs)
+
+
+def build(cfg: ModelConfig) -> ModelBundle:
+    if cfg.family == "encdec-audio":
+        return _encdec_bundle(cfg)
+    return _lm_bundle(cfg)

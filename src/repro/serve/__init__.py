@@ -1,0 +1,2 @@
+"""Serving: batched engine + IHTC KV-cache prototype compression."""
+from repro.serve.engine import ServeConfig, ServeEngine  # noqa: F401

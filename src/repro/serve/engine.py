@@ -1,0 +1,116 @@
+"""Batched serving engine: prefill → decode with greedy/temperature sampling,
+EOS tracking, and optional IHTC KV-cache compression at a fill threshold.
+
+The engine is deliberately simple-but-real: static batch (continuous batching
+slots), jitted prefill/decode, per-sequence stop state. With
+``compress_every``, caches are re-compressed whenever the uncompressed tail
+fills — steady-state memory is O(S / t^m + tail) per sequence.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import ModelBundle
+from repro.models.transformer import ShardingPlan
+from repro.serve.kv_compression import compress_model_caches
+
+
+@dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0        # 0 ⇒ greedy
+    eos_id: int = -1                # -1 ⇒ never stop early
+    # IHTC cache compression
+    compress: bool = False
+    compress_t: int = 2
+    compress_m: int = 1
+    compress_tail: int = 128
+    impl: str = "xla"
+
+
+class ServeEngine:
+    def __init__(self, bundle: ModelBundle, params, scfg: ServeConfig = ServeConfig(),
+                 plan: ShardingPlan = ShardingPlan()):
+        self.bundle = bundle
+        self.params = params
+        self.scfg = scfg
+        self.plan = plan
+        self._prefill = jax.jit(
+            lambda p, c, b: bundle.prefill(p, c, b, plan=plan, impl=scfg.impl)
+        )
+        self._decode = jax.jit(
+            lambda p, c, b: bundle.decode_step(p, c, b, plan=plan, impl=scfg.impl)
+        )
+
+    def _sample(self, logits: jax.Array, key) -> jax.Array:
+        if self.scfg.temperature <= 0.0:
+            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits[:, -1] / self.scfg.temperature
+        ).astype(jnp.int32)
+
+    def generate(
+        self,
+        batch: Dict[str, jax.Array],
+        *,
+        max_len: Optional[int] = None,
+        key=None,
+        **cache_kw,
+    ) -> Dict[str, jax.Array]:
+        """batch: prompt inputs per the arch family. Returns
+        {"tokens": (b, max_new), "n_steps", "compressions"}."""
+        scfg = self.scfg
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        prompt = batch["tokens"]
+        b, s = prompt.shape
+        total = max_len or (s + scfg.max_new_tokens)
+
+        caches = self.bundle.init_caches(b, total, **cache_kw)
+        logits, caches = self._prefill(self.params, caches, batch)
+
+        if scfg.compress:
+            caches = compress_model_caches(
+                caches, scfg.compress_t, scfg.compress_m,
+                tail=scfg.compress_tail, impl="ref" if scfg.impl == "xla" else scfg.impl,
+            )
+
+        out: List[jax.Array] = []
+        done = jnp.zeros((b,), bool)
+        n_compress = 0
+        tok = self._sample(logits, key)
+        for i in range(scfg.max_new_tokens):
+            out.append(tok)
+            if scfg.eos_id >= 0:
+                done = done | (tok == scfg.eos_id)
+                if bool(jnp.all(done)):
+                    break
+            key = jax.random.fold_in(key, i)
+            logits, caches = self._decode(
+                self.params, caches, {"tokens": tok[:, None]}
+            )
+            tok = self._sample(logits, key)
+            if scfg.compress:
+                from repro.serve.kv_compression import find_attention_caches
+
+                c0 = next(find_attention_caches(caches))
+                pos = c0["pos"]
+                stacked = c0["k"].ndim == 5  # (rep, b, h, S, hd)
+                size = c0["k"].shape[3 if stacked else 2]
+                pos_val = int(pos[0]) if stacked else int(pos)
+                if pos_val >= size:  # tail full → recompress
+                    caches = compress_model_caches(
+                        caches, scfg.compress_t, scfg.compress_m,
+                        tail=scfg.compress_tail,
+                        impl="ref" if scfg.impl == "xla" else scfg.impl,
+                    )
+                    n_compress += 1
+        return {
+            "tokens": jnp.stack(out, axis=1),
+            "n_steps": len(out),
+            "compressions": n_compress,
+        }

@@ -1,0 +1,194 @@
+"""IHTC KV-cache prototype compression — the paper's instance selection
+applied to long-context attention (beyond-paper; DESIGN.md §3.2).
+
+A KV cache of S entries per (batch, kv-head) is a point set. Threshold
+clustering at t* collapses it to ≤ S/t* prototypes: K̄ = cluster-mean key,
+V̄ = cluster-mean value, mass = cluster size. Attention over prototypes with
+an additive ``log(mass)`` logit bias is *exactly* softmax attention over the
+original keys when cluster members are identical, and the error is otherwise
+controlled by the cluster radius — the very bottleneck objective TC
+4-approximates. m iterations give (t*)^m memory & FLOPs reduction per token.
+
+The compressed cache is a *regular* cache dict plus a "bias" entry, so the
+whole serving stack (attention_apply → lm_apply → engine) runs unmodified.
+A fresh-token tail stays uncompressed; recompress when the tail fills.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.itis import itis_step
+from repro.core.prototypes import reduce_to_prototypes
+
+_MASKED = -1e30
+
+
+@functools.partial(jax.jit, static_argnames=("t", "m", "impl"))
+def compress_kv_head(
+    k: jax.Array,      # (S, hd)
+    v: jax.Array,      # (S, hd)
+    mass: jax.Array,   # (S,) f32 — 1 for raw entries, >1 if re-compressing
+    valid: jax.Array,  # (S,) bool
+    t: int,
+    m: int = 1,
+    *,
+    key: Optional[jax.Array] = None,
+    impl: str = "auto",
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Compress one head's KV set by (t)^m. Returns (k̄ (P,hd), v̄, mass, valid)
+    with P = S // t^m. V prototypes use the same clustering as K (attention
+    output = Σ p_i v_i needs E[v | cluster], mass-weighted)."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    kv = jnp.concatenate([k.astype(jnp.float32), v.astype(jnp.float32)], axis=-1)
+    x, w, val = k.astype(jnp.float32), mass, valid
+    kvx, hd = kv, k.shape[-1]
+    for level in range(m):
+        sub = jax.random.fold_in(key, level)
+        out = itis_step(x, w, val, t, key=sub, weighted=True, impl=impl)
+        # apply the same assignment to the stacked [k|v] payload
+        ps = reduce_to_prototypes(
+            kvx, out.assignment, out.protos.shape[0], weights=w, weighted=True,
+            impl=impl,
+        )
+        x, w, val, kvx = out.protos, out.mass, out.valid, ps.x
+    kbar, vbar = kvx[:, :hd], kvx[:, hd:]
+    return kbar, vbar, w, val
+
+
+def compress_cache(
+    cache: Dict[str, jax.Array],
+    t: int = 2,
+    m: int = 1,
+    *,
+    tail: int = 128,
+    key: Optional[jax.Array] = None,
+    impl: str = "auto",
+) -> Dict[str, jax.Array]:
+    """Compress a layer's attention cache {"k","v","pos"[, "bias","mass"]}.
+
+    Output cache has static length P + tail: prototypes in the first P slots
+    (with log-mass bias), `tail` empty slots for new tokens, pos = P.
+    vmapped over (batch × kv-heads).
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    k, v = cache["k"], cache["v"]           # (b, h, S, hd)
+    b, h, S, hd = k.shape
+    pos = cache["pos"]
+    prev_mass = cache.get("mass")
+    mass = (
+        prev_mass
+        if prev_mass is not None
+        else jnp.ones((b, h, S), jnp.float32)
+    )
+    valid = jnp.broadcast_to(jnp.arange(S)[None, None, :] < pos, (b, h, S))
+
+    flat = lambda x: x.reshape((b * h,) + x.shape[2:])
+    fn = jax.vmap(
+        lambda kk, vv, mm, vl: compress_kv_head(
+            kk, vv, mm, vl, t, m, key=key, impl=impl
+        )
+    )
+    kbar, vbar, pmass, pvalid = fn(flat(k), flat(v), flat(mass), flat(valid))
+    P = kbar.shape[1]
+
+    unflat = lambda x: x.reshape((b, h) + x.shape[1:])
+    kbar, vbar = unflat(kbar).astype(k.dtype), unflat(vbar).astype(v.dtype)
+    pmass, pvalid = unflat(pmass), unflat(pvalid)
+
+    total = P + tail
+    nk = jnp.zeros((b, h, total, hd), k.dtype).at[:, :, :P].set(kbar)
+    nv = jnp.zeros((b, h, total, hd), v.dtype).at[:, :, :P].set(vbar)
+    bias = jnp.where(
+        pvalid, jnp.log(jnp.maximum(pmass, 1e-9)), _MASKED
+    )  # (b, h, P): mass-correct softmax; padding masked out
+    nbias = jnp.zeros((b, h, total), jnp.float32).at[:, :, :P].set(bias)
+    nmass = jnp.ones((b, h, total), jnp.float32).at[:, :, :P].set(
+        jnp.where(pvalid, pmass, 1.0)
+    )
+    return {
+        "k": nk, "v": nv,
+        "pos": jnp.asarray(P, jnp.int32),
+        "bias": nbias.astype(jnp.float32),
+        "mass": nmass,
+    }
+
+
+def _compress_stacked(c: Dict[str, jax.Array], t, m, tail, key, impl):
+    """Compress an attention cache whose leaves carry a leading (rep,) layer
+    axis (the scanned-stack layout): fold rep into batch, compress, unfold."""
+    rep, b = c["k"].shape[0], c["k"].shape[1]
+    flat = {
+        "k": c["k"].reshape((rep * b,) + c["k"].shape[2:]),
+        "v": c["v"].reshape((rep * b,) + c["v"].shape[2:]),
+        "pos": c["pos"][0],
+    }
+    if "bias" in c:
+        flat["bias"] = c["bias"].reshape((rep * b,) + c["bias"].shape[2:])
+        flat["mass"] = c["mass"].reshape((rep * b,) + c["mass"].shape[2:])
+    out = compress_cache(flat, t, m, tail=tail, key=key, impl=impl)
+    unfold = lambda x: x.reshape((rep, b) + x.shape[1:])
+    return {
+        "k": unfold(out["k"]), "v": unfold(out["v"]),
+        "pos": jnp.broadcast_to(out["pos"], (rep,)),
+        "bias": unfold(out["bias"]), "mass": unfold(out["mass"]),
+    }
+
+
+def compress_model_caches(caches, t: int = 2, m: int = 1, *, tail: int = 128,
+                          key: Optional[jax.Array] = None, impl: str = "auto"):
+    """Compress every attention layer's cache (mamba/None caches untouched).
+
+    Handles both the stacked LM layout ({"prefix": [...], "stack": [...]})
+    and plain per-layer lists (enc-dec)."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+
+    def is_attn(c):
+        return isinstance(c, dict) and "k" in c and "pos" in c
+
+    if isinstance(caches, dict) and "prefix" in caches:
+        new_prefix = [
+            compress_cache(c, t, m, tail=tail, key=jax.random.fold_in(key, i),
+                           impl=impl) if is_attn(c) else c
+            for i, c in enumerate(caches["prefix"])
+        ]
+        stack = caches["stack"]
+        new_stack = None
+        if stack is not None:
+            new_stack = [
+                _compress_stacked(c, t, m, tail,
+                                  jax.random.fold_in(key, 100 + j), impl)
+                if is_attn(c) else c
+                for j, c in enumerate(stack)
+            ]
+        return {"prefix": new_prefix, "stack": new_stack}
+    out = []
+    for i, c in enumerate(caches):
+        if is_attn(c):
+            out.append(compress_cache(c, t, m, tail=tail,
+                                      key=jax.random.fold_in(key, i), impl=impl))
+        else:
+            out.append(c)
+    return out
+
+
+def find_attention_caches(caches):
+    """Yield attention-cache dicts from either cache layout."""
+    if isinstance(caches, dict) and "prefix" in caches:
+        for c in caches["prefix"]:
+            if isinstance(c, dict) and "k" in c:
+                yield c
+        if caches["stack"] is not None:
+            for c in caches["stack"]:
+                if isinstance(c, dict) and "k" in c:
+                    yield c
+    else:
+        for c in caches:
+            if isinstance(c, dict) and "k" in c:
+                yield c

@@ -1,0 +1,4 @@
+"""Training substrate: optimizer, step factory, checkpoint, fault tolerance."""
+from repro.train.checkpoint import CheckpointManager  # noqa: F401
+from repro.train.optimizer import OptConfig, adamw_update, init_opt_state  # noqa: F401
+from repro.train.train_step import make_eval_step, make_train_step  # noqa: F401

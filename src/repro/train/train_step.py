@@ -1,0 +1,118 @@
+"""Train step factory: weighted CE loss, microbatch gradient accumulation
+with compute/comm overlap, remat policies, AdamW/ZeRO update.
+
+The loss supports per-example weights — that is where IHTC instance selection
+enters training: prototype examples carry their cluster mass
+(data/instance_selection.py), so training on the reduced corpus optimizes an
+unbiased estimate of the full-corpus loss.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.models.registry import ModelBundle
+from repro.models.transformer import ShardingPlan
+from repro.train.optimizer import OptConfig, adamw_update
+
+
+def cross_entropy(
+    logits: jax.Array,          # (b, s, v) fp32
+    labels: jax.Array,          # (b, s) int32, -1 = masked
+    weights: Optional[jax.Array] = None,  # (b,) example weights (IHTC masses)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (mean weighted token loss, total weight)."""
+    v = logits.shape[-1]
+    mask = (labels >= 0).astype(jnp.float32)
+    lab = jnp.where(labels >= 0, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    # gold logit via fused masked reduction, NOT take_along_axis: a gather
+    # over the vocab axis breaks its TP sharding (forces an all-gather of the
+    # fp32 logits — measured +13 GB/chip on qwen-32b-class vocabs).
+    cols = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    gold = jnp.sum(jnp.where(cols == lab[..., None], logits, 0.0), axis=-1)
+    tok_loss = (logz - gold) * mask
+    if weights is not None:
+        tok_loss = tok_loss * weights[:, None]
+        mask = mask * weights[:, None]
+    tot = jnp.maximum(jnp.sum(mask), 1e-6)
+    return jnp.sum(tok_loss) / tot, tot
+
+
+def make_loss_fn(bundle: ModelBundle, plan: ShardingPlan, impl: str, remat: str):
+    cfg = bundle.cfg
+
+    def loss_fn(params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        logits, aux = bundle.forward(
+            params, batch, plan=plan, impl=impl, remat=remat
+        )
+        loss, tot = cross_entropy(logits, batch["labels"], batch.get("weights"))
+        total = loss + cfg.router_aux_coef * aux
+        return total, {"loss": loss, "aux_loss": aux, "weight": tot}
+
+    return loss_fn
+
+
+def make_train_step(
+    bundle: ModelBundle,
+    opt_cfg: OptConfig,
+    parallel: ParallelConfig = ParallelConfig(),
+    plan: ShardingPlan = ShardingPlan(),
+    impl: str = "xla",
+) -> Callable:
+    """Builds train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    Microbatching: the global batch is split on axis 0 into
+    ``parallel.microbatches`` slices scanned sequentially; gradients
+    accumulate in fp32. Under GSPMD the per-microbatch reduce-scatter of
+    gradients overlaps with the next microbatch's compute (the scan body
+    carries only the accumulator — XLA's latency-hiding scheduler does the
+    interleave; see DESIGN.md §5).
+    """
+    loss_fn = make_loss_fn(bundle, plan, impl, parallel.remat)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    n_micro = max(parallel.microbatches, 1)
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            (loss, mets), grads = grad_fn(params, batch)
+        else:
+            def micro(acc, mb):
+                (l, m), g = grad_fn(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, x: a + x.astype(jnp.float32), acc, g
+                )
+                return acc, (l, m)
+
+            split = jax.tree_util.tree_map(
+                lambda x: x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:]),
+                batch,
+            )
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            grads, (losses, mets_stack) = jax.lax.scan(micro, zero, split)
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+            loss = jnp.mean(losses)
+            mets = jax.tree_util.tree_map(jnp.mean, mets_stack)
+
+        params, opt_state, opt_mets = adamw_update(grads, opt_state, params, opt_cfg)
+        mets = dict(mets, **opt_mets, total_loss=loss)
+        return params, opt_state, mets
+
+    return train_step
+
+
+def make_eval_step(bundle: ModelBundle, plan: ShardingPlan = ShardingPlan(),
+                   impl: str = "xla") -> Callable:
+    loss_fn = make_loss_fn(bundle, plan, impl, "none")
+
+    def eval_step(params, batch):
+        _, mets = loss_fn(params, batch)
+        return mets
+
+    return eval_step

@@ -1,0 +1,109 @@
+"""HLO-text analysis: collective wire-byte accounting for the roofline.
+
+``cost_analysis()`` reports FLOPs and HBM bytes but not collective traffic,
+so we parse the optimized HLO: every all-gather / all-reduce / reduce-scatter
+/ all-to-all / collective-permute contributes per-chip wire bytes using the
+standard ring-algorithm cost model:
+
+  all-gather        (k-1)/k × result_bytes
+  reduce-scatter    (k-1)   × result_bytes          (operand = k × result)
+  all-reduce        2(k-1)/k × result_bytes
+  all-to-all        (k-1)/k × result_bytes
+  collective-permute 1      × result_bytes
+
+k = replica-group size parsed per op. Returns per-chip bytes (the roofline
+divides total bytes by chips; per-chip × chips = total keeps both views).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]*(?:e[0-9a-z]+)?)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes of every dtype[dims] shape literal in `text`."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))  # [num_groups, group_size]
+    return default
+
+
+def collective_bytes(hlo_text: str, *, default_group: int = 1) -> Dict[str, float]:
+    """Per-chip collective wire bytes by op kind (+ 'total')."""
+    out: Dict[str, float] = defaultdict(float)
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "=" not in ls:
+            continue
+        lhs, rhs = ls.split("=", 1)
+        opm = None
+        for c in _COLLECTIVES:
+            if re.search(rf"\b{c}(-start|-done)?\(", rhs):
+                opm = c
+                break
+        if opm is None:
+            continue
+        if f"{opm}-done(" in rhs:
+            continue  # result of the -start op already counted
+        result_bytes = _shape_bytes(lhs + rhs.split("(")[0])
+        if opm == "collective-permute":  # pairwise: no replica_groups attr
+            out[opm] += result_bytes
+            out["total"] += result_bytes
+            continue
+        k = _group_size(rhs, default_group)
+        if k <= 1:
+            continue
+        if opm == "all-gather":
+            wire = result_bytes * (k - 1) / k
+        elif opm == "reduce-scatter":
+            wire = result_bytes * (k - 1)
+        elif opm == "all-reduce":
+            wire = 2 * result_bytes * (k - 1) / k
+        elif opm == "all-to-all":
+            wire = result_bytes * (k - 1) / k
+        else:  # collective-permute
+            wire = result_bytes
+        out[opm] += wire
+        out["total"] += wire
+    return dict(out)
+
+
+def collective_op_counts(hlo_text: str) -> Dict[str, int]:
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        for c in _COLLECTIVES:
+            if re.search(rf"\b{c}(-start)?\(", line):
+                counts[c] += 1
+    return dict(counts)

@@ -1,0 +1,97 @@
+"""Roofline-term computation from compiled dry-run artifacts.
+
+Hardware model (TPU v5e-class, per assignment):
+  197 TFLOP/s bf16 per chip · 819 GB/s HBM per chip · ~50 GB/s/link ICI.
+
+  compute_term   = HLO_FLOPs       / (chips × PEAK_FLOPS)
+  memory_term    = HLO_bytes       / (chips × HBM_BW)
+  collective_term= collective_bytes/ (chips × LINK_BW)
+
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE), D = tokens processed in
+the step; the MODEL/HLO ratio flags remat- or dispatch-inflated compute.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, asdict
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12     # bf16 FLOP/s per chip
+HBM_BW = 819e9          # B/s per chip
+LINK_BW = 50e9          # B/s per ICI link
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_gflops: float          # total across chips
+    hlo_gbytes: float
+    collective_gbytes: float   # per-chip wire bytes × chips
+    compute_term_s: float
+    memory_term_s: float
+    collective_term_s: float
+    dominant: str
+    model_gflops: float
+    useful_ratio: float        # MODEL_FLOPS / HLO_FLOPs
+    bytes_per_chip_gb: float   # peak live memory from memory_analysis
+    step_time_bound_s: float   # max of the three terms
+    mfu_bound: float           # model_flops / (chips·peak·step_time_bound)
+
+    def row(self) -> str:
+        return (
+            f"| {self.arch} | {self.shape} | {self.mesh} | "
+            f"{self.compute_term_s:.2e} | {self.memory_term_s:.2e} | "
+            f"{self.collective_term_s:.2e} | {self.dominant} | "
+            f"{self.useful_ratio:.2f} | {self.mfu_bound*100:.1f}% | "
+            f"{self.bytes_per_chip_gb:.2f} |"
+        )
+
+
+def build_report(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    flops: float,
+    hbm_bytes: float,
+    collective_per_chip_bytes: float,
+    model_flops: float,
+    bytes_per_chip: float,
+) -> RooflineReport:
+    compute_term = flops / (chips * PEAK_FLOPS)
+    memory_term = hbm_bytes / (chips * HBM_BW)
+    collective_term = collective_per_chip_bytes / LINK_BW
+    terms = {
+        "compute": compute_term,
+        "memory": memory_term,
+        "collective": collective_term,
+    }
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mfu = (model_flops / (chips * PEAK_FLOPS * bound)) if bound > 0 else 0.0
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_gflops=flops / 1e9, hlo_gbytes=hbm_bytes / 1e9,
+        collective_gbytes=collective_per_chip_bytes * chips / 1e9,
+        compute_term_s=compute_term, memory_term_s=memory_term,
+        collective_term_s=collective_term, dominant=dominant,
+        model_gflops=model_flops / 1e9,
+        useful_ratio=(model_flops / flops) if flops else 0.0,
+        bytes_per_chip_gb=bytes_per_chip / 1e9,
+        step_time_bound_s=bound, mfu_bound=mfu,
+    )
+
+
+def model_flops_for(cfg, shape, n_active: Optional[int] = None) -> float:
+    """6·N_active·D with D = tokens processed by the lowered step."""
+    n = n_active if n_active is not None else cfg.active_param_count()
+    if shape.kind == "decode":
+        d = shape.global_batch * 1
+        return 2.0 * n * d  # inference fwd only
+    d = shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * d
+    return 6.0 * n * d  # train: fwd + bwd

@@ -1,0 +1,23 @@
+import os
+import sys
+
+# tests must see ONE device (the dry-run alone requests 512)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def gmm_sample(n: int, rng: np.random.Generator):
+    """The paper's §4 mixture: 3 bivariate gaussians, weights .5/.3/.2."""
+    mus = np.array([[1, 2], [7, 8], [3, 5]], float)
+    sds = np.array([[1, 0.5], [2, 1], [3, 4]], float) ** 0.5
+    comp = rng.choice(3, size=n, p=[0.5, 0.3, 0.2])
+    x = mus[comp] + rng.normal(size=(n, 2)) * sds[comp]
+    return x.astype(np.float32), comp

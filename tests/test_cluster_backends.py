@@ -1,0 +1,106 @@
+"""Backend clusterers vs brute-force references on small instances."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster.dbscan import dbscan
+from repro.cluster.hac import hac
+from repro.cluster.kmeans import kmeans
+from repro.cluster.metrics import bss_tss, clustering_accuracy
+
+
+def three_blobs(rng, n=90, spread=0.3):
+    centers = np.array([[0, 0], [6, 0], [3, 6]], float)
+    comp = np.repeat(np.arange(3), n // 3)
+    x = centers[comp] + rng.normal(scale=spread, size=(n, 2))
+    return x.astype(np.float32), comp
+
+
+def test_kmeans_recovers_blobs(rng):
+    x, true = three_blobs(rng)
+    r = kmeans(jnp.asarray(x), 3, key=jax.random.PRNGKey(0))
+    acc = clustering_accuracy(true, np.asarray(r.labels), 3)
+    assert acc == 1.0
+    assert float(r.inertia) < 90 * 0.3**2 * 2 * 3
+
+
+def test_kmeans_weighted_pulls_centers(rng):
+    """A giant-mass point must dominate its cluster centroid."""
+    x = jnp.asarray([[0.0, 0.0], [1.0, 0.0], [10.0, 0.0], [11.0, 0.0]])
+    w = jnp.asarray([100.0, 1.0, 1.0, 1.0])
+    r = kmeans(x, 2, weights=w, key=jax.random.PRNGKey(1))
+    c = np.asarray(r.centers)
+    left = c[np.argmin(c[:, 0])]
+    assert abs(left[0] - (0 * 100 + 1) / 101) < 1e-3
+
+
+def test_kmeans_masked(rng):
+    x, true = three_blobs(rng)
+    pad = np.zeros((10, 2), np.float32) + 99.0
+    xp = jnp.asarray(np.vstack([x, pad]))
+    valid = jnp.asarray([True] * 90 + [False] * 10)
+    r = kmeans(xp, 3, valid=valid, key=jax.random.PRNGKey(0))
+    lab = np.asarray(r.labels)
+    assert np.all(lab[90:] == -1)
+    assert clustering_accuracy(true, lab[:90], 3) == 1.0
+
+
+@pytest.mark.parametrize("linkage", ["single", "complete", "average", "ward"])
+def test_hac_recovers_blobs(rng, linkage):
+    x, true = three_blobs(rng, n=45)
+    r = hac(jnp.asarray(x), 3, linkage=linkage)
+    acc = clustering_accuracy(true, np.asarray(r.labels), 3)
+    assert acc == 1.0, (linkage, acc)
+
+
+def test_hac_single_linkage_exact(rng):
+    """Single linkage = MST clustering; verify against brute force."""
+    x = rng.normal(size=(12, 2)).astype(np.float32)
+    r = hac(jnp.asarray(x), 3, linkage="single")
+    # brute force agglomeration
+    d = np.sqrt(((x[:, None] - x[None]) ** 2).sum(-1))
+    clusters = [{i} for i in range(12)]
+    while len(clusters) > 3:
+        best, bi, bj = np.inf, -1, -1
+        for i, j in itertools.combinations(range(len(clusters)), 2):
+            dd = min(d[a, b] for a in clusters[i] for b in clusters[j])
+            if dd < best:
+                best, bi, bj = dd, i, j
+        clusters[bi] |= clusters[bj]
+        del clusters[bj]
+    want = np.zeros(12, int)
+    for c, mem in enumerate(clusters):
+        for i in mem:
+            want[i] = c
+    acc = clustering_accuracy(want, np.asarray(r.labels), 3)
+    assert acc == 1.0
+
+
+def test_dbscan_blobs_and_noise(rng):
+    x, true = three_blobs(rng, n=90, spread=0.2)
+    noise = rng.uniform(-3, 9, size=(5, 2)).astype(np.float32)
+    xall = jnp.asarray(np.vstack([x, noise]))
+    r = dbscan(xall, eps=0.6, min_pts=4.0)
+    lab = np.asarray(r.labels)
+    assert clustering_accuracy(true, lab[:90], 3) > 0.95
+    # most of the uniform noise should be labelled -1
+    assert (lab[90:] == -1).sum() >= 3
+
+
+def test_dbscan_mass_weighted_density(rng):
+    """A prototype with mass 10 should count as 10 points for core-ness."""
+    x = jnp.asarray([[0.0, 0.0], [0.3, 0.0]])
+    w = jnp.asarray([10.0, 1.0])
+    r = dbscan(x, eps=0.5, min_pts=5.0, weights=w)
+    assert bool(r.is_core[0]) and bool(r.is_core[1])
+    r2 = dbscan(x, eps=0.5, min_pts=5.0)  # unweighted: only 2 pts in eps
+    assert not bool(r2.is_core[0])
+
+
+def test_bss_tss_range(rng):
+    x, true = three_blobs(rng)
+    ratio = float(bss_tss(jnp.asarray(x), jnp.asarray(true), 3))
+    assert 0.9 < ratio <= 1.0

@@ -1,0 +1,109 @@
+"""Data pipeline determinism + ITIS instance selection as a data stage."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES, smoke_config
+from repro.data import make_batch
+from repro.data.instance_selection import (
+    SelectionConfig,
+    featurize,
+    reduced_batch,
+    select_instances,
+)
+
+
+def test_batches_are_pure_functions_of_step():
+    cfg = smoke_config(ARCHS["qwen2.5-32b"])
+    b1 = make_batch(cfg, SHAPES["train_4k"], 7, batch_override=4, seq_override=16)
+    b2 = make_batch(cfg, SHAPES["train_4k"], 7, batch_override=4, seq_override=16)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+    b3 = make_batch(cfg, SHAPES["train_4k"], 8, batch_override=4, seq_override=16)
+    assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))
+
+
+def test_batches_have_learnable_structure():
+    cfg = smoke_config(ARCHS["qwen2.5-32b"])
+    b = make_batch(cfg, SHAPES["train_4k"], 0, batch_override=16, seq_override=64)
+    toks = np.asarray(b["tokens"])
+    assert toks.min() >= 0 and toks.max() < cfg.vocab_size
+    # Zipf-ish: top-10 tokens should cover a large fraction
+    counts = np.bincount(toks.ravel())
+    top = np.sort(counts)[::-1][:10].sum() / toks.size
+    assert top > 0.3, top
+
+
+def test_modality_batches():
+    for name in ("phi-3-vision-4.2b", "seamless-m4t-large-v2"):
+        cfg = smoke_config(ARCHS[name])
+        b = make_batch(cfg, SHAPES["train_4k"], 0, batch_override=2,
+                       seq_override=16)
+        if cfg.frontend == "vision":
+            assert b["patch_embeds"].shape[0] == 2
+        else:
+            assert b["frames"].shape == (2, 16, cfg.d_model)
+
+
+def test_instance_selection_reduces_and_weights(rng):
+    n, s, vocab = 256, 24, 97
+    # corpus with 4 latent topics -> clusterable features
+    topics = rng.integers(0, 4, size=n)
+    toks = (topics[:, None] * (vocab // 4)
+            + rng.integers(0, vocab // 4, size=(n, s))).astype(np.int32)
+    toks = jnp.asarray(toks)
+    scfg = SelectionConfig(threshold=2, iterations=2, feature_dim=16)
+    sel = select_instances(toks, vocab, scfg)
+    n_sel = int(jnp.sum(sel.valid))
+    assert n_sel <= n // 4
+    # masses add up to the corpus size
+    total = float(jnp.sum(jnp.where(sel.valid, sel.weights, 0.0)))
+    assert abs(total - n) < 1e-2
+    # every original example maps to a selected prototype
+    assign = np.asarray(sel.assignment)
+    assert assign.min() >= 0
+    # selected indices are valid distinct examples
+    idx = np.asarray(sel.indices)[np.asarray(sel.valid)]
+    assert len(set(idx.tolist())) == n_sel
+
+    rb = reduced_batch(toks, sel)
+    assert rb["tokens"].shape == (sel.indices.shape[0], s - 1)
+    w = np.asarray(rb["weights"])
+    assert (w[np.asarray(sel.valid)] > 0).all()
+    lab = np.asarray(rb["labels"])
+    assert (lab[~np.asarray(sel.valid)] == -1).all()
+
+
+def test_instance_selection_groups_topics(rng):
+    """Same-topic examples should collapse together far more often than not."""
+    n, s, vocab = 128, 16, 80
+    topics = rng.integers(0, 2, size=n)
+    toks = jnp.asarray(
+        (topics[:, None] * 40 + rng.integers(0, 8, size=(n, s))).astype(np.int32))
+    sel = select_instances(toks, vocab, SelectionConfig(2, 2, feature_dim=8))
+    assign = np.asarray(sel.assignment)
+    same = cross = 0
+    for i in range(0, n, 3):
+        for j in range(1, n, 7):
+            if assign[i] == assign[j]:
+                if topics[i] == topics[j]:
+                    same += 1
+                else:
+                    cross += 1
+    assert same > 5 * max(cross, 1)
+
+
+def test_weighted_loss_unbiased(rng):
+    """CE on the weighted reduced corpus ≈ CE on the full corpus when
+    cluster members are identical (exactness case)."""
+    from repro.train.train_step import cross_entropy
+
+    n, s, v = 32, 8, 11
+    base = rng.integers(0, v, size=(n // 4, s + 1)).astype(np.int32)
+    full = jnp.asarray(np.repeat(base, 4, axis=0))  # 4 identical copies each
+    logits = jnp.asarray(rng.normal(size=(n, s, v)), jnp.float32)
+    logits = jnp.repeat(logits[: n // 4], 4, axis=0)
+    l_full, _ = cross_entropy(logits, full[:, 1:])
+    l_red, _ = cross_entropy(
+        logits[::4], full[::4, 1:],  # one representative per duplicate group
+        weights=jnp.full((n // 4,), 4.0))
+    assert abs(float(l_full) - float(l_red)) < 1e-5

@@ -1,0 +1,99 @@
+"""ITIS / IHTC behaviour: reduction factors, back-out consistency, the
+(t*)^m final-cluster-size guarantee, and reproduction of the paper's §4
+accuracy claims on the GMM simulation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import gmm_sample
+from repro.cluster.metrics import bss_tss, clustering_accuracy
+from repro.core import compose_assignments, ihtc, itis
+
+
+def test_itis_reduction_factor(rng):
+    x, _ = gmm_sample(1024, rng)
+    for t in (2, 3):
+        for m in (1, 2, 3):
+            r = itis(jnp.asarray(x), t, m)
+            n_protos = int(r.n_prototypes)
+            assert n_protos <= 1024 // (t**m), (t, m, n_protos)
+            assert n_protos >= 1
+
+
+def test_itis_mass_conservation(rng):
+    x, _ = gmm_sample(500, rng)
+    r = itis(jnp.asarray(x), 2, 3)
+    total_mass = float(jnp.sum(jnp.where(r.valid, r.mass, 0.0)))
+    assert abs(total_mass - 500) < 1e-3
+
+
+def test_itis_backout_covers_all(rng):
+    x, _ = gmm_sample(300, rng)
+    r = itis(jnp.asarray(x), 2, 2)
+    ident = jnp.arange(r.protos.shape[0], dtype=jnp.int32)
+    assign = np.asarray(compose_assignments(r.assignments, ident))
+    assert assign.shape == (300,)
+    assert assign.min() >= 0
+    valid_ids = np.flatnonzero(np.asarray(r.valid))
+    assert set(np.unique(assign)) <= set(valid_ids.tolist())
+
+
+@pytest.mark.parametrize("backend,kw", [
+    ("kmeans", {"k": 3}),
+    ("hac", {"k": 3, "linkage": "ward"}),
+])
+def test_ihtc_min_cluster_size_guarantee(rng, backend, kw):
+    """Paper claim: m ITIS iterations at t* ⇒ every final cluster ≥ (t*)^m."""
+    x, _ = gmm_sample(800, rng)
+    t, m = 2, 3
+    res = ihtc(jnp.asarray(x), t, m, backend, **kw)
+    lab = np.asarray(res.labels)
+    assert lab.min() >= 0
+    sizes = np.bincount(lab)
+    assert sizes[sizes > 0].min() >= t**m
+
+
+def test_ihtc_kmeans_accuracy_matches_paper(rng):
+    """Paper Table 1: accuracy ≈ 0.92 for m = 0..3 on the GMM mixture."""
+    x, true = gmm_sample(3000, rng)
+    for m in (0, 1, 2, 3):
+        res = ihtc(jnp.asarray(x), 2, m, "kmeans", k=3,
+                   key=jax.random.PRNGKey(11))
+        acc = clustering_accuracy(true, np.asarray(res.labels), 3)
+        assert acc > 0.88, (m, acc)
+
+
+def test_ihtc_hac_accuracy(rng):
+    x, true = gmm_sample(1200, rng)
+    res = ihtc(jnp.asarray(x), 2, 2, "hac", k=3, linkage="ward",
+               key=jax.random.PRNGKey(3))
+    acc = clustering_accuracy(true, np.asarray(res.labels), 3)
+    assert acc > 0.80, acc
+
+
+def test_ihtc_dbscan_runs(rng):
+    x, _ = gmm_sample(600, rng)
+    res = ihtc(jnp.asarray(x), 2, 2, "dbscan", eps=0.9, min_pts=25.0)
+    lab = np.asarray(res.labels)
+    assert lab.shape == (600,)
+    assert lab.max() >= 0  # found at least one cluster
+
+
+def test_ihtc_bss_tss_preserved(rng):
+    """Paper Tables 4–6: BSS/TSS barely moves under IHTC pre-processing."""
+    x, _ = gmm_sample(2000, rng)
+    xj = jnp.asarray(x)
+    base = ihtc(xj, 2, 0, "kmeans", k=3, key=jax.random.PRNGKey(0))
+    red = ihtc(xj, 2, 2, "kmeans", k=3, key=jax.random.PRNGKey(0))
+    r0 = float(bss_tss(xj, base.labels, 3))
+    r2 = float(bss_tss(xj, red.labels, 3))
+    assert r2 > r0 - 0.03, (r0, r2)
+
+
+def test_ihtc_m0_equals_backend(rng):
+    """m=0 must reduce to plain k-means on the raw data."""
+    x, _ = gmm_sample(200, rng)
+    res = ihtc(jnp.asarray(x), 2, 0, "kmeans", k=3, key=jax.random.PRNGKey(4))
+    assert int(res.n_prototypes) == 200
+    assert np.asarray(res.labels).shape == (200,)

@@ -1,0 +1,113 @@
+"""IHTC KV-cache prototype compression (serve/kv_compression.py).
+
+Key exactness property: if every cluster's keys are IDENTICAL, attention
+over prototypes with +log(mass) bias equals attention over the raw cache
+exactly (softmax mass correction) — the paper's bottleneck objective bounds
+the error in the general case."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, smoke_config
+from repro.kernels import ref
+from repro.models import build
+from repro.serve import ServeConfig, ServeEngine
+from repro.serve.kv_compression import compress_cache, compress_model_caches
+
+
+def test_duplicate_keys_exactness(rng):
+    """Duplicated KV entries compress losslessly (log-mass bias is exact)."""
+    hd, n_unique, dup = 8, 16, 2
+    k_unique = rng.normal(size=(n_unique, hd)).astype(np.float32)
+    v_unique = rng.normal(size=(n_unique, hd)).astype(np.float32)
+    k_full = np.repeat(k_unique, dup, axis=0)  # 32 entries, clusters of 2
+    v_full = np.repeat(v_unique, dup, axis=0)
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, hd)), jnp.float32)
+
+    cache = {
+        "k": jnp.asarray(k_full)[None, None],
+        "v": jnp.asarray(v_full)[None, None],
+        "pos": jnp.asarray(n_unique * dup, jnp.int32),
+    }
+    comp = compress_cache(cache, t=2, m=1, tail=4, impl="ref")
+    assert comp["k"].shape[2] == n_unique + 4
+
+    out_full = ref.flash_attention(
+        q, cache["k"][:, :1], cache["v"][:, :1], causal=False)
+    # mask the unwritten tail slots (the serving path does this through the
+    # position mask; calling ref directly we must do it ourselves)
+    total = comp["k"].shape[2]
+    tail_mask = jnp.where(jnp.arange(total) < int(comp["pos"]), 0.0, -1e30)
+    bias = comp["bias"][:, :1] + tail_mask[None, None, :]
+    out_comp = ref.flash_attention(
+        q, comp["k"][:, :1], comp["v"][:, :1], causal=False, kv_bias=bias)
+    np.testing.assert_allclose(np.asarray(out_comp), np.asarray(out_full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_compressed_cache_mass_conserved(rng):
+    S, hd = 64, 8
+    cache = {
+        "k": jnp.asarray(rng.normal(size=(2, 2, S, hd)), jnp.float32),
+        "v": jnp.asarray(rng.normal(size=(2, 2, S, hd)), jnp.float32),
+        "pos": jnp.asarray(S, jnp.int32),
+    }
+    comp = compress_cache(cache, t=2, m=2, tail=8, impl="ref")
+    P = S // 4
+    assert comp["k"].shape[2] == P + 8
+    mass = np.asarray(comp["mass"])[:, :, :P]
+    bias = np.asarray(comp["bias"])[:, :, :P]
+    got = mass[bias > -1e29].sum(axis=-1) if mass.ndim == 1 else None
+    total = np.where(bias > -1e29, mass, 0.0).sum(axis=-1)
+    np.testing.assert_allclose(total, S, atol=1e-3)
+
+
+def test_decode_quality_on_clustered_keys(rng):
+    """Keys with genuine cluster structure: compressed decode must stay close
+    (error bounded by cluster radius — the TC bottleneck objective)."""
+    cfg = smoke_config(ARCHS["qwen2.5-32b"])
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    B, S = 1, 48
+    # token stream with heavy repetition → clusterable K vectors
+    toks = jnp.asarray(rng.integers(0, 6, size=(B, S)), jnp.int32)
+    caches = bundle.init_caches(B, S + 8)
+    lg, caches = bundle.prefill(params, caches, {"tokens": toks})
+    comp = compress_model_caches(caches, 2, 1, tail=8, impl="ref")
+    nxt = jnp.argmax(lg[:, -1], -1)[:, None]
+    l1, _ = bundle.decode_step(params, caches, {"tokens": nxt})
+    l2, _ = bundle.decode_step(params, comp, {"tokens": nxt})
+    p1 = jax.nn.softmax(l1[:, -1].astype(jnp.float32), -1)
+    p2 = jax.nn.softmax(l2[:, -1].astype(jnp.float32), -1)
+    tv = 0.5 * float(jnp.sum(jnp.abs(p1 - p2)))
+    assert tv < 0.25, tv
+    # random-init logits are near-flat, so exact argmax is brittle; require
+    # the exact top-1 to stay in the compressed top-5
+    top5 = jnp.argsort(-p2[0])[:5]
+    assert int(jnp.argmax(p1)) in [int(i) for i in top5]
+
+
+def test_engine_generates_with_recompression(rng):
+    cfg = smoke_config(ARCHS["gemma2-2b"])
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(2, 24)), jnp.int32)
+    eng = ServeEngine(bundle, params, ServeConfig(
+        max_new_tokens=16, compress=True, compress_t=2, compress_m=1,
+        compress_tail=8))
+    out = eng.generate({"tokens": toks})
+    assert out["tokens"].shape == (2, 16)
+    assert out["compressions"] >= 1
+    assert not bool(jnp.any(out["tokens"] < 0))
+
+
+def test_engine_plain_greedy_deterministic(rng):
+    cfg = smoke_config(ARCHS["minitron-8b"])
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(1, 8)), jnp.int32)
+    eng = ServeEngine(bundle, params, ServeConfig(max_new_tokens=8))
+    a = eng.generate({"tokens": toks})["tokens"]
+    b = eng.generate({"tokens": toks})["tokens"]
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

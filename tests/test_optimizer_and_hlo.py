@@ -1,0 +1,115 @@
+"""AdamW vs a NumPy reference, LR schedule, ZeRO spec derivation, int8
+quantization round-trip, and the HLO collective-bytes parser."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.train.compression import dequantize_int8, quantize_int8
+from repro.train.optimizer import (
+    OptConfig,
+    adamw_update,
+    init_opt_state,
+    lr_at,
+    zero_opt_specs,
+)
+from repro.utils.hlo import collective_bytes, collective_op_counts
+
+
+def _np_adamw(p, g, m, v, step, cfg: OptConfig):
+    gn = np.sqrt((g**2).sum())
+    g = g * min(1.0, cfg.clip_norm / max(gn, 1e-12))
+    m = cfg.b1 * m + (1 - cfg.b1) * g
+    v = cfg.b2 * v + (1 - cfg.b2) * g**2
+    mh = m / (1 - cfg.b1**step)
+    vh = v / (1 - cfg.b2**step)
+    # lr at `step` (warmup phase for this test)
+    lr = cfg.peak_lr * step / cfg.warmup_steps
+    return p - lr * (mh / (np.sqrt(vh) + cfg.eps) + cfg.weight_decay * p), m, v
+
+
+def test_adamw_matches_numpy_reference(rng):
+    cfg = OptConfig(peak_lr=1e-2, warmup_steps=100, decay_steps=1000)
+    p = rng.normal(size=(13,)).astype(np.float32)
+    g = rng.normal(size=(13,)).astype(np.float32)
+    params = {"w": jnp.asarray(p)}
+    grads = {"w": jnp.asarray(g)}
+    opt = init_opt_state(params)
+    got, opt, mets = adamw_update(grads, opt, params, cfg)
+    want, _, _ = _np_adamw(p, g, np.zeros(13), np.zeros(13), 1, cfg)
+    np.testing.assert_allclose(np.asarray(got["w"]), want, rtol=1e-5, atol=1e-6)
+    assert abs(float(mets["grad_norm"]) - np.sqrt((g**2).sum())) < 1e-4
+
+
+def test_lr_schedule_shape():
+    cfg = OptConfig(peak_lr=1e-3, min_lr=1e-4, warmup_steps=10, decay_steps=110)
+    lrs = [float(lr_at(cfg, jnp.asarray(s))) for s in (0, 5, 10, 60, 110, 500)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 5e-4) < 1e-9          # linear warmup
+    assert abs(lrs[2] - 1e-3) < 1e-6          # peak
+    assert lrs[3] < lrs[2] and lrs[4] < lrs[3]
+    assert abs(lrs[4] - 1e-4) < 1e-6          # floor
+    assert abs(lrs[5] - 1e-4) < 1e-6
+
+
+def test_zero_specs_fold_data_axes():
+    pspecs = {"w": P(None, "model"), "b": P("model"), "tiny": P(None)}
+    shapes = {
+        "w": jax.ShapeDtypeStruct((64, 32), jnp.float32),
+        "b": jax.ShapeDtypeStruct((128,), jnp.float32),
+        "tiny": jax.ShapeDtypeStruct((3,), jnp.float32),
+    }
+    specs = zero_opt_specs(pspecs, shapes, ("pod", "data"),
+                           {"pod": 2, "data": 4, "model": 8})
+    # w dim0 (64) divisible by 8 -> gets the data axes
+    assert specs["m"]["w"] == P(("pod", "data"), "model")
+    # b dim0 already model-sharded: 128 % (8·8) == 0 -> merged axes
+    assert specs["m"]["b"] == P(("model", "pod", "data"))
+    # tiny (3) not divisible -> left as-is
+    assert specs["m"]["tiny"] == P(None)
+    assert specs["step"] == P()
+
+
+def test_int8_quantization_roundtrip(rng):
+    x = jnp.asarray(rng.normal(size=(256,)) * 3.7, jnp.float32)
+    q, s = quantize_int8(x)
+    back = dequantize_int8(q, s)
+    err = float(jnp.max(jnp.abs(back - x)))
+    assert err <= float(s) * 0.5 + 1e-6  # half-ULP of the int8 grid
+    assert q.dtype == jnp.int8
+
+
+SAMPLE_HLO = """
+HloModule test
+  %p = f32[128,64]{1,0} parameter(0)
+  %ag = f32[128,512]{1,0} all-gather(%p), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={1}
+  %ar = f32[128,64]{1,0} all-reduce(%p), replica_groups=[64,8]<=[512], to_apply=%add
+  %rs = f32[16,64]{1,0} reduce-scatter(%p), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+  %cp = f32[128,64]{1,0} collective-permute(%p), source_target_pairs={{0,1},{1,0}}
+  %a2a = f32[128,64]{1,0} all-to-all(%p), replica_groups={{0,1,2,3}}
+  %start = f32[32,32]{1,0} all-reduce-start(%p), replica_groups={{0,1}}
+  %done = f32[32,32]{1,0} all-reduce-done(%start)
+"""
+
+
+def test_collective_bytes_parser():
+    out = collective_bytes(SAMPLE_HLO)
+    ag = 128 * 512 * 4 * (7 / 8)
+    ar = 128 * 64 * 4 * 2 * (7 / 8)
+    rs = 16 * 64 * 4 * 7
+    cp = 128 * 64 * 4
+    a2a = 128 * 64 * 4 * (3 / 4)
+    st = 32 * 32 * 4 * 2 * (1 / 2)
+    np.testing.assert_allclose(out["all-gather"], ag)
+    np.testing.assert_allclose(out["all-reduce"], ar + st)
+    np.testing.assert_allclose(out["reduce-scatter"], rs)
+    np.testing.assert_allclose(out["collective-permute"], cp)
+    np.testing.assert_allclose(out["all-to-all"], a2a)
+    np.testing.assert_allclose(out["total"], ag + ar + rs + cp + a2a + st)
+    counts = collective_op_counts(SAMPLE_HLO)
+    assert counts["all-reduce"] == 2  # plain + start (done not re-counted)
+
+
+def test_collective_bytes_ignores_singleton_groups():
+    hlo = "%ar = f32[8,8]{1,0} all-reduce(%p), replica_groups={{0}}"
+    assert collective_bytes(hlo).get("total", 0.0) == 0.0

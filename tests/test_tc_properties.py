@@ -1,0 +1,118 @@
+"""Property-based tests (hypothesis) for the paper's core invariants.
+
+TC (Higgins et al. 2016) guarantees, which our Luby-parallel adaptation must
+preserve (DESIGN.md §2):
+  P1  every valid point gets a cluster (spanning);
+  P2  clusters are disjoint with size ≥ t*;
+  P3  seeds are independent at graph distance ≤ 2 in NG_{t*-1};
+  P4  TC's bottleneck objective ≤ 4λ* (brute-forced optimum, tiny n).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster.metrics import bottleneck_objective, optimal_bottleneck
+from repro.core import threshold_clustering
+from repro.core.knn import knn_graph
+
+points = st.integers(min_value=0, max_value=10_000)
+
+
+@st.composite
+def point_sets(draw, d=2, sizes=(8, 16, 24, 40)):
+    # n drawn from a fixed bucket set to bound jit-compilation count
+    n = draw(st.sampled_from(sizes))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    # mix of cluster-y and uniform data
+    k = draw(st.integers(1, 4))
+    centers = rng.normal(scale=5.0, size=(k, d))
+    comp = rng.integers(0, k, size=n)
+    x = centers[comp] + rng.normal(scale=draw(st.floats(0.1, 2.0)), size=(n, d))
+    return x.astype(np.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(x=point_sets(), t=st.integers(2, 4))
+def test_tc_partition_and_size(x, t):
+    n = len(x)
+    if n < 2 * t:
+        return
+    r = threshold_clustering(jnp.asarray(x), t, key=jax.random.PRNGKey(0))
+    lab = np.asarray(r.labels)
+    nc = int(r.n_clusters)
+    assert lab.min() >= 0, "P1: spanning"
+    assert lab.max() == nc - 1 and nc >= 1
+    sizes = np.bincount(lab, minlength=nc)
+    assert sizes.min() >= t, f"P2: size guarantee {sizes.min()} < {t}"
+
+
+@settings(max_examples=10, deadline=None)
+@given(x=point_sets(sizes=(12, 24)), t=st.integers(2, 3))
+def test_tc_seed_independence(x, t):
+    """P3: no two seeds within undirected graph distance 2 of NG_{t-1}."""
+    n = len(x)
+    if n < 2 * t:
+        return
+    xj = jnp.asarray(x)
+    r = threshold_clustering(xj, t, key=jax.random.PRNGKey(1))
+    _, idx = knn_graph(xj, t - 1)
+    idx = np.asarray(idx)
+    adj = np.zeros((n, n), bool)
+    for i in range(n):
+        for j in idx[i]:
+            if j >= 0:
+                adj[i, j] = adj[j, i] = True
+    two_hop = adj | (adj @ adj)
+    seeds = np.flatnonzero(np.asarray(r.is_seed))
+    for a in seeds:
+        for b in seeds:
+            if a < b:
+                assert not two_hop[a, b], f"seeds {a},{b} within distance 2"
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.sampled_from([8, 9]),
+    t=st.integers(2, 3),
+)
+def test_tc_four_approximation(seed, n, t):
+    """P4: TC bottleneck ≤ 4·optimal (exact brute force, n ≤ 9)."""
+    if n < 2 * t:
+        return
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, 2)).astype(np.float32)
+    r = threshold_clustering(jnp.asarray(x), t, key=jax.random.PRNGKey(2))
+    got = bottleneck_objective(x, np.asarray(r.labels))
+    opt = optimal_bottleneck(x, t)
+    assert got <= 4.0 * opt + 1e-5, f"bottleneck {got} > 4×{opt}"
+
+
+def test_tc_masked_invariants(rng):
+    """Masked (padded) points are excluded and transmit no edges."""
+    x = jnp.asarray(rng.normal(size=(50, 2)), jnp.float32)
+    valid = jnp.asarray(rng.random(50) > 0.3)
+    r = threshold_clustering(x, 2, valid=valid, key=jax.random.PRNGKey(3))
+    lab = np.asarray(r.labels)
+    v = np.asarray(valid)
+    assert np.all(lab[~v] == -1)
+    if v.sum() >= 4:
+        assert np.all(lab[v] >= 0)
+        sizes = np.bincount(lab[v])
+        assert sizes[sizes > 0].min() >= 2
+
+
+def test_tc_determinism(rng):
+    x = jnp.asarray(rng.normal(size=(64, 3)), jnp.float32)
+    r1 = threshold_clustering(x, 3, key=jax.random.PRNGKey(5))
+    r2 = threshold_clustering(x, 3, key=jax.random.PRNGKey(5))
+    np.testing.assert_array_equal(np.asarray(r1.labels), np.asarray(r2.labels))
+
+
+def test_tc_t1_degenerate(rng):
+    x = jnp.asarray(rng.normal(size=(10, 2)), jnp.float32)
+    r = threshold_clustering(x, 1)
+    assert int(r.n_clusters) == 10

@@ -1,0 +1,116 @@
+"""End-to-end training behaviour: loss descent, fault-tolerant loop with
+injected failures, checkpoint save/restore/resume equivalence."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES, smoke_config
+from repro.data import make_batch
+from repro.models import build
+from repro.train import (CheckpointManager, OptConfig, init_opt_state,
+                         make_train_step)
+from repro.train.fault_tolerance import StepGuard, TransientError, run_training
+
+
+def _setup(name="qwen2.5-32b", lr=1e-2):
+    cfg = smoke_config(ARCHS[name])
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    step = jax.jit(make_train_step(
+        bundle, OptConfig(peak_lr=lr, warmup_steps=5, decay_steps=60)))
+    bfs = lambda s: make_batch(cfg, SHAPES["train_4k"], s, batch_override=8,
+                               seq_override=32)
+    return cfg, bundle, params, opt, step, bfs
+
+
+def test_loss_decreases():
+    _, _, params, opt, step, bfs = _setup()
+    losses = []
+    p, o, _ = run_training(
+        train_step=step, init_state=(params, opt), batch_for_step=bfs,
+        n_steps=20, on_metrics=lambda s, m: losses.append(float(m["loss"])))
+    assert np.mean(losses[-4:]) < np.mean(losses[:4]) * 0.92, losses
+
+
+def test_failure_injection_and_retry():
+    _, _, params, opt, step, bfs = _setup()
+    injected = []
+
+    def hook(s, attempt):
+        if s in (2, 5) and attempt == 0:
+            injected.append(s)
+            return True
+        return False
+
+    _, _, stats = run_training(
+        train_step=step, init_state=(params, opt), batch_for_step=bfs,
+        n_steps=8, guard_kwargs={"failure_hook": hook})
+    assert injected == [2, 5]
+    assert stats.retries == 2 and stats.failures == 2
+    assert len(stats.times) == 8  # every step eventually succeeded
+
+
+def test_retry_exhaustion_raises():
+    def always_fail(s, attempt):
+        return True
+
+    guard = StepGuard(lambda *a: None, max_retries=2,
+                      failure_hook=always_fail)
+    try:
+        guard(0)
+        assert False, "should have raised"
+    except TransientError:
+        pass
+    assert guard.stats.failures == 3  # initial + 2 retries
+
+
+def test_checkpoint_resume_is_exact():
+    """Train 10 steps straight vs 5 + checkpoint + restore + 5 — identical
+    (the data pipeline is a pure function of step, so resume is exact)."""
+    _, _, params, opt, step, bfs = _setup()
+    pA, oA, _ = run_training(train_step=step, init_state=(params, opt),
+                             batch_for_step=bfs, n_steps=10)
+    with tempfile.TemporaryDirectory() as d:
+        ck = CheckpointManager(d)
+        p5, o5, _ = run_training(train_step=step, init_state=(params, opt),
+                                 batch_for_step=bfs, n_steps=5)
+        ck.save(5, {"params": p5, "opt": o5})
+        rest = ck.restore(5, {"params": p5, "opt": o5})
+        pB, oB, _ = run_training(
+            train_step=step, init_state=(rest["params"], rest["opt"]),
+            batch_for_step=bfs, n_steps=10, start_step=5)
+    for a, b in zip(jax.tree_util.tree_leaves(pA),
+                    jax.tree_util.tree_leaves(pB)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_gc_and_async():
+    _, _, params, opt, step, bfs = _setup()
+    with tempfile.TemporaryDirectory() as d:
+        ck = CheckpointManager(d, keep=2)
+        for s in (1, 2, 3, 4):
+            ck.save(s, {"p": params}, async_=True)
+        ck.wait()
+        assert ck.all_steps() == [3, 4]
+        assert ck.latest_step() == 4
+
+
+def test_straggler_detection():
+    import time
+
+    calls = {"n": 0}
+
+    def slow_step():
+        calls["n"] += 1
+        if calls["n"] == 7:
+            time.sleep(0.25)
+        return None
+
+    guard = StepGuard(lambda: slow_step())
+    for s in range(8):
+        guard(s)
+    assert guard.stats.stragglers(factor=5.0) >= 1
