@@ -1,6 +1,18 @@
 """Shared benchmark utilities: the paper's GMM generator, synthetic analogs
 of the six real datasets (the container is offline), timing and working-set
-measurement."""
+measurement, and the one-line-per-row CSV emitter every harness uses.
+
+Conventions (docs/BENCHMARKS.md):
+  * every harness prints exactly one ``# <name>: <header>`` line followed by
+    ``<name>,<row>`` CSV lines — grep a name to extract one table;
+  * timings come from :func:`timed` (jit warmup excluded, device sync
+    included); memory is :func:`live_mb` (live device buffers, the analog of
+    the paper's R memory profiling);
+  * sweeps worth keeping across runs are also written as JSON artifacts to
+    benchmarks/results/ (``BENCH_*.json`` for benchmark trajectories, as in
+    bench_distributed; tagged per-cell files under results/hillclimb and
+    results/dryrun for the LM stack).
+"""
 from __future__ import annotations
 
 import time
@@ -24,6 +36,8 @@ def gmm_sample(n: int, seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
 
 @dataclass(frozen=True)
 class DatasetSpec:
+    """Shape of one of the paper's Table-3 real datasets: n rows, d numeric
+    features, k clusters requested in the paper's experiments."""
     name: str
     n: int
     d: int
@@ -45,6 +59,8 @@ PAPER_DATASETS = [
 
 
 def dataset_analog(spec: DatasetSpec, seed: int = 0, max_n: int = 0) -> np.ndarray:
+    """Synthetic stand-in for a Table-3 dataset: a k-component Gaussian
+    mixture with the spec's (n, d, k); ``max_n`` truncates for quick mode."""
     n = min(spec.n, max_n) if max_n else spec.n
     rng = np.random.default_rng(seed)
     centers = rng.normal(scale=4.0, size=(spec.k, spec.d))
@@ -74,6 +90,8 @@ def timed(fn: Callable, *args, warmup: int = 1, iters: int = 1, **kw):
 
 
 def print_csv(name: str, rows: list, header: str) -> None:
+    """Emit one benchmark table: a ``# name: header`` comment line, then one
+    ``name,<row>`` line per row (grep the name to extract the table)."""
     print(f"# {name}: {header}")
     for r in rows:
         print(f"{name}," + ",".join(str(x) for x in r))

@@ -1,13 +1,29 @@
 """Benchmark driver: one harness per paper table (+ the LM-stack micro
-benches and the dry-run roofline summary). Default mode is sized for a CPU
-container; pass --full for paper-scale sweeps.
+benches, the distributed weak-scaling sweep, and the dry-run roofline
+summary). Default mode is sized for a CPU container; pass --full for
+paper-scale sweeps and --distributed for the multi-device IHTC sweep
+(subprocesses with forced CPU device counts).
 
-Output: `name,<row>` CSV per table (see each bench module's header line).
+Output: `name,<row>` CSV per table on stdout (see each bench module's
+header line). Harnesses that sweep an axis worth keeping (currently
+bench_distributed) additionally record a trajectory artifact under
+benchmarks/results/BENCH_<name>.json; this driver prints a one-line summary
+per artifact at the end of every run. Schemas are documented in
+docs/BENCHMARKS.md.
 """
 from __future__ import annotations
 
 import argparse
 import os
+import sys
+
+# make `python benchmarks/run.py` work from anywhere: the repo root (for the
+# benchmarks package) and src/ (for repro) both go on sys.path
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_REPO, os.path.join(_REPO, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
 import time
 
 import jax
@@ -61,11 +77,30 @@ def _kernel_microbench():
     print_csv("kernel_microbench", rows, "kernel,ms,ns_per_point")
 
 
+def _bench_json_summary() -> None:
+    """One summary line per benchmarks/results/BENCH_*.json trajectory."""
+    import glob
+    import json
+
+    results = os.path.join(os.path.dirname(__file__), "results")
+    for path in sorted(glob.glob(os.path.join(results, "BENCH_*.json"))):
+        with open(path) as f:
+            art = json.load(f)
+        rows = art.get("rows", [])
+        xs = ",".join(str(r.get("devices", "?")) for r in rows)
+        secs = ",".join(str(r.get("seconds", "?")) for r in rows)
+        print(f"# {os.path.basename(path)}: {art.get('name')} "
+              f"mode={art.get('mode')} devices=[{xs}] seconds=[{secs}]")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sweeps (hours on CPU)")
     ap.add_argument("--max-n", type=int, default=0)
+    ap.add_argument("--distributed", action="store_true",
+                    help="also run the multi-device weak-scaling sweep "
+                         "(subprocesses with forced CPU device counts)")
     args, _ = ap.parse_known_args()
     quick = not args.full
 
@@ -84,6 +119,10 @@ def main() -> None:
         bench_table9_dbscan.run(max_n=4_000, ms=(1, 2))
         _lm_microbench()
         _kernel_microbench()
+        if args.distributed:
+            from benchmarks import bench_distributed
+
+            bench_distributed.run(n_per_device=4096)
     else:
         mx = args.max_n or 1_000_000
         bench_table1_kmeans.run(
@@ -95,6 +134,10 @@ def main() -> None:
         bench_table9_dbscan.run(max_n=min(mx, 50_000))
         _lm_microbench()
         _kernel_microbench()
+        if args.distributed:
+            from benchmarks import bench_distributed
+
+            bench_distributed.run(n_per_device=min(mx, 65_536))
 
     # dry-run roofline summary, if artifacts exist
     results = os.path.join(os.path.dirname(__file__), "results", "dryrun")
@@ -106,6 +149,7 @@ def main() -> None:
         skip = sum(1 for c in cells if c["status"] == "skip")
         err = sum(1 for c in cells if c["status"] not in ("ok", "skip"))
         print(f"# dryrun_cells: ok={ok} skip={skip} error={err}")
+    _bench_json_summary()
     print(f"# total_bench_seconds,{round(time.time() - t0, 1)}")
 
 

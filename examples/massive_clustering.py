@@ -1,10 +1,12 @@
-"""Distributed IHTC: hierarchical (sharded) ITIS over a device mesh.
+"""Distributed IHTC: the end-to-end sharded ITIS pipeline over a data mesh.
 
-Demonstrates the 1000-node pattern at laptop scale: each shard runs TC
-locally (ring-kNN available for exact cross-shard graphs), reduces to
-weighted prototypes, prototypes all-gather, the host driver iterates, and
-the final small prototype set is clustered with weighted k-means. The
-composition is exact ITIS semantics — ITIS is already hierarchical.
+Demonstrates the pod pattern at laptop scale: a point stream is fed onto
+the mesh chunk-by-chunk (no full-size host buffer), every ITIS level runs
+under shard_map — ring-kNN TC, distributed Luby-MIS seeding, cross-shard
+prototype reduction, rebalance — and the final prototype set is clustered
+by mesh-aware weighted k-means without ever gathering points to one
+device (DESIGN.md §4). The result is bit-identical to the single-device
+``ihtc()`` when the level sizes divide the device count evenly.
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         python examples/massive_clustering.py --n 65536
@@ -13,24 +15,21 @@ import argparse
 import os
 import sys
 
-if "--xla-devices" in sys.argv or os.environ.get("XLA_FLAGS") is None:
+if os.environ.get("XLA_FLAGS") is None:
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 sys.path.insert(0, "src")
 
-import functools
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.experimental.shard_map import shard_map
-from jax.sharding import PartitionSpec as P
 
 
 def main():
-    from repro.cluster.kmeans import kmeans
     from repro.cluster.metrics import clustering_accuracy
-    from repro.core import itis_step
+    from repro.core.distributed import ihtc_sharded, make_data_mesh
+    from repro.data import PointStreamConfig, point_chunks, stream_to_mesh
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=65_536)
@@ -39,46 +38,36 @@ def main():
     args = ap.parse_args()
 
     n_dev = len(jax.devices())
-    mesh = jax.make_mesh((n_dev,), ("data",))
+    mesh = make_data_mesh()
     print(f"devices: {n_dev}; n = {args.n}; t* = {args.t}; m = {args.m}")
 
-    rng = np.random.default_rng(0)
-    mus = np.array([[1, 2], [7, 8], [3, 5]], float)
-    sds = np.array([[1, 0.5], [2, 1], [3, 4]], float) ** 0.5
-    comp = rng.choice(3, size=args.n, p=[0.5, 0.3, 0.2])
-    x = jnp.asarray(mus[comp] + rng.normal(size=(args.n, 2)) * sds[comp],
-                    jnp.float32)
-
-    # --- sharded ITIS level: per-shard TC + prototype reduction ---
-    def level(x_loc, mass_loc, valid_loc, t):
-        out = itis_step(x_loc, mass_loc, valid_loc, t,
-                        key=jax.random.PRNGKey(0), weighted=True, impl="ref")
-        return out.protos, out.mass, out.valid
-
+    # --- streamed ingestion: chunks of the paper's §4 GMM onto the mesh ---
+    cfg = PointStreamConfig(n=args.n, d=2, chunk=16_384, seed=0, kind="gmm")
     t0 = time.perf_counter()
-    cur_x, cur_m, cur_v = x, jnp.ones((args.n,)), jnp.ones((args.n,), bool)
-    for lvl in range(args.m):
-        fn = shard_map(
-            functools.partial(level, t=args.t), mesh=mesh,
-            in_specs=(P("data", None), P("data"), P("data")),
-            out_specs=(P("data", None), P("data"), P("data")),
-        )
-        cur_x, cur_m, cur_v = fn(cur_x, cur_m, cur_v)
-        n_valid = int(jnp.sum(cur_v))
-        print(f"  level {lvl + 1}: {n_valid} prototypes "
-              f"(mass check: {float(jnp.sum(jnp.where(cur_v, cur_m, 0))):.0f})")
+    x, valid = stream_to_mesh(point_chunks(cfg), mesh, cfg.n, cfg.d)
+    print(f"ingest: {time.perf_counter() - t0:.2f}s "
+          f"({-(-cfg.n // cfg.chunk)} chunks → {x.sharding.spec})")
 
-    # --- final: weighted k-means on the gathered prototypes ---
-    r = kmeans(cur_x, 3, valid=cur_v, weights=cur_m,
-               key=jax.random.PRNGKey(1))
+    # --- end-to-end sharded IHTC ---
+    t0 = time.perf_counter()
+    res = ihtc_sharded(x, args.t, args.m, "kmeans", k=3, valid=valid,
+                       mesh=mesh, key=jax.random.PRNGKey(0))
+    jax.block_until_ready(res.labels)
     sec = time.perf_counter() - t0
-    # back out through nearest-prototype assignment for scoring
-    from repro.kernels import ops
+    print(f"sharded IHTC: {sec:.2f}s, "
+          f"{int(res.n_prototypes)} prototypes at level {args.m}")
 
-    d = ops.pairwise_sq_l2(x, r.centers, impl="ref")
-    labels = np.asarray(jnp.argmin(d, axis=1))
-    acc = clustering_accuracy(comp, labels, 3)
-    print(f"hierarchical IHTC: {sec:.2f}s total, accuracy {acc:.4f}")
+    # --- score against the generative component labels (the stream is a
+    # pure function of (seed, chunk), so truth is regenerable, not stored) ---
+    rng_truth = []
+    for i in range(-(-cfg.n // cfg.chunk)):
+        rng = np.random.default_rng(np.random.SeedSequence([cfg.seed, i]))
+        c = min(cfg.chunk, cfg.n - i * cfg.chunk)
+        rng_truth.append(rng.choice(3, size=c, p=[0.5, 0.3, 0.2]))
+    comp = np.concatenate(rng_truth)
+    lab = np.asarray(res.labels)[np.asarray(valid)]
+    acc = clustering_accuracy(comp, lab, 3)
+    print(f"accuracy vs generative components: {acc:.4f}")
 
 
 if __name__ == "__main__":

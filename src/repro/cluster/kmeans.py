@@ -4,6 +4,12 @@ This is the paper's primary "sophisticated" backend. Supports sample weights
 (prototype masses from ITIS) so that k-means on prototypes optimizes the same
 objective as k-means on the original units would (the mass-correct variant);
 with unit weights it reproduces the paper's plain k-means-on-prototypes.
+
+Lloyd statistics are accumulated with ``ops.blocked_segment_sum`` — a fixed
+``n_blocks``-wide reduction tree — so the mesh-aware twin in
+:mod:`repro.core.distributed` (replicated centroids, sharded rows, ordered
+fold of all-gathered per-shard partials) produces bit-identical centers and
+labels (DESIGN.md §4.3).
 """
 from __future__ import annotations
 
@@ -14,6 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
+
+STAT_BLOCKS = 8  # canonical reduction width; must match the distributed twin
 
 
 class KMeansResult(NamedTuple):
@@ -46,7 +54,7 @@ def _plus_plus_init(x, w, valid, k, key, impl):
     return centers
 
 
-@functools.partial(jax.jit, static_argnames=("k", "iters", "impl"))
+@functools.partial(jax.jit, static_argnames=("k", "iters", "impl", "n_blocks"))
 def kmeans(
     x: jax.Array,
     k: int,
@@ -57,6 +65,7 @@ def kmeans(
     iters: int = 100,
     tol: float = 1e-6,
     impl: str = "auto",
+    n_blocks: int = STAT_BLOCKS,
 ) -> KMeansResult:
     n, d = x.shape
     if valid is None:
@@ -83,7 +92,8 @@ def kmeans(
         centers, _, _, it = state
         lab, _ = assign(centers)
         lab_safe = jnp.where(valid, lab, k)  # dropped by segment_sum
-        sums, mass = ops.segment_sum(x, lab_safe, k, weights=w, impl=impl)
+        sums, mass = ops.blocked_segment_sum(
+            x, lab_safe, k, weights=w, n_blocks=n_blocks, impl=impl)
         new = jnp.where(
             (mass > 0)[:, None], sums / jnp.maximum(mass, 1e-30)[:, None], centers
         ).astype(x.dtype)

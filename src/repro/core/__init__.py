@@ -1,6 +1,13 @@
 """The paper's primary contribution: TC / ITIS / IHTC, TPU-native in JAX."""
+from repro.core.distributed import (  # noqa: F401
+    ihtc_sharded,
+    itis_sharded,
+    kmeans_sharded,
+    make_data_mesh,
+    tc_sharded,
+)
 from repro.core.ihtc import IHTCResult, ihtc  # noqa: F401
-from repro.core.itis import ITISResult, itis, itis_step  # noqa: F401
+from repro.core.itis import ITISResult, itis, itis_step, level_sizes  # noqa: F401
 from repro.core.knn import knn_graph, knn_graph_blocked, ring_knn  # noqa: F401
 from repro.core.prototypes import (  # noqa: F401
     PrototypeSet,

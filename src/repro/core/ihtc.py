@@ -55,6 +55,8 @@ def ihtc(
     key: Optional[jax.Array] = None,
     impl: str = "auto",
     knn_block: int = 0,
+    mesh=None,
+    axis_name: str = "data",
     **backend_kwargs,
 ) -> IHTCResult:
     """Full IHTC pipeline (host driver).
@@ -63,7 +65,22 @@ def ihtc(
     False). ``use_mass_in_backend`` feeds prototype masses as sample weights
     to the backend clusterer (paper runs backends unweighted; mass-weighting
     is the statistically consistent variant — both supported).
+
+    Passing ``mesh`` dispatches to the multi-device pipeline
+    (:func:`repro.core.distributed.ihtc_sharded`): every level is sharded
+    over the mesh's ``axis_name`` axis and the points are never gathered to
+    one device. See DESIGN.md §4 for the determinism contract between the
+    two paths.
     """
+    if mesh is not None:
+        from repro.core.distributed import ihtc_sharded  # lazy: no cycle
+
+        return ihtc_sharded(
+            x, t, m, backend, mesh=mesh, axis_name=axis_name,
+            weights=weights, weighted=weighted,
+            use_mass_in_backend=use_mass_in_backend, key=key, impl=impl,
+            **backend_kwargs,
+        )
     if key is None:
         key = jax.random.PRNGKey(0)
     key_itis, key_backend = jax.random.split(key)

@@ -4,7 +4,10 @@ Repeat {TC at threshold t* → collapse clusters to prototypes} m times.
 Each iteration shrinks the point set by ≥ t*, so ITIS level l lives in a
 *static* padded buffer of size n₀ // (t*)^l — fully jit-compatible fixed
 shapes with validity masks (one XLA program per level shape; the geometric
-shrink means total compile+run cost is dominated by level 0).
+shrink means total compile+run cost is dominated by level 0). See
+DESIGN.md §3 for the padding scheme and DESIGN.md §4 for the multi-device
+twin of this driver (:func:`repro.core.distributed.itis_sharded`), which
+shares :func:`level_sizes` so both drivers agree on every buffer shape.
 
 The host-level driver (`itis`) orchestrates the per-level jitted step and
 keeps the level assignment maps needed for IHTC back-out.
@@ -12,13 +15,40 @@ keeps the level assignment maps needed for IHTC back-out.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional, Sequence
+from typing import List, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.prototypes import PrototypeSet, reduce_to_prototypes
+from repro.core.prototypes import (
+    REDUCE_BLOCKS,
+    PrototypeSet,
+    reduce_to_prototypes,
+)
 from repro.core.tc import TCResult, threshold_clustering
+
+
+def round_up(n: int, multiple: int) -> int:
+    """Smallest multiple of ``multiple`` that is ≥ ``n``."""
+    if multiple <= 1:
+        return n
+    return ((n + multiple - 1) // multiple) * multiple
+
+
+def level_sizes(n0: int, t: int, m: int, *, multiple: int = 1) -> List[int]:
+    """Static buffer size of every ITIS level, levels 0..m inclusive.
+
+    ``multiple`` pads each level to a multiple (1 = the paper-exact sizes;
+    the sharded driver uses the reduction-block count so every level splits
+    evenly across devices). Both the single-device and the distributed
+    drivers derive their shapes from this one function: when the unpadded
+    sizes already satisfy the multiple, the two compute in identical buffers
+    and their results agree bit-for-bit (DESIGN.md §4.3).
+    """
+    sizes = [round_up(n0, multiple)]
+    for _ in range(m):
+        sizes.append(round_up(max(sizes[-1] // t, 1), multiple))
+    return sizes
 
 
 class ITISLevelOut(NamedTuple):
@@ -37,7 +67,10 @@ class ITISResult(NamedTuple):
     n_prototypes: jax.Array           # () int32 — valid count at final level
 
 
-@functools.partial(jax.jit, static_argnames=("t", "weighted", "impl", "knn_block"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("t", "weighted", "impl", "knn_block", "n_out", "n_blocks"),
+)
 def itis_step(
     x: jax.Array,
     mass: jax.Array,
@@ -48,15 +81,23 @@ def itis_step(
     weighted: bool = False,
     impl: str = "auto",
     knn_block: int = 0,
+    n_out: Optional[int] = None,
+    n_blocks: int = REDUCE_BLOCKS,
 ) -> ITISLevelOut:
-    """One ITIS level: TC on the valid points, reduce to ≤ n//t prototypes."""
+    """One ITIS level: TC on the valid points, reduce to ≤ n//t prototypes.
+
+    ``n_out`` overrides the output buffer size (default ``max(n // t, 1)``;
+    the sharded driver passes a device-padded size from ``level_sizes``).
+    """
     n = x.shape[0]
-    n_out = max(n // t, 1)
+    if n_out is None:
+        n_out = max(n // t, 1)
     tc: TCResult = threshold_clustering(
         x, t, valid=valid, key=key, impl=impl, knn_block=knn_block
     )
     ps: PrototypeSet = reduce_to_prototypes(
-        x, tc.labels, n_out, weights=mass, weighted=weighted, impl=impl
+        x, tc.labels, n_out, weights=mass, weighted=weighted, impl=impl,
+        n_blocks=n_blocks,
     )
     return ITISLevelOut(ps.x, ps.mass, ps.valid, tc.labels, tc.n_clusters)
 
@@ -72,17 +113,30 @@ def itis(
     impl: str = "auto",
     knn_block: int = 0,
     min_points: int = 4,
+    pad_multiple: int = 1,
+    n_blocks: int = REDUCE_BLOCKS,
 ) -> ITISResult:
     """Run m ITIS iterations (host driver).
 
     Stops early if fewer than ``max(min_points, 2*t)`` valid points remain
     (further reduction would collapse everything into one cluster).
+    ``pad_multiple`` > 1 pads every level buffer to that multiple (used to
+    shape-match the sharded driver; results are unchanged semantically but
+    padding alters TC's random seed-priority draw, so only shape-identical
+    runs are bit-comparable — see DESIGN.md §4.3).
     """
     if key is None:
         key = jax.random.PRNGKey(0)
     n = x.shape[0]
     mass = jnp.ones((n,), jnp.float32) if weights is None else weights.astype(jnp.float32)
     valid = jnp.ones((n,), bool)
+
+    sizes = level_sizes(n, t, m, multiple=pad_multiple)
+    if sizes[0] != n:
+        pad = sizes[0] - n
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        mass = jnp.pad(mass, (0, pad))
+        valid = jnp.pad(valid, (0, pad))
 
     assignments = []
     cur_x, cur_m, cur_v = x, mass, valid
@@ -95,6 +149,7 @@ def itis(
         out = itis_step(
             cur_x, cur_m, cur_v, t,
             key=sub, weighted=weighted, impl=impl, knn_block=knn_block,
+            n_out=sizes[level + 1], n_blocks=n_blocks,
         )
         assignments.append(out.assignment)
         cur_x, cur_m, cur_v = out.protos, out.mass, out.valid

@@ -22,6 +22,26 @@ import jax.numpy as jnp
 from repro.kernels import ops
 
 
+def _pvary(x: jax.Array, axis_name: str) -> jax.Array:
+    """Mark a replicated value as device-varying along ``axis_name``.
+
+    jax ≥ 0.5 has ``jax.lax.pvary`` for this; on older releases shard_map's
+    replication checker accepts the value as-is, so identity is correct.
+    """
+    fn = getattr(jax.lax, "pvary", None)
+    return fn(x, (axis_name,)) if fn is not None else x
+
+
+def _axis_size(axis_name: str) -> int:
+    """Static size of a shard_map mesh axis (works back to jax 0.4.x).
+
+    ``jax.lax.axis_size`` only exists on newer releases; ``psum`` of the
+    literal 1 constant-folds to the same static int everywhere.
+    """
+    fn = getattr(jax.lax, "axis_size", None)
+    return fn(axis_name) if fn is not None else jax.lax.psum(1, axis_name)
+
+
 def knn_graph(
     x: jax.Array,
     k: int,
@@ -112,8 +132,8 @@ def ring_knn(
     """
     n_local = x_local.shape[0]
     if valid is None:
-        valid = jax.lax.pvary(jnp.ones((n_local,), bool), (axis_name,))
-    p = jax.lax.axis_size(axis_name)
+        valid = _pvary(jnp.ones((n_local,), bool), axis_name)
+    p = _axis_size(axis_name)
     me = jax.lax.axis_index(axis_name)
     perm = [(i, (i - 1) % p) for i in range(p)]  # block travels to lower rank
 
@@ -130,8 +150,8 @@ def ring_knn(
         return bd, bi, keys, kval
 
     init = (
-        jax.lax.pvary(jnp.full((n_local, k), jnp.inf, jnp.float32), (axis_name,)),
-        jax.lax.pvary(jnp.full((n_local, k), -1, jnp.int32), (axis_name,)),
+        _pvary(jnp.full((n_local, k), jnp.inf, jnp.float32), axis_name),
+        _pvary(jnp.full((n_local, k), -1, jnp.int32), axis_name),
         x_local,
         valid,
     )

@@ -9,6 +9,13 @@ import jax.numpy as jnp
 
 from repro.kernels import ops
 
+# Canonical reduction-tree width for prototype/centroid accumulations.
+# Pinning the block count (instead of letting it follow the device count or
+# XLA's scatter order) makes reductions device-layout-invariant, which is
+# what lets the sharded pipeline in repro.core.distributed match the
+# single-device driver bit-for-bit (DESIGN.md §4.3).
+REDUCE_BLOCKS = 8
+
 
 class PrototypeSet(NamedTuple):
     x: jax.Array        # (n_max, d) prototype coordinates (padded)
@@ -16,7 +23,9 @@ class PrototypeSet(NamedTuple):
     valid: jax.Array    # (n_max,) bool — real prototype vs padding
 
 
-@functools.partial(jax.jit, static_argnames=("n_max", "weighted", "impl"))
+@functools.partial(
+    jax.jit, static_argnames=("n_max", "weighted", "impl", "n_blocks")
+)
 def reduce_to_prototypes(
     x: jax.Array,
     labels: jax.Array,
@@ -25,6 +34,7 @@ def reduce_to_prototypes(
     weights: Optional[jax.Array] = None,
     weighted: bool = True,
     impl: str = "auto",
+    n_blocks: int = REDUCE_BLOCKS,
 ) -> PrototypeSet:
     """Collapse clusters to centroid prototypes.
 
@@ -33,20 +43,24 @@ def reduce_to_prototypes(
     of the points at this level); ``weighted=True`` carries original-unit mass
     through ITIS levels (mass-correct centroids — the beyond-paper fix).
     ``mass`` always accumulates true unit counts for the size guarantee and
-    for weighted clustering of the prototypes downstream.
+    for weighted clustering of the prototypes downstream. ``n_blocks`` pins
+    the accumulation order (see ``ops.blocked_segment_sum``).
     """
     n = x.shape[0]
     w = jnp.ones((n,), jnp.float32) if weights is None else weights.astype(jnp.float32)
     safe_labels = jnp.where(labels >= 0, labels, n_max).astype(jnp.int32)
 
     if weighted:
-        sums, denom = ops.segment_sum(x, safe_labels, n_max, weights=w, impl=impl)
+        sums, denom = ops.blocked_segment_sum(
+            x, safe_labels, n_max, weights=w, n_blocks=n_blocks, impl=impl)
         mass = denom
     else:
         ones = jnp.where(labels >= 0, 1.0, 0.0).astype(jnp.float32)
-        sums, denom = ops.segment_sum(x, safe_labels, n_max, weights=ones, impl=impl)
-        _, mass = ops.segment_sum(
-            jnp.zeros((n, 1), x.dtype), safe_labels, n_max, weights=w, impl=impl
+        sums, denom = ops.blocked_segment_sum(
+            x, safe_labels, n_max, weights=ones, n_blocks=n_blocks, impl=impl)
+        _, mass = ops.blocked_segment_sum(
+            jnp.zeros((n, 1), x.dtype), safe_labels, n_max, weights=w,
+            n_blocks=n_blocks, impl=impl,
         )
     protos = sums / jnp.maximum(denom, 1e-12)[:, None]
     valid = denom > 0

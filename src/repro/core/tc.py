@@ -68,10 +68,16 @@ def _closed2_max(p: jax.Array, idx: jax.Array, idx_ok: jax.Array) -> jax.Array:
     return jnp.maximum(q1, _push_max(q1, idx, idx_ok))
 
 
-def _luby_mis_sq(
-    priorities: jax.Array, idx: jax.Array, idx_ok: jax.Array, active0: jax.Array
-) -> jax.Array:
-    """Maximal independent set of NG² via parallel local-maxima rounds."""
+def luby_mis_rounds(priorities: jax.Array, active0: jax.Array, closed2_max) -> jax.Array:
+    """Maximal independent set via parallel local-maxima rounds.
+
+    ``closed2_max(p)`` must return, per vertex, the max of ``p`` over that
+    vertex's closed ≤2-hop neighbourhood. The single-device path passes
+    :func:`_closed2_max` over the local (n, k) adjacency; the sharded path
+    (repro.core.distributed) passes a cross-shard pmax-combining operator —
+    both run the *same* round structure here, which is what keeps the two
+    executions seed-set-identical (DESIGN.md §4.2).
+    """
 
     def cond(state):
         active, _ = state
@@ -80,12 +86,12 @@ def _luby_mis_sq(
     def body(state):
         active, seed = state
         p_eff = jnp.where(active, priorities, _NEG)
-        m2 = _closed2_max(p_eff, idx, idx_ok)
+        m2 = closed2_max(p_eff)
         newly = active & (p_eff == m2)
         seed = seed | newly
         # deactivate the closed 2-hop neighbourhood of the new seeds
         b = jnp.where(newly, jnp.int32(1), jnp.int32(0))
-        covered = _closed2_max(b, idx, idx_ok) > 0
+        covered = closed2_max(b) > 0
         active = active & ~covered & ~newly
         return active, seed
 
@@ -94,6 +100,26 @@ def _luby_mis_sq(
     seed0 = active0 & False
     _, seed = jax.lax.while_loop(cond, body, (active0, seed0))
     return seed
+
+
+def _luby_mis_sq(
+    priorities: jax.Array, idx: jax.Array, idx_ok: jax.Array, active0: jax.Array
+) -> jax.Array:
+    """MIS of NG² on one device: local-adjacency ``closed2`` plug-in."""
+    return luby_mis_rounds(
+        priorities, active0, lambda p: _closed2_max(p, idx, idx_ok)
+    )
+
+
+def seed_priorities(key: jax.Array, n: int) -> jax.Array:
+    """Fixed random priorities: ranks of a hashed permutation (deterministic).
+
+    Shared by the single-device and sharded TC paths — identical keys and
+    buffer sizes give identical priorities, hence identical MIS seed sets.
+    """
+    u = jax.random.uniform(key, (n,))
+    order = jnp.argsort(u)
+    return jnp.zeros((n,), jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
 
 
 def _sq_dist_rows(x: jax.Array, i_rows: jax.Array, j_rows: jax.Array) -> jax.Array:
@@ -141,10 +167,7 @@ def threshold_clustering(
     idx = jnp.where(valid[:, None], idx, -1)           # invalid rows: no out-edges
     idx_ok = idx >= 0                                   # kNN never returns invalid keys
 
-    # fixed random priorities = ranks of a hashed permutation (deterministic)
-    u = jax.random.uniform(key, (n,))
-    order = jnp.argsort(u)
-    priorities = jnp.zeros((n,), jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
+    priorities = seed_priorities(key, n)
 
     is_seed = _luby_mis_sq(priorities, idx, idx_ok, valid)
 

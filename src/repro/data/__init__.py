@@ -1,2 +1,10 @@
 """Data path: deterministic synthetic pipeline + ITIS instance selection."""
-from repro.data.pipeline import DataConfig, batch_iterator, make_batch  # noqa: F401
+from repro.data.pipeline import (  # noqa: F401
+    DataConfig,
+    PointStreamConfig,
+    batch_iterator,
+    make_batch,
+    point_chunk,
+    point_chunks,
+    stream_to_mesh,
+)

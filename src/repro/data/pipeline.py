@@ -5,15 +5,23 @@ tolerance relies on: a restart at step k regenerates exactly the batches a
 healthy run would have seen, with zero pipeline state to checkpoint. Tokens
 follow a Zipfian unigram mixed with a hidden Markov structure so the LM loss
 actually has signal to descend (integration tests assert loss decreases).
+
+The same contract covers the clustering workload: ``point_chunks`` generates
+a massive point cloud as a pure function of (seed, chunk index), and
+``stream_to_mesh`` feeds those host-sized chunks shard-by-shard onto the
+``data`` mesh axis — each device slab is placed as soon as it fills, so no
+host- or device-side buffer ever holds the full dataset (DESIGN.md §4.4).
+The result reuses the validity-mask padding scheme of the ITIS levels.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterable, Iterator, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models.frontends import VISION_PREFIX_TOKENS
@@ -81,3 +89,136 @@ def batch_iterator(
     while True:
         yield make_batch(cfg, shape, step, dcfg=dcfg, **kw)
         step += 1
+
+
+# ---------------------------------------------------------------------------
+# Massive point streams for the clustering pipeline
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PointStreamConfig:
+    """A deterministic synthetic point cloud, generated chunk by chunk.
+
+    ``kind="gmm"`` draws the paper's §4 mixture (3 bivariate Gaussians,
+    weights .5/.3/.2, d forced to 2); ``kind="blobs"`` draws a ``k``-blob
+    mixture in ``d`` dimensions (the Table-3 dataset analogs). Each chunk is
+    a pure function of (seed, chunk index) — restartable, nothing to
+    checkpoint, and chunks can be generated on different hosts.
+    """
+    n: int
+    d: int = 2
+    chunk: int = 65_536
+    seed: int = 0
+    kind: str = "gmm"
+    k: int = 4
+
+
+_GMM_MUS = np.array([[1, 2], [7, 8], [3, 5]], float)
+_GMM_SDS = np.array([[1, 0.5], [2, 1], [3, 4]], float) ** 0.5
+
+
+def point_chunk(cfg: PointStreamConfig, chunk_idx: int) -> np.ndarray:
+    """Chunk ``chunk_idx`` of the stream (pure function; float32 (c, d))."""
+    start = chunk_idx * cfg.chunk
+    c = min(cfg.chunk, cfg.n - start)
+    if c <= 0:
+        return np.zeros((0, cfg.d), np.float32)
+    rng = np.random.default_rng(np.random.SeedSequence([cfg.seed, chunk_idx]))
+    if cfg.kind == "gmm":
+        comp = rng.choice(3, size=c, p=[0.5, 0.3, 0.2])
+        x = _GMM_MUS[comp] + rng.normal(size=(c, 2)) * _GMM_SDS[comp]
+    elif cfg.kind == "blobs":
+        centers_rng = np.random.default_rng(cfg.seed)  # shared across chunks
+        centers = centers_rng.normal(scale=4.0, size=(cfg.k, cfg.d))
+        scales = centers_rng.uniform(0.5, 1.5, size=(cfg.k, cfg.d))
+        comp = rng.integers(0, cfg.k, size=c)
+        x = centers[comp] + rng.normal(size=(c, cfg.d)) * scales[comp]
+    else:
+        raise ValueError(f"unknown point-stream kind {cfg.kind!r}")
+    return x.astype(np.float32)
+
+
+def point_chunks(cfg: PointStreamConfig) -> Iterator[np.ndarray]:
+    """All chunks of the stream, in order."""
+    n_chunks = -(-cfg.n // cfg.chunk)
+    for i in range(n_chunks):
+        yield point_chunk(cfg, i)
+
+
+def stream_to_mesh(
+    chunks: Iterable[np.ndarray],
+    mesh,
+    n_total: int,
+    d: int,
+    *,
+    axis_name: str = "data",
+    pad_multiple: int = 0,
+    dtype=jnp.float32,
+) -> Tuple[jax.Array, jax.Array]:
+    """Feed host-sized chunks onto the mesh without a full-size buffer.
+
+    Fills one device-slab-sized host buffer at a time and places it on its
+    device the moment it is full, then assembles the global row-sharded
+    array with ``make_array_from_single_device_arrays``. Peak host memory is
+    one slab + one chunk; peak per-device memory is one slab — so datasets
+    larger than any single device's memory stream straight onto the mesh.
+
+    Returns ``(x, valid)``: x is (n_pad, d) sharded ``P(axis_name, None)``,
+    valid is the (n_pad,) row mask (padding rows False), the same scheme the
+    ITIS level buffers use. ``pad_multiple`` defaults to the canonical
+    reduction block count so the sharded ITIS driver needs no re-padding.
+    """
+    from repro.core.itis import round_up
+    from repro.core.prototypes import REDUCE_BLOCKS
+
+    p = mesh.shape[axis_name]
+    mult = pad_multiple or max(REDUCE_BLOCKS, p)
+    mult = round_up(mult, p)
+    n_pad = round_up(n_total, mult)
+    per = n_pad // p
+    devices = list(np.asarray(mesh.devices).reshape(-1))
+
+    x_shards, v_shards = [], []
+    buf = np.zeros((per, d), np.float32)
+    filled = 0
+
+    def flush():
+        nonlocal buf, filled
+        dev = devices[len(x_shards)]
+        row0 = len(x_shards) * per
+        n_valid_rows = int(np.clip(n_total - row0, 0, per))
+        v = np.zeros((per,), bool)
+        v[:n_valid_rows] = True
+        # device_put straight from the host numpy buffer: staging through
+        # jnp.asarray would commit every slab to the default device first,
+        # breaking the one-slab-per-device memory bound
+        x_shards.append(jax.device_put(buf.astype(np.dtype(dtype)), dev))
+        v_shards.append(jax.device_put(v, dev))
+        buf = np.zeros((per, d), np.float32)
+        filled = 0
+
+    seen = 0
+    for chunk in chunks:
+        chunk = np.asarray(chunk, np.float32)
+        pos = 0
+        while pos < len(chunk):
+            take = min(per - filled, len(chunk) - pos)
+            buf[filled:filled + take] = chunk[pos:pos + take]
+            filled += take
+            pos += take
+            seen += take
+            if filled == per:
+                flush()
+    if seen != n_total:
+        raise ValueError(f"stream yielded {seen} rows, expected {n_total}")
+    while len(x_shards) < p:  # trailing padding slabs
+        flush()
+
+    x_sharding = NamedSharding(mesh, P(axis_name, None))
+    v_sharding = NamedSharding(mesh, P(axis_name))
+    x = jax.make_array_from_single_device_arrays((n_pad, d), x_sharding,
+                                                 x_shards)
+    valid = jax.make_array_from_single_device_arrays((n_pad,), v_sharding,
+                                                     v_shards)
+    return x, valid

@@ -77,6 +77,50 @@ def segment_sum(
     return ref.segment_sum(x, segment_ids, num_segments, weights=weights)
 
 
+def blocked_segment_sum(
+    x: jax.Array,
+    segment_ids: jax.Array,
+    num_segments: int,
+    *,
+    weights: Optional[jax.Array] = None,
+    n_blocks: int = 8,
+    impl: str = "auto",
+) -> Tuple[jax.Array, jax.Array]:
+    """Segment sum with a *fixed* reduction tree (DESIGN.md §4.3).
+
+    Rows are split into ``n_blocks`` equal blocks (right-padded with dropped
+    ids), per-block partials are computed independently, and the partials are
+    accumulated left-to-right in block order. Because the summation order is
+    pinned by ``n_blocks`` — not by how rows happen to be laid out across
+    devices — a sharded execution whose P shards each compute their
+    ``n_blocks/P`` local partials and fold the all-gathered stack in the same
+    block order reproduces this result bit-for-bit. This is what makes the
+    distributed ITIS/IHTC pipeline label-identical to the single-device one.
+
+    ``n_blocks <= 1`` falls back to the plain one-shot ``segment_sum``.
+    """
+    n = x.shape[0]
+    if n_blocks <= 1:
+        return segment_sum(x, segment_ids, num_segments, weights=weights,
+                           impl=impl)
+    pad = (-n) % n_blocks
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    # padded rows get id == num_segments, which segment_sum drops
+    ip = jnp.pad(segment_ids, (0, pad), constant_values=num_segments)
+    wp = None if weights is None else jnp.pad(weights, (0, pad))
+    nb = (n + pad) // n_blocks
+    sums = masses = None
+    for b in range(n_blocks):  # static unroll: left fold in block order
+        sl = slice(b * nb, (b + 1) * nb)
+        s_b, m_b = segment_sum(
+            xp[sl], ip[sl], num_segments,
+            weights=None if wp is None else wp[sl], impl=impl,
+        )
+        sums = s_b if sums is None else sums + s_b
+        masses = m_b if masses is None else masses + m_b
+    return sums, masses
+
+
 def flash_attention(
     q: jax.Array,
     k: jax.Array,

@@ -28,6 +28,18 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 2):
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 
+def make_data_mesh(n_data: Optional[int] = None):
+    """1-D ``("data",)`` mesh for the sharded clustering pipeline.
+
+    The distributed ITIS/IHTC drivers (repro.core.distributed) shard points,
+    kNN graphs and prototype buffers over this single axis; model-parallel
+    axes are irrelevant to clustering, so the full device set goes to data.
+    """
+    from repro.core.distributed import make_data_mesh as _mk
+
+    return _mk(n_data)
+
+
 def data_axes(mesh) -> Tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 

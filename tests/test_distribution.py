@@ -3,7 +3,9 @@
 These tests run in a SUBPROCESS with XLA_FLAGS=--xla_force_host_platform_
 device_count=8 (conftest keeps the main test process at 1 device), and
 assert numerical equality between sharded and single-device execution for:
-pjit'd train step, ring-kNN vs exact kNN, compressed psum, sharded TC.
+pjit'd train step, ring-kNN vs exact kNN, compressed psum, sharded TC, the
+end-to-end sharded IHTC pipeline (bit-for-bit label parity), and streamed
+multi-device ingestion.
 """
 import os
 import subprocess
@@ -150,8 +152,9 @@ def shard_tc(x_local):
     r = threshold_clustering(x_local, 2, key=jax.random.PRNGKey(0))
     return r.labels, r.n_clusters.reshape(1)
 
+# check_rep=False: the MIS while-loop has no replication rule on jax 0.4.x
 labels, ncs = shard_map(shard_tc, mesh=mesh, in_specs=P("data", None),
-                        out_specs=(P("data"), P("data")))(x)
+                        out_specs=(P("data"), P("data")), check_rep=False)(x)
 labels = np.asarray(labels).reshape(8, 32)
 for s in range(8):
     lab = labels[s]
@@ -161,3 +164,81 @@ assert int(np.asarray(ncs).sum()) <= 128
 print("SHARDED-TC-OK")
 """)
     assert "SHARDED-TC-OK" in out
+
+
+def test_sharded_ihtc_matches_single_device():
+    """The tentpole parity contract (DESIGN.md §4.3): the end-to-end sharded
+    IHTC — ring-kNN TC, distributed Luby MIS, folded prototype reduce,
+    mesh-aware k-means — produces labels *bit-for-bit identical* to the
+    single-device ihtc() at t=3, m=2 on an 8-device mesh. n=576 divides
+    evenly through both levels (576 → 192 → 64), so both paths compute in
+    identical buffers."""
+    out = _run("""
+from repro.core import ihtc
+from repro.core.distributed import ihtc_sharded, make_data_mesh
+
+rng = np.random.default_rng(0)
+mus = np.array([[1, 2], [7, 8], [3, 5]], float)
+sds = np.array([[1, 0.5], [2, 1], [3, 4]], float) ** 0.5
+comp = rng.choice(3, size=576, p=[0.5, 0.3, 0.2])
+x = jnp.asarray(mus[comp] + rng.normal(size=(576, 2)) * sds[comp], jnp.float32)
+
+res1 = ihtc(x, 3, 2, "kmeans", k=3, key=jax.random.PRNGKey(7))
+res2 = ihtc_sharded(x, 3, 2, "kmeans", k=3, key=jax.random.PRNGKey(7),
+                    mesh=make_data_mesh())
+l1, l2 = np.asarray(res1.labels), np.asarray(res2.labels)
+assert l1.min() >= 0
+assert np.array_equal(l1, l2), (l1 != l2).sum()
+p1, p2 = np.asarray(res1.protos), np.asarray(res2.protos)
+assert np.array_equal(p1.view(np.uint32), p2.view(np.uint32))
+assert int(res1.n_prototypes) == int(res2.n_prototypes)
+# the mesh= kwarg on the public API dispatches to the same path
+res3 = ihtc(x, 3, 2, "kmeans", k=3, key=jax.random.PRNGKey(7),
+            mesh=make_data_mesh())
+assert np.array_equal(l1, np.asarray(res3.labels))
+print("SHARDED-IHTC-PARITY-OK")
+""")
+    assert "SHARDED-IHTC-PARITY-OK" in out
+
+
+def test_sharded_ihtc_padded_sizes_and_guarantee():
+    """Non-divisible n exercises the validity-masked level padding: the
+    (t*)^m size guarantee and mass conservation must still hold."""
+    out = _run("""
+from repro.core.distributed import ihtc_sharded, itis_sharded, make_data_mesh
+
+rng = np.random.default_rng(1)
+x = jnp.asarray(rng.normal(size=(500, 3)), jnp.float32)
+mesh = make_data_mesh()
+r = itis_sharded(x, 2, 3, mesh=mesh)
+assert abs(float(jnp.sum(jnp.where(r.valid, r.mass, 0.0))) - 500) < 1e-3
+res = ihtc_sharded(x, 2, 3, "kmeans", k=3, mesh=mesh)
+lab = np.asarray(res.labels)
+assert lab.shape == (500,) and lab.min() >= 0
+sizes = np.bincount(lab)
+assert sizes[sizes > 0].min() >= 2 ** 3
+print("SHARDED-IHTC-PADDED-OK")
+""")
+    assert "SHARDED-IHTC-PADDED-OK" in out
+
+
+def test_streamed_ingestion_feeds_sharded_pipeline():
+    """data.stream_to_mesh places host-sized chunks shard-by-shard; the
+    assembled array equals the direct concatenation and drives IHTC."""
+    out = _run("""
+from repro.data import PointStreamConfig, point_chunks, stream_to_mesh
+from repro.core.distributed import ihtc_sharded, make_data_mesh
+
+mesh = make_data_mesh()
+cfg = PointStreamConfig(n=5000, d=2, chunk=700, seed=3, kind="gmm")
+x, valid = stream_to_mesh(point_chunks(cfg), mesh, cfg.n, cfg.d)
+assert x.shape[0] % 8 == 0 and x.shape[1] == 2
+full = np.concatenate([c for c in point_chunks(cfg)])
+assert np.array_equal(np.asarray(x)[np.asarray(valid)], full)
+res = ihtc_sharded(x, 2, 2, "kmeans", k=3, valid=valid, mesh=mesh)
+lab = np.asarray(res.labels)
+v = np.asarray(valid)
+assert lab[v].min() >= 0 and (lab[~v] == -1).all()
+print("STREAM-INGEST-OK")
+""")
+    assert "STREAM-INGEST-OK" in out

@@ -65,6 +65,41 @@ def test_segment_sum(rng, n, d, s):
     np.testing.assert_allclose(gm, wm, rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.parametrize("n,d,s,n_blocks", [(64, 3, 8, 8), (100, 2, 5, 8),
+                                            (30, 4, 6, 4), (16, 2, 3, 1)])
+def test_blocked_segment_sum_matches_plain(rng, n, d, s, n_blocks):
+    """The fixed-fold variant is the same function as plain segment_sum up
+    to float summation order (exact on integer-valued masses)."""
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    ids = jnp.asarray(rng.integers(-1, s + 1, size=n), jnp.int32)  # incl. OOB
+    w = jnp.asarray(rng.random(n), jnp.float32)
+    gs, gm = ops.blocked_segment_sum(x, ids, s, weights=w, n_blocks=n_blocks,
+                                     impl="ref")
+    ws, wm = ref.segment_sum(x, ids, s, weights=w)
+    np.testing.assert_allclose(gs, ws, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(gm, wm, rtol=1e-5, atol=1e-5)
+
+
+def test_blocked_segment_sum_shard_fold_identity(rng):
+    """Bitwise contract used by the distributed pipeline (DESIGN.md §4.3):
+    per-block partials folded left in block order == blocked_segment_sum."""
+    n, d, s, B = 64, 3, 7, 8
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, s, size=n), jnp.int32)
+    w = jnp.asarray(rng.random(n), jnp.float32)
+    gs, gm = ops.blocked_segment_sum(x, ids, s, weights=w, n_blocks=B,
+                                     impl="ref")
+    nb = n // B
+    acc_s = acc_m = None
+    for b in range(B):  # what each shard computes, folded in shard order
+        sl = slice(b * nb, (b + 1) * nb)
+        ps, pm = ops.segment_sum(x[sl], ids[sl], s, weights=w[sl], impl="ref")
+        acc_s = ps if acc_s is None else acc_s + ps
+        acc_m = pm if acc_m is None else acc_m + pm
+    np.testing.assert_array_equal(np.asarray(gs), np.asarray(acc_s))
+    np.testing.assert_array_equal(np.asarray(gm), np.asarray(acc_m))
+
+
 @pytest.mark.parametrize("lq,lk", [(8, 8), (1, 33), (17, 64), (64, 17)])
 @pytest.mark.parametrize("causal", [True, False])
 def test_flash_attention(rng, lq, lk, causal):
