@@ -1,0 +1,93 @@
+"""Beyond-paper: online serving throughput of ``ClusterIndex.assign``.
+
+Fits an index on the paper's GMM mixture, then sweeps the micro-batching
+buckets of :class:`repro.serve.ClusterService`, reporting per-bucket assign
+latency and points/sec (compiles excluded — the service's pad-to-bucket
+front-end is exactly what keeps production requests off the compile path).
+Writes the sweep to benchmarks/results/BENCH_serve.json (schema in
+docs/BENCHMARKS.md); summarized by run.py.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# direct-run support (python benchmarks/bench_serve.py): repo root for the
+# benchmarks package, src/ for repro — same bootstrap as run.py
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_REPO, os.path.join(_REPO, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import gmm_sample, print_csv, timed
+from repro.cluster.registry import available_backends
+from repro.core.index import ClusterIndex
+from repro.serve.cluster_service import ClusterService
+
+RESULTS = os.path.join(os.path.dirname(os.path.abspath(__file__)), "results")
+
+
+def run(
+    n: int = 20_000,
+    t: int = 2,
+    m: int = 2,
+    backend: str = "kmeans",
+    buckets=(32, 128, 512, 2048, 8192),
+    block: int = 0,
+    seed: int = 0,
+    mode: str = "quick",
+):
+    x, _ = gmm_sample(n, seed)
+    xj = jnp.asarray(x)
+    index, fit_sec = timed(
+        lambda: ClusterIndex.fit(xj, t, m, backend, k=3,
+                                 key=jax.random.PRNGKey(seed)),
+        warmup=0)
+    service = ClusterService(index, buckets=buckets, block=block)
+    service.warmup()
+
+    rows = []
+    for b in service.buckets:
+        q = jnp.asarray(gmm_sample(b, seed + 1)[0])
+        _, sec = timed(service.assign, q, warmup=1, iters=5)
+        rows.append((b, round(sec * 1e3, 3), round(b / sec), int(index.n_prototypes)))
+    print_csv("serve_assign", rows, "batch,ms,points_per_sec,n_prototypes")
+
+    os.makedirs(RESULTS, exist_ok=True)
+    art = {
+        "name": "serve_assign",
+        "mode": mode,
+        "fit": {"n": n, "t": t, "m": m, "backend": backend,
+                "n_prototypes": int(index.n_prototypes),
+                "fit_seconds": round(fit_sec, 4)},
+        "rows": [
+            {"batch": b, "ms": ms, "points_per_sec": pps}
+            for b, ms, pps, _ in rows
+        ],
+    }
+    with open(os.path.join(RESULTS, "BENCH_serve.json"), "w") as f:
+        json.dump(art, f, indent=1)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20_000)
+    ap.add_argument("--t", type=int, default=2)
+    ap.add_argument("--m", type=int, default=2)
+    ap.add_argument("--backend", choices=available_backends(),
+                    default="kmeans")
+    ap.add_argument("--block", type=int, default=0,
+                    help="stream the prototype set in blocks of this size")
+    args = ap.parse_args()
+    run(n=args.n, t=args.t, m=args.m, backend=args.backend, block=args.block,
+        mode="cli")
+
+
+if __name__ == "__main__":
+    main()

@@ -17,10 +17,9 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Callable, Dict, Tuple
+from typing import Callable, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 

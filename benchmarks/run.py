@@ -78,19 +78,26 @@ def _kernel_microbench():
 
 
 def _bench_json_summary() -> None:
-    """One summary line per benchmarks/results/BENCH_*.json trajectory."""
+    """One summary line per benchmarks/results/BENCH_*.json trajectory.
+
+    Schema-flexible: the sweep axis / metric pair is picked per artifact
+    (devices/seconds for the distributed sweep, batch/points_per_sec for
+    the serving sweep — docs/BENCHMARKS.md)."""
     import glob
     import json
 
+    axes = (("devices", "seconds"), ("batch", "points_per_sec"))
     results = os.path.join(os.path.dirname(__file__), "results")
     for path in sorted(glob.glob(os.path.join(results, "BENCH_*.json"))):
         with open(path) as f:
             art = json.load(f)
         rows = art.get("rows", [])
-        xs = ",".join(str(r.get("devices", "?")) for r in rows)
-        secs = ",".join(str(r.get("seconds", "?")) for r in rows)
+        axis, metric = next(
+            (a for a in axes if rows and a[0] in rows[0]), axes[0])
+        xs = ",".join(str(r.get(axis, "?")) for r in rows)
+        ys = ",".join(str(r.get(metric, "?")) for r in rows)
         print(f"# {os.path.basename(path)}: {art.get('name')} "
-              f"mode={art.get('mode')} devices=[{xs}] seconds=[{secs}]")
+              f"mode={art.get('mode')} {axis}=[{xs}] {metric}=[{ys}]")
 
 
 def main() -> None:
@@ -101,6 +108,8 @@ def main() -> None:
     ap.add_argument("--distributed", action="store_true",
                     help="also run the multi-device weak-scaling sweep "
                          "(subprocesses with forced CPU device counts)")
+    ap.add_argument("--serve", action="store_true",
+                    help="also run the ClusterIndex.assign serving sweep")
     args, _ = ap.parse_known_args()
     quick = not args.full
 
@@ -123,6 +132,11 @@ def main() -> None:
             from benchmarks import bench_distributed
 
             bench_distributed.run(n_per_device=4096)
+        if args.serve:
+            from benchmarks import bench_serve
+
+            bench_serve.run(n=20_000, buckets=(32, 128, 512, 2048),
+                            mode="quick")
     else:
         mx = args.max_n or 1_000_000
         bench_table1_kmeans.run(
@@ -138,6 +152,12 @@ def main() -> None:
             from benchmarks import bench_distributed
 
             bench_distributed.run(n_per_device=min(mx, 65_536))
+        if args.serve:
+            from benchmarks import bench_serve
+
+            bench_serve.run(n=min(mx, 1_000_000), m=3,
+                            buckets=(32, 128, 512, 2048, 8192, 32_768),
+                            mode="full")
 
     # dry-run roofline summary, if artifacts exist
     results = os.path.join(os.path.dirname(__file__), "results", "dryrun")

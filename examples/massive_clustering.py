@@ -22,7 +22,6 @@ sys.path.insert(0, "src")
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 

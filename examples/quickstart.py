@@ -2,7 +2,9 @@
 
 Runs IHTC (ITIS + k-means) on the paper's Gaussian-mixture benchmark and
 prints the time / reduction / accuracy trade-off as the ITIS iteration
-count m grows. `python examples/quickstart.py --n 100000`
+count m grows, then freezes the last fit into a ClusterIndex and labels a
+fresh query batch online. All dispatch knobs flow through the runtime
+config: `python examples/quickstart.py --n 100000 --impl ref`
 """
 import argparse
 import sys
@@ -16,12 +18,15 @@ import numpy as np
 
 
 def main():
+    from repro import runtime
     from repro.cluster.metrics import clustering_accuracy
-    from repro.core import ihtc
+    from repro.core import ClusterIndex, ihtc
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=20_000)
     ap.add_argument("--t", type=int, default=2, help="TC size threshold t*")
+    ap.add_argument("--impl", default="auto", choices=("auto", "pallas", "ref"),
+                    help="kernel dispatch policy (runtime.configure)")
     args = ap.parse_args()
 
     # the paper's §4 mixture: 3 bivariate Gaussians, weights .5/.3/.2
@@ -32,15 +37,28 @@ def main():
     x = jnp.asarray(mus[comp] + rng.normal(size=(args.n, 2)) * sds[comp],
                     jnp.float32)
 
-    print(f"n={args.n}, t*={args.t}  (m=0 is plain k-means)")
+    print(f"n={args.n}, t*={args.t}, impl={args.impl}  (m=0 is plain k-means)")
     print(f"{'m':>3} {'seconds':>9} {'prototypes':>11} {'accuracy':>9}")
-    for m in range(0, 5):
+    with runtime.configure(impl=args.impl):  # one knob, whole pipeline
+        for m in range(0, 5):
+            t0 = time.perf_counter()
+            res = ihtc(x, args.t, m, "kmeans", k=3, key=jax.random.PRNGKey(0))
+            jax.block_until_ready(res.labels)
+            sec = time.perf_counter() - t0
+            acc = clustering_accuracy(comp, np.asarray(res.labels), 3)
+            print(f"{m:>3} {sec:>9.3f} {int(res.n_prototypes):>11} {acc:>9.4f}")
+
+        # freeze the last fit into a servable index and label new points
+        index = ClusterIndex.from_result(res)
+        comp_q = rng.choice(3, size=1000, p=[0.5, 0.3, 0.2])
+        q = jnp.asarray(mus[comp_q] + rng.normal(size=(1000, 2)) * sds[comp_q],
+                        jnp.float32)
         t0 = time.perf_counter()
-        res = ihtc(x, args.t, m, "kmeans", k=3, key=jax.random.PRNGKey(0))
-        jax.block_until_ready(res.labels)
+        labels = jax.block_until_ready(index.assign(q))
         sec = time.perf_counter() - t0
-        acc = clustering_accuracy(comp, np.asarray(res.labels), 3)
-        print(f"{m:>3} {sec:>9.3f} {int(res.n_prototypes):>11} {acc:>9.4f}")
+        acc = clustering_accuracy(comp_q, np.asarray(labels), 3)
+        print(f"online assign of 1000 fresh queries: {sec:.4f}s "
+              f"(accuracy {acc:.4f}, {int(index.n_prototypes)} prototypes)")
 
 
 if __name__ == "__main__":

@@ -1,2 +1,13 @@
-"""Sophisticated clustering backends hybridized by IHTC (paper baselines)."""
+"""Sophisticated clustering backends hybridized by IHTC (paper baselines).
+
+Backends self-register with :mod:`repro.cluster.registry` at import; resolve
+names (or validate callables) through :func:`resolve_backend`.
+"""
 from . import dbscan, hac, kmeans, metrics  # noqa: F401
+from .registry import (  # noqa: F401
+    BackendFn,
+    available_backends,
+    register_backend,
+    resolve_backend,
+    validate_backend_fn,
+)

@@ -16,6 +16,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import runtime
+from repro.cluster.registry import register_backend
 from repro.kernels import ops
 
 
@@ -24,7 +26,6 @@ class DBSCANResult(NamedTuple):
     is_core: jax.Array   # (n,) bool
 
 
-@functools.partial(jax.jit, static_argnames=("impl",))
 def dbscan(
     x: jax.Array,
     eps: float,
@@ -32,7 +33,25 @@ def dbscan(
     *,
     valid: Optional[jax.Array] = None,
     weights: Optional[jax.Array] = None,
-    impl: str = "auto",
+    impl: Optional[str] = None,
+) -> DBSCANResult:
+    """Weighted DBSCAN; ``impl`` defaults to the runtime config."""
+    cfg = runtime.active()
+    impl = cfg.impl if impl is None else impl
+    return _dbscan(x, eps, min_pts, valid=valid, weights=weights, impl=impl,
+                   _dispatch=cfg.dispatch_key())
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "_dispatch"))
+def _dbscan(
+    x: jax.Array,
+    eps: float,
+    min_pts: float,
+    *,
+    valid: Optional[jax.Array],
+    weights: Optional[jax.Array],
+    impl: str,
+    _dispatch: tuple = (),  # cache-key pin for trace-time config reads (§10)
 ) -> DBSCANResult:
     n = x.shape[0]
     if valid is None:
@@ -79,6 +98,7 @@ def dbscan(
     return DBSCANResult(labels.astype(jnp.int32), is_core)
 
 
+@register_backend("dbscan")
 def dbscan_masked(
     x: jax.Array,
     *,
@@ -87,7 +107,7 @@ def dbscan_masked(
     valid: Optional[jax.Array] = None,
     weights: Optional[jax.Array] = None,
     key: Optional[jax.Array] = None,  # unused; uniform backend signature
-    impl: str = "auto",
+    impl: Optional[str] = None,
     **_: object,
 ) -> jax.Array:
     """IHTC backend adapter: returns labels only (-1 = noise)."""

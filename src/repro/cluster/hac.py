@@ -19,6 +19,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import runtime
+from repro.cluster.registry import register_backend
 from repro.kernels import ops
 
 _LINKAGES = ("single", "complete", "average", "ward")
@@ -29,7 +31,6 @@ class HACResult(NamedTuple):
     n_merges: jax.Array    # () int32
 
 
-@functools.partial(jax.jit, static_argnames=("k", "linkage", "impl"))
 def hac(
     x: jax.Array,
     k: int,
@@ -37,10 +38,30 @@ def hac(
     valid: Optional[jax.Array] = None,
     weights: Optional[jax.Array] = None,
     linkage: str = "complete",
-    impl: str = "auto",
+    impl: Optional[str] = None,
 ) -> HACResult:
+    """Lance–Williams HAC; ``impl`` defaults to the runtime config."""
     if linkage not in _LINKAGES:
         raise ValueError(f"linkage {linkage!r} not in {_LINKAGES}")
+    cfg = runtime.active()
+    impl = cfg.impl if impl is None else impl
+    return _hac(x, k, valid=valid, weights=weights, linkage=linkage,
+                impl=impl, _dispatch=cfg.dispatch_key())
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "linkage", "impl", "_dispatch")
+)
+def _hac(
+    x: jax.Array,
+    k: int,
+    *,
+    valid: Optional[jax.Array],
+    weights: Optional[jax.Array],
+    linkage: str,
+    impl: str,
+    _dispatch: tuple = (),  # cache-key pin for trace-time config reads (§10)
+) -> HACResult:
     n = x.shape[0]
     if valid is None:
         valid = jnp.ones((n,), bool)
@@ -107,6 +128,7 @@ def hac(
     return HACResult(labels.astype(jnp.int32), n_merges)
 
 
+@register_backend("hac")
 def hac_masked(
     x: jax.Array,
     *,
@@ -115,7 +137,7 @@ def hac_masked(
     weights: Optional[jax.Array] = None,
     key: Optional[jax.Array] = None,  # unused; uniform backend signature
     linkage: str = "complete",
-    impl: str = "auto",
+    impl: Optional[str] = None,
     **_: object,
 ) -> jax.Array:
     """IHTC backend adapter: returns labels only."""

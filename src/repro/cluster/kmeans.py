@@ -19,6 +19,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import runtime
+from repro.cluster.registry import register_backend
 from repro.kernels import ops
 
 STAT_BLOCKS = 8  # canonical reduction width; must match the distributed twin
@@ -54,7 +56,6 @@ def _plus_plus_init(x, w, valid, k, key, impl):
     return centers
 
 
-@functools.partial(jax.jit, static_argnames=("k", "iters", "impl", "n_blocks"))
 def kmeans(
     x: jax.Array,
     k: int,
@@ -64,8 +65,35 @@ def kmeans(
     key: Optional[jax.Array] = None,
     iters: int = 100,
     tol: float = 1e-6,
-    impl: str = "auto",
-    n_blocks: int = STAT_BLOCKS,
+    impl: Optional[str] = None,
+    n_blocks: Optional[int] = None,
+) -> KMeansResult:
+    """Weighted k-means; ``impl``/``n_blocks`` default to the runtime config
+    (resolved before the jit boundary — DESIGN.md §10)."""
+    cfg = runtime.active()
+    impl = cfg.impl if impl is None else impl
+    n_blocks = cfg.n_blocks if n_blocks is None else n_blocks
+    return _kmeans(x, k, valid=valid, weights=weights, key=key, iters=iters,
+                   tol=tol, impl=impl, n_blocks=n_blocks,
+                   _dispatch=cfg.dispatch_key())
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "iters", "impl", "n_blocks", "_dispatch"),
+)
+def _kmeans(
+    x: jax.Array,
+    k: int,
+    *,
+    valid: Optional[jax.Array],
+    weights: Optional[jax.Array],
+    key: Optional[jax.Array],
+    iters: int,
+    tol: float,
+    impl: str,
+    n_blocks: int,
+    _dispatch: tuple = (),  # cache-key pin for trace-time config reads (§10)
 ) -> KMeansResult:
     n, d = x.shape
     if valid is None:
@@ -109,6 +137,7 @@ def kmeans(
     return KMeansResult(centers, labels.astype(jnp.int32), inertia, it)
 
 
+@register_backend("kmeans")
 def kmeans_masked(
     x: jax.Array,
     *,
@@ -116,7 +145,7 @@ def kmeans_masked(
     valid: Optional[jax.Array] = None,
     weights: Optional[jax.Array] = None,
     key: Optional[jax.Array] = None,
-    impl: str = "auto",
+    impl: Optional[str] = None,
     iters: int = 100,
     **_: object,
 ) -> jax.Array:

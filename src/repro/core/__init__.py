@@ -7,6 +7,7 @@ from repro.core.distributed import (  # noqa: F401
     tc_sharded,
 )
 from repro.core.ihtc import IHTCResult, ihtc  # noqa: F401
+from repro.core.index import ClusterIndex, nearest_valid_prototype  # noqa: F401
 from repro.core.itis import ITISResult, itis, itis_step, level_sizes  # noqa: F401
 from repro.core.knn import knn_graph, knn_graph_blocked, ring_knn  # noqa: F401
 from repro.core.prototypes import (  # noqa: F401

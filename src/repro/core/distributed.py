@@ -39,17 +39,19 @@ an 8-device CPU mesh in tests/test_distribution.py.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional, Sequence, Union
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.ihtc import BackendFn, IHTCResult
+from repro import runtime
+from repro.cluster.registry import BackendFn, resolve_backend
+from repro.core.ihtc import IHTCResult
 from repro.core.itis import ITISResult, level_sizes
 from repro.core.knn import _axis_size, ring_knn
-from repro.core.prototypes import REDUCE_BLOCKS, compose_assignments
+from repro.core.prototypes import compose_assignments
 from repro.core.tc import _NEG, luby_mis_rounds, seed_priorities
 from repro.kernels import ops
 
@@ -91,7 +93,7 @@ def tc_sharded(
     key: jax.Array,
     *,
     axis_name: str,
-    impl: str = "auto",
+    impl: Optional[str] = None,
 ):
     """Global TC on row-sharded points; returns (labels (n,) replicated,
     is_seed (n,) replicated, n_clusters ()).
@@ -300,10 +302,10 @@ def _reduce_sharded(x_local, labels_local, n_out, *, weights_local, weighted,
 @functools.partial(
     jax.jit,
     static_argnames=("t", "n_out", "weighted", "impl", "n_blocks",
-                     "axis_name", "mesh"),
+                     "axis_name", "mesh", "_dispatch"),
 )
 def _itis_level_sharded(x, mass, valid, key, *, t, n_out, weighted, impl,
-                        n_blocks, axis_name, mesh):
+                        n_blocks, axis_name, mesh, _dispatch=()):
     def level(x_local, mass_local, valid_local, key):
         n_local = x_local.shape[0]
         p = _axis_size(axis_name)
@@ -340,10 +342,6 @@ def _itis_level_sharded(x, mass, valid, key, *, t, n_out, weighted, impl,
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("k", "iters", "impl", "n_blocks", "axis_name", "mesh"),
-)
 def kmeans_sharded(
     x,
     k: int,
@@ -352,11 +350,11 @@ def kmeans_sharded(
     weights,
     key,
     mesh,
-    axis_name: str = "data",
+    axis_name: Optional[str] = None,
     iters: int = 100,
     tol: float = 1e-6,
-    impl: str = "auto",
-    n_blocks: int = REDUCE_BLOCKS,
+    impl: Optional[str] = None,
+    n_blocks: Optional[int] = None,
 ):
     """Sharded twin of ``repro.cluster.kmeans.kmeans`` (labels only).
 
@@ -364,7 +362,38 @@ def kmeans_sharded(
     are combined with the canonical ordered fold; k-means++ samples from
     all-gathered global logits. Bit-identical to the single-device k-means
     when the row count divides evenly into the canonical blocks.
+    ``impl``/``axis_name``/``n_blocks`` default to the runtime config.
     """
+    cfg = runtime.active()
+    impl = cfg.impl if impl is None else impl
+    axis_name = cfg.axis_name if axis_name is None else axis_name
+    n_blocks = cfg.n_blocks if n_blocks is None else n_blocks
+    return _kmeans_sharded(x, k, valid=valid, weights=weights, key=key,
+                           mesh=mesh, axis_name=axis_name, iters=iters,
+                           tol=tol, impl=impl, n_blocks=n_blocks,
+                           _dispatch=cfg.dispatch_key())
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "iters", "impl", "n_blocks", "axis_name", "mesh",
+                     "_dispatch"),
+)
+def _kmeans_sharded(
+    x,
+    k: int,
+    *,
+    valid,
+    weights,
+    key,
+    mesh,
+    axis_name: str,
+    iters: int,
+    tol: float,
+    impl: str,
+    n_blocks: int,
+    _dispatch: tuple = (),  # cache-key pin for trace-time config reads (§10)
+):
 
     def body_fn(x_local, valid_local, w_local, key):
         n_local, d = x_local.shape
@@ -449,12 +478,12 @@ def itis_sharded(
     m: int,
     *,
     mesh=None,
-    axis_name: str = "data",
+    axis_name: Optional[str] = None,
     weights: Optional[jax.Array] = None,
     valid: Optional[jax.Array] = None,
     key: Optional[jax.Array] = None,
     weighted: bool = False,
-    impl: str = "auto",
+    impl: Optional[str] = None,
     min_points: int = 4,
     n_blocks: Optional[int] = None,
 ) -> ITISResult:
@@ -463,21 +492,26 @@ def itis_sharded(
     Level buffers are padded (validity-masked) to a multiple of the canonical
     reduction block count so every level splits evenly across shards; the key
     sequence and early-stop rule match the single-device driver exactly.
+    ``impl``/``axis_name``/``mesh`` default to the active runtime config.
 
     ``valid`` marks pre-padded inputs (e.g. from ``data.stream_to_mesh``,
     which pads to the same multiple) — rows marked False never transmit graph
     edges or mass.
     """
+    cfg = runtime.active()
+    impl = cfg.impl if impl is None else impl
+    axis_name = cfg.axis_name if axis_name is None else axis_name
     if mesh is None:
-        mesh = make_data_mesh()
+        mesh = cfg.mesh if cfg.mesh is not None else make_data_mesh()
     if key is None:
         key = jax.random.PRNGKey(0)
     p = mesh.shape[axis_name]
     if n_blocks is None:
-        # smallest multiple of p that is >= the canonical block count, so
-        # defaults work on any device count (parity needs n_blocks == the
-        # single-device REDUCE_BLOCKS, which holds whenever p divides 8)
-        n_blocks = -(-max(REDUCE_BLOCKS, p) // p) * p
+        # smallest multiple of p that is >= the configured reduction width
+        # (default: the canonical REDUCE_BLOCKS), so defaults work on any
+        # device count; parity with the single-device path needs the widths
+        # equal, which holds whenever p divides the configured width
+        n_blocks = -(-max(cfg.n_blocks, p) // p) * p
     if n_blocks % p:
         raise ValueError(f"n_blocks={n_blocks} must be a multiple of the "
                          f"'{axis_name}' axis size {p}")
@@ -508,7 +542,7 @@ def itis_sharded(
         cur_x, cur_m, cur_v, assignment, ncs = _itis_level_sharded(
             cur_x, cur_m, cur_v, sub, t=t, n_out=sizes[level + 1],
             weighted=weighted, impl=impl, n_blocks=n_blocks,
-            axis_name=axis_name, mesh=mesh)
+            axis_name=axis_name, mesh=mesh, _dispatch=cfg.dispatch_key())
         assignments.append(assignment)
         n_protos = ncs[0]
     return ITISResult(cur_x, cur_m, cur_v, assignments, n_protos)
@@ -521,25 +555,30 @@ def ihtc_sharded(
     backend: Union[str, BackendFn] = "kmeans",
     *,
     mesh=None,
-    axis_name: str = "data",
+    axis_name: Optional[str] = None,
     weights: Optional[jax.Array] = None,
     valid: Optional[jax.Array] = None,
     weighted: bool = False,
     use_mass_in_backend: bool = True,
     key: Optional[jax.Array] = None,
-    impl: str = "auto",
+    impl: Optional[str] = None,
     n_blocks: Optional[int] = None,
     **backend_kwargs,
 ) -> IHTCResult:
     """Multi-device twin of :func:`repro.core.ihtc.ihtc`.
 
     ``backend="kmeans"`` runs the mesh-aware k-means (prototypes stay
-    sharded). Other backends fall back to the single-device implementation on
-    the final prototype set — which is n/(t*)^m-sized, i.e. already reduced
-    by ITIS; the raw points are still never gathered.
+    sharded). Other backends resolve through the registry and fall back to
+    the single-device implementation on the final prototype set — which is
+    n/(t*)^m-sized, i.e. already reduced by ITIS; the raw points are still
+    never gathered. ``impl``/``axis_name``/``mesh`` default to the active
+    runtime config.
     """
+    cfg = runtime.active()
+    impl = cfg.impl if impl is None else impl
+    axis_name = cfg.axis_name if axis_name is None else axis_name
     if mesh is None:
-        mesh = make_data_mesh()
+        mesh = cfg.mesh if cfg.mesh is not None else make_data_mesh()
     if key is None:
         key = jax.random.PRNGKey(0)
     key_itis, key_backend = jax.random.split(key)
@@ -552,7 +591,7 @@ def ihtc_sharded(
     w = r.mass if use_mass_in_backend else None
     if backend == "kmeans":
         p = mesh.shape[axis_name]
-        nb = n_blocks or -(-max(REDUCE_BLOCKS, p) // p) * p
+        nb = n_blocks or -(-max(cfg.n_blocks, p) // p) * p
         kw = dict(backend_kwargs)
         k = kw.pop("k", 3)
         iters = kw.pop("iters", 100)
@@ -562,9 +601,7 @@ def ihtc_sharded(
             key=key_backend, mesh=mesh, axis_name=axis_name, iters=iters,
             impl=impl, n_blocks=nb, **kw)
     else:
-        from repro.core.ihtc import _resolve_backend
-
-        fn = _resolve_backend(backend)
+        fn = resolve_backend(backend)
         proto_labels = fn(
             jax.device_get(r.protos), valid=jax.device_get(r.valid),
             weights=None if w is None else jax.device_get(w),

@@ -7,15 +7,18 @@ contains ≥ (t*)^m original units.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Optional, Sequence, Union
+from typing import NamedTuple, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro import runtime
+from repro.cluster.registry import BackendFn, resolve_backend
 from repro.core.itis import ITISResult, itis
 from repro.core.prototypes import compose_assignments
 
-BackendFn = Callable[..., jax.Array]
+# backwards-compatible alias: backend resolution now lives in the registry
+_resolve_backend = resolve_backend
 
 
 class IHTCResult(NamedTuple):
@@ -28,21 +31,6 @@ class IHTCResult(NamedTuple):
     assignments: Sequence[jax.Array]
 
 
-def _resolve_backend(backend: Union[str, BackendFn]) -> BackendFn:
-    if callable(backend):
-        return backend
-    from repro.cluster import dbscan, hac, kmeans  # local import: no cycle
-
-    table = {
-        "kmeans": kmeans.kmeans_masked,
-        "hac": hac.hac_masked,
-        "dbscan": dbscan.dbscan_masked,
-    }
-    if backend not in table:
-        raise ValueError(f"unknown backend {backend!r}; have {sorted(table)}")
-    return table[backend]
-
-
 def ihtc(
     x: jax.Array,
     t: int,
@@ -53,10 +41,10 @@ def ihtc(
     weighted: bool = False,
     use_mass_in_backend: bool = True,
     key: Optional[jax.Array] = None,
-    impl: str = "auto",
-    knn_block: int = 0,
+    impl: Optional[str] = None,
+    knn_block: Optional[int] = None,
     mesh=None,
-    axis_name: str = "data",
+    axis_name: Optional[str] = None,
     **backend_kwargs,
 ) -> IHTCResult:
     """Full IHTC pipeline (host driver).
@@ -66,12 +54,23 @@ def ihtc(
     to the backend clusterer (paper runs backends unweighted; mass-weighting
     is the statistically consistent variant — both supported).
 
-    Passing ``mesh`` dispatches to the multi-device pipeline
-    (:func:`repro.core.distributed.ihtc_sharded`): every level is sharded
-    over the mesh's ``axis_name`` axis and the points are never gathered to
-    one device. See DESIGN.md §4 for the determinism contract between the
-    two paths.
+    ``backend`` is a registered name (:mod:`repro.cluster.registry`) or any
+    callable satisfying the BackendFn contract. ``impl``/``knn_block``/
+    ``mesh``/``axis_name`` default to the active runtime config, so
+    ``with runtime.configure(mesh=...)`` shards this call without touching
+    the call site.
+
+    Passing ``mesh`` (or configuring one) dispatches to the multi-device
+    pipeline (:func:`repro.core.distributed.ihtc_sharded`): every level is
+    sharded over the mesh's ``axis_name`` axis and the points are never
+    gathered to one device. See DESIGN.md §4 for the determinism contract
+    between the two paths.
     """
+    cfg = runtime.active()
+    impl = cfg.impl if impl is None else impl
+    knn_block = cfg.knn_block if knn_block is None else knn_block
+    mesh = cfg.mesh if mesh is None else mesh
+    axis_name = cfg.axis_name if axis_name is None else axis_name
     if mesh is not None:
         from repro.core.distributed import ihtc_sharded  # lazy: no cycle
 
@@ -89,7 +88,7 @@ def ihtc(
         x, t, m, weights=weights, key=key_itis, weighted=weighted,
         impl=impl, knn_block=knn_block,
     )
-    fn = _resolve_backend(backend)
+    fn = resolve_backend(backend)
     w = r.mass if use_mass_in_backend else None
     proto_labels = fn(
         r.protos, valid=r.valid, weights=w, key=key_backend, impl=impl,

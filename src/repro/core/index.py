@@ -1,0 +1,198 @@
+"""Fitted ClusterIndex — the reduced representation as a servable product.
+
+The paper treats the prototype set as an intermediate: ITIS shrinks n units
+to prototypes, a backend labels them, labels are backed out, done. But the
+reduced representation is *exactly* what an online deployment needs (the
+TeraHAC observation): the final prototypes + their backend labels are a
+complete, tiny (n/(t*)^m-sized) classifier for new points. ``fit`` freezes
+that artifact out of an :class:`IHTCResult`; ``assign`` labels query batches
+by nearest-valid-prototype lookup — a jitted streamed top-1 over the same
+``ops.pairwise_sq_l2`` / running-best-list machinery the kNN graph builder
+uses, dispatched under the runtime config, so the serving path exercises the
+same kernels (and the same mesh) as the offline fit.
+
+The index is a NamedTuple of arrays — a JAX pytree — so it passes straight
+through jit/shard_map and can be checkpointed with any pytree saver.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro import runtime
+from repro.cluster.registry import BackendFn
+from repro.core.ihtc import IHTCResult, ihtc
+from repro.core.knn import _merge_topk
+from repro.kernels import ops
+
+
+class ClusterIndex(NamedTuple):
+    """Frozen artifact of an IHTC fit: everything ``assign`` needs, nothing
+    sized O(n)."""
+
+    protos: jax.Array        # (n_max, d) final-level prototypes (padded)
+    proto_mass: jax.Array    # (n_max,) original-unit mass per prototype
+    proto_valid: jax.Array   # (n_max,) bool — real prototype vs padding
+    proto_labels: jax.Array  # (n_max,) int32 backend labels (-1 = pad/noise)
+    n_prototypes: jax.Array  # () int32 — valid count
+
+    @classmethod
+    def from_result(cls, result: IHTCResult) -> "ClusterIndex":
+        """Freeze a fitted :func:`repro.core.ihtc.ihtc` result."""
+        return cls(
+            protos=result.protos,
+            proto_mass=result.proto_mass,
+            proto_valid=result.proto_valid,
+            proto_labels=result.proto_labels,
+            n_prototypes=result.n_prototypes,
+        )
+
+    @classmethod
+    def fit(
+        cls,
+        x: jax.Array,
+        t: int,
+        m: int,
+        backend: Union[str, BackendFn] = "kmeans",
+        **ihtc_kwargs,
+    ) -> "ClusterIndex":
+        """Run the full IHTC pipeline and freeze the servable artifact.
+
+        Accepts every :func:`ihtc` keyword (``mesh=`` shards the fit; all
+        dispatch knobs default to the runtime config). Use
+        ``from_result`` instead when the per-point training labels are also
+        needed — ``fit`` keeps only the O(n/(t*)^m) index.
+        """
+        return cls.from_result(ihtc(x, t, m, backend, **ihtc_kwargs))
+
+    @property
+    def dim(self) -> int:
+        return self.protos.shape[1]
+
+    def replicate(self, mesh) -> "ClusterIndex":
+        """A copy of the index replicated across every device of ``mesh``
+        (axis-independent — the index is small). Placing it once up front,
+        e.g. at service warmup, keeps the per-request assign path free of
+        host→device index transfers."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        return jax.device_put(self, NamedSharding(mesh, P()))
+
+    def _is_replicated_on(self, mesh) -> bool:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        sh = getattr(self.protos, "sharding", None)
+        return (isinstance(sh, NamedSharding) and sh.mesh == mesh
+                and sh.spec == P())
+
+    def assign(
+        self,
+        queries: jax.Array,
+        *,
+        impl: Optional[str] = None,
+        block: int = 0,
+        mesh=None,
+        axis_name: Optional[str] = None,
+    ) -> jax.Array:
+        """Label ``queries`` (nq, d) by their nearest valid prototype.
+
+        Returns (nq,) int32 labels (the backend label of the owning
+        prototype; -1 only if the index has no valid prototypes or the
+        owning prototype was labelled noise). ``block`` > 0 streams the
+        prototype set in blocks of that size (running top-1 — O(nq·block)
+        peak memory); 0 evaluates one (nq, n_max) tile.
+
+        ``impl``/``mesh``/``axis_name``/precision come from the runtime
+        config unless given: with a mesh, queries are right-padded to a
+        shard multiple and sharded over ``axis_name`` while the (small)
+        index is replicated (a no-op if :meth:`replicate` already placed
+        it), so the identical jitted program serves single-device and pod
+        deployments.
+        """
+        cfg = runtime.active()
+        impl = cfg.impl if impl is None else impl
+        mesh = cfg.mesh if mesh is None else mesh
+        axis_name = cfg.axis_name if axis_name is None else axis_name
+        index = self
+        nq = queries.shape[0]
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            pad = (-nq) % mesh.shape[axis_name]
+            if pad:  # any batch size serves; padded rows are sliced off
+                queries = jnp.pad(queries, ((0, pad), (0, 0)))
+            queries = jax.device_put(
+                queries, NamedSharding(mesh, P(axis_name, None)))
+            if not self._is_replicated_on(mesh):
+                index = self.replicate(mesh)
+        labels = _assign(index, queries, impl=impl, block=block,
+                         precision=cfg.precision,
+                         _dispatch=cfg.dispatch_key())
+        return labels[:nq]
+
+
+def nearest_valid_prototype(
+    queries: jax.Array,
+    protos: jax.Array,
+    valid: jax.Array,
+    *,
+    impl: Optional[str] = None,
+    block: int = 0,
+) -> Tuple[jax.Array, jax.Array]:
+    """(dist, proto_id) of each query's nearest valid prototype (-1 if none).
+
+    The blocked path folds prototype blocks into a running best list with
+    the same merge the blocked/ring kNN drivers use, so serving inherits
+    their memory ceiling: O(nq·block) live distances regardless of n_max.
+    """
+    nq = queries.shape[0]
+    n_max = protos.shape[0]
+    if block and block < n_max:
+        pad = (-n_max) % block
+        pp = jnp.pad(protos, ((0, pad), (0, 0)))
+        vv = jnp.pad(valid, (0, pad))
+        nb = (n_max + pad) // block
+
+        def body(b, carry):
+            bd, bi = carry
+            keys = jax.lax.dynamic_slice_in_dim(pp, b * block, block, axis=0)
+            kval = jax.lax.dynamic_slice_in_dim(vv, b * block, block, axis=0)
+            d = ops.pairwise_sq_l2(queries, keys, y_valid=kval, impl=impl)
+            gidx = b * block + jnp.arange(block, dtype=jnp.int32)
+            return _merge_topk(bd, bi, d, jnp.broadcast_to(gidx, d.shape), 1)
+
+        init = (
+            jnp.full((nq, 1), jnp.inf, jnp.float32),
+            jnp.full((nq, 1), -1, jnp.int32),
+        )
+        bd, bi = jax.lax.fori_loop(0, nb, body, init)
+        return bd[:, 0], bi[:, 0]
+
+    d = ops.pairwise_sq_l2(queries, protos, y_valid=valid, impl=impl)
+    dmin = jnp.min(d, axis=1)
+    idx = jnp.argmin(d, axis=1).astype(jnp.int32)
+    return dmin, jnp.where(jnp.isfinite(dmin), idx, -1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("impl", "block", "precision", "_dispatch")
+)
+def _assign(
+    index: ClusterIndex,
+    queries: jax.Array,
+    *,
+    impl: str,
+    block: int,
+    precision: str,
+    _dispatch: tuple = (),  # cache-key pin for trace-time config reads (§10)
+) -> jax.Array:
+    if precision == "bfloat16":  # serve-side cast; distances still fold in f32
+        queries = queries.astype(jnp.bfloat16)
+        index = index._replace(protos=index.protos.astype(jnp.bfloat16))
+    _, pid = nearest_valid_prototype(
+        queries, index.protos, index.proto_valid, impl=impl, block=block)
+    safe = jnp.where(pid >= 0, pid, 0)
+    return jnp.where(pid >= 0, index.proto_labels[safe], -1).astype(jnp.int32)

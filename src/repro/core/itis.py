@@ -20,11 +20,8 @@ from typing import List, NamedTuple, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.prototypes import (
-    REDUCE_BLOCKS,
-    PrototypeSet,
-    reduce_to_prototypes,
-)
+from repro import runtime
+from repro.core.prototypes import PrototypeSet, reduce_to_prototypes
 from repro.core.tc import TCResult, threshold_clustering
 
 
@@ -67,10 +64,6 @@ class ITISResult(NamedTuple):
     n_prototypes: jax.Array           # () int32 — valid count at final level
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("t", "weighted", "impl", "knn_block", "n_out", "n_blocks"),
-)
 def itis_step(
     x: jax.Array,
     mass: jax.Array,
@@ -79,16 +72,46 @@ def itis_step(
     *,
     key: jax.Array,
     weighted: bool = False,
-    impl: str = "auto",
-    knn_block: int = 0,
+    impl: Optional[str] = None,
+    knn_block: Optional[int] = None,
     n_out: Optional[int] = None,
-    n_blocks: int = REDUCE_BLOCKS,
+    n_blocks: Optional[int] = None,
 ) -> ITISLevelOut:
     """One ITIS level: TC on the valid points, reduce to ≤ n//t prototypes.
 
     ``n_out`` overrides the output buffer size (default ``max(n // t, 1)``;
     the sharded driver passes a device-padded size from ``level_sizes``).
+    ``impl``/``knn_block``/``n_blocks`` default to the active runtime config,
+    resolved before the jit boundary (DESIGN.md §10).
     """
+    cfg = runtime.active()
+    impl = cfg.impl if impl is None else impl
+    knn_block = cfg.knn_block if knn_block is None else knn_block
+    n_blocks = cfg.n_blocks if n_blocks is None else n_blocks
+    return _itis_step(x, mass, valid, t, key=key, weighted=weighted,
+                      impl=impl, knn_block=knn_block, n_out=n_out,
+                      n_blocks=n_blocks, _dispatch=cfg.dispatch_key())
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("t", "weighted", "impl", "knn_block", "n_out",
+                     "n_blocks", "_dispatch"),
+)
+def _itis_step(
+    x: jax.Array,
+    mass: jax.Array,
+    valid: jax.Array,
+    t: int,
+    *,
+    key: jax.Array,
+    weighted: bool,
+    impl: str,
+    knn_block: int,
+    n_out: Optional[int],
+    n_blocks: int,
+    _dispatch: tuple = (),  # cache-key pin for trace-time config reads (§10)
+) -> ITISLevelOut:
     n = x.shape[0]
     if n_out is None:
         n_out = max(n // t, 1)
@@ -110,11 +133,11 @@ def itis(
     weights: Optional[jax.Array] = None,
     key: Optional[jax.Array] = None,
     weighted: bool = False,
-    impl: str = "auto",
-    knn_block: int = 0,
+    impl: Optional[str] = None,
+    knn_block: Optional[int] = None,
     min_points: int = 4,
     pad_multiple: int = 1,
-    n_blocks: int = REDUCE_BLOCKS,
+    n_blocks: Optional[int] = None,
 ) -> ITISResult:
     """Run m ITIS iterations (host driver).
 
@@ -123,8 +146,13 @@ def itis(
     ``pad_multiple`` > 1 pads every level buffer to that multiple (used to
     shape-match the sharded driver; results are unchanged semantically but
     padding alters TC's random seed-priority draw, so only shape-identical
-    runs are bit-comparable — see DESIGN.md §4.3).
+    runs are bit-comparable — see DESIGN.md §4.3). ``impl``/``knn_block``/
+    ``n_blocks`` default to the active runtime config.
     """
+    cfg = runtime.active()
+    impl = cfg.impl if impl is None else impl
+    knn_block = cfg.knn_block if knn_block is None else knn_block
+    n_blocks = cfg.n_blocks if n_blocks is None else n_blocks
     if key is None:
         key = jax.random.PRNGKey(0)
     n = x.shape[0]

@@ -19,7 +19,13 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import runtime
 from repro.kernels import ops
+
+# what knn_block == 0 ("auto") means for every blocked-kNN entry point:
+# one-shot below this row count, blocks of this size above (the O(n²) HBM
+# threshold of the one-shot path)
+AUTO_KNN_BLOCK = 8192
 
 
 def _pvary(x: jax.Array, axis_name: str) -> jax.Array:
@@ -47,7 +53,7 @@ def knn_graph(
     k: int,
     *,
     valid: Optional[jax.Array] = None,
-    impl: str = "auto",
+    impl: Optional[str] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Exact (dists, idx) of the k nearest valid neighbours of each row."""
     return ops.knn(x, k, valid=valid, exclude_self=True, impl=impl)
@@ -65,20 +71,41 @@ def _merge_topk(
     return new_d, jnp.where(jnp.isfinite(new_d), new_i, -1)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "block", "impl"))
 def knn_graph_blocked(
     x: jax.Array,
     k: int,
     *,
     valid: Optional[jax.Array] = None,
-    block: int = 4096,
-    impl: str = "auto",
+    block: Optional[int] = None,
+    impl: Optional[str] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Blocked exact kNN for n beyond one-tile range.
 
     Streams key blocks against each query block and keeps a (block, k)
-    running best list, so peak memory is O(block² + n·k).
+    running best list, so peak memory is O(block² + n·k). ``block`` defaults
+    to the runtime config's ``knn_block`` (``AUTO_KNN_BLOCK`` when that is
+    0 = auto — the same resolution threshold_clustering uses).
     """
+    cfg = runtime.active()
+    impl = cfg.impl if impl is None else impl
+    if block is None:
+        block = cfg.knn_block or AUTO_KNN_BLOCK
+    return _knn_graph_blocked(x, k, valid=valid, block=block, impl=impl,
+                              _dispatch=cfg.dispatch_key())
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "block", "impl", "_dispatch")
+)
+def _knn_graph_blocked(
+    x: jax.Array,
+    k: int,
+    *,
+    valid: Optional[jax.Array],
+    block: int,
+    impl: str,
+    _dispatch: tuple = (),  # cache-key pin for trace-time config reads (§10)
+) -> Tuple[jax.Array, jax.Array]:
     n, _ = x.shape
     if valid is None:
         valid = jnp.ones((n,), bool)
@@ -119,7 +146,7 @@ def ring_knn(
     *,
     axis_name: str,
     valid: Optional[jax.Array] = None,
-    impl: str = "auto",
+    impl: Optional[str] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Sharded exact kNN inside ``shard_map``: keys rotate around the ring.
 

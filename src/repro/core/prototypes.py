@@ -7,13 +7,16 @@ from typing import NamedTuple, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro import runtime
 from repro.kernels import ops
 
 # Canonical reduction-tree width for prototype/centroid accumulations.
 # Pinning the block count (instead of letting it follow the device count or
 # XLA's scatter order) makes reductions device-layout-invariant, which is
 # what lets the sharded pipeline in repro.core.distributed match the
-# single-device driver bit-for-bit (DESIGN.md §4.3).
+# single-device driver bit-for-bit (DESIGN.md §4.3). This is also the
+# default of RuntimeConfig.n_blocks — the runtime config is the live knob;
+# this constant documents the canonical parity value.
 REDUCE_BLOCKS = 8
 
 
@@ -23,9 +26,6 @@ class PrototypeSet(NamedTuple):
     valid: jax.Array    # (n_max,) bool — real prototype vs padding
 
 
-@functools.partial(
-    jax.jit, static_argnames=("n_max", "weighted", "impl", "n_blocks")
-)
 def reduce_to_prototypes(
     x: jax.Array,
     labels: jax.Array,
@@ -33,8 +33,8 @@ def reduce_to_prototypes(
     *,
     weights: Optional[jax.Array] = None,
     weighted: bool = True,
-    impl: str = "auto",
-    n_blocks: int = REDUCE_BLOCKS,
+    impl: Optional[str] = None,
+    n_blocks: Optional[int] = None,
 ) -> PrototypeSet:
     """Collapse clusters to centroid prototypes.
 
@@ -44,8 +44,33 @@ def reduce_to_prototypes(
     through ITIS levels (mass-correct centroids — the beyond-paper fix).
     ``mass`` always accumulates true unit counts for the size guarantee and
     for weighted clustering of the prototypes downstream. ``n_blocks`` pins
-    the accumulation order (see ``ops.blocked_segment_sum``).
+    the accumulation order (see ``ops.blocked_segment_sum``); it and ``impl``
+    default to the active runtime config, resolved before the jit boundary.
     """
+    cfg = runtime.active()
+    impl = cfg.impl if impl is None else impl
+    n_blocks = cfg.n_blocks if n_blocks is None else n_blocks
+    return _reduce_to_prototypes(x, labels, n_max, weights=weights,
+                                 weighted=weighted, impl=impl,
+                                 n_blocks=n_blocks,
+                                 _dispatch=cfg.dispatch_key())
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_max", "weighted", "impl", "n_blocks", "_dispatch"),
+)
+def _reduce_to_prototypes(
+    x: jax.Array,
+    labels: jax.Array,
+    n_max: int,
+    *,
+    weights: Optional[jax.Array],
+    weighted: bool,
+    impl: str,
+    n_blocks: int,
+    _dispatch: tuple = (),  # cache-key pin for trace-time config reads (§10)
+) -> PrototypeSet:
     n = x.shape[0]
     w = jnp.ones((n,), jnp.float32) if weights is None else weights.astype(jnp.float32)
     safe_labels = jnp.where(labels >= 0, labels, n_max).astype(jnp.int32)

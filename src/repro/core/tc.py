@@ -35,7 +35,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.knn import knn_graph, knn_graph_blocked
+from repro import runtime
+from repro.core.knn import AUTO_KNN_BLOCK, knn_graph, knn_graph_blocked
 
 _NEG = jnp.int32(-1)  # priorities are ranks in [0, n); -1 == "-inf"
 
@@ -129,22 +130,45 @@ def _sq_dist_rows(x: jax.Array, i_rows: jax.Array, j_rows: jax.Array) -> jax.Arr
     return jnp.sum(jnp.square(a - b), axis=-1)
 
 
-@functools.partial(jax.jit, static_argnames=("t", "impl", "knn_block"))
 def threshold_clustering(
     x: jax.Array,
     t: int,
     *,
     valid: Optional[jax.Array] = None,
     key: Optional[jax.Array] = None,
-    impl: str = "auto",
-    knn_block: int = 0,
+    impl: Optional[str] = None,
+    knn_block: Optional[int] = None,
 ) -> TCResult:
     """Run TC with minimum cluster size ``t`` on (n, d) points.
 
     ``valid`` masks padded rows (ITIS levels); invalid rows get label -1 and
     transmit no graph edges. ``knn_block`` > 0 selects the blocked kNN path.
-    Deterministic given ``key`` (default: PRNGKey(0)).
+    ``impl``/``knn_block`` default to the active runtime config (DESIGN.md
+    §10) — resolved *before* the jit boundary so the compiled-cache key
+    always carries the concrete values. Deterministic given ``key``
+    (default: PRNGKey(0)).
     """
+    cfg = runtime.active()
+    impl = cfg.impl if impl is None else impl
+    knn_block = cfg.knn_block if knn_block is None else knn_block
+    return _threshold_clustering(x, t, valid=valid, key=key, impl=impl,
+                                 knn_block=knn_block,
+                                 _dispatch=cfg.dispatch_key())
+
+
+@functools.partial(
+    jax.jit, static_argnames=("t", "impl", "knn_block", "_dispatch")
+)
+def _threshold_clustering(
+    x: jax.Array,
+    t: int,
+    *,
+    valid: Optional[jax.Array],
+    key: Optional[jax.Array],
+    impl: str,
+    knn_block: int,
+    _dispatch: tuple = (),  # cache-key pin for trace-time config reads (§10)
+) -> TCResult:
     n = x.shape[0]
     if valid is None:
         # derived from x (not a fresh constant) so TC composes with shard_map
@@ -159,7 +183,7 @@ def threshold_clustering(
         return TCResult(labels, seed_of, valid, jnp.sum(valid).astype(jnp.int32))
 
     k = t - 1
-    block = knn_block if knn_block else 8192  # auto: avoid O(n²) HBM at scale
+    block = knn_block or AUTO_KNN_BLOCK  # auto: avoid O(n²) HBM at scale
     if n > block:
         _, idx = knn_graph_blocked(x, k, valid=valid, block=block, impl=impl)
     else:

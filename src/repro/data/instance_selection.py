@@ -16,7 +16,6 @@ from typing import Dict, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.ihtc import ihtc
 from repro.core.itis import itis
 from repro.core.prototypes import compose_assignments, standardize
 from repro.kernels import ops

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro import runtime
+
 
 def _knn_kernel(x_ref, y_ref, yv_ref, bd_ref, bi_ref, *, k, bq, bk, exclude_self):
     j = pl.program_id(1)
@@ -63,10 +65,33 @@ def _knn_kernel(x_ref, y_ref, yv_ref, bd_ref, bi_ref, *, k, bq, bk, exclude_self
     bi_ref[...] = jnp.stack(new_i, axis=1)
 
 
+def knn_topk(
+    x: jax.Array,
+    k: int,
+    valid: jax.Array | None = None,
+    *,
+    exclude_self: bool = True,
+    block_q: int | None = None,
+    block_k: int | None = None,
+    interpret: bool = False,
+):
+    """k nearest neighbours of each row of x within x.
+
+    Returns (dists (n,k) ascending sq-L2, idx (n,k); unfilled slots inf/-1).
+    ``block_q``/``block_k`` default to the active runtime config's tile
+    sizes (resolved here, before the jit boundary).
+    """
+    cfg = runtime.active()
+    block_q = cfg.block_q if block_q is None else block_q
+    block_k = cfg.block_k if block_k is None else block_k
+    return _knn_topk(x, k, valid, exclude_self=exclude_self,
+                     block_q=block_q, block_k=block_k, interpret=interpret)
+
+
 @functools.partial(
     jax.jit, static_argnames=("k", "block_q", "block_k", "exclude_self", "interpret")
 )
-def knn_topk(
+def _knn_topk(
     x: jax.Array,
     k: int,
     valid: jax.Array | None = None,
@@ -76,25 +101,30 @@ def knn_topk(
     block_k: int = 512,
     interpret: bool = False,
 ):
-    """k nearest neighbours of each row of x within x.
-
-    Returns (dists (n,k) ascending sq-L2, idx (n,k); unfilled slots inf/-1).
-    """
     n, d = x.shape
     if valid is None:
         valid = jnp.ones((n,), jnp.float32)
     else:
         valid = valid.astype(jnp.float32)
 
-    bq = min(block_q, max(n, 8))
-    bk = min(block_k, max(n, 8))
-    n_padq = (-n) % bq
-    n_padk = (-n) % bk
-    pad = max(n_padq, n_padk)
+    # Tiling: the grid must cover the padded row count *exactly* in both
+    # axes — Mosaic block shapes that do not divide the array mis-tile the
+    # BlockSpec grid (e.g. n=300, block_q=256, block_k=512 used to pad to
+    # 512 rows with a 300-wide key block: 512 % 300 != 0). The query block
+    # is clamped to an 8-aligned padded row count (so the key-block divisor
+    # search below can never collapse to degenerate sub-sublane widths on a
+    # prime row count), rows are padded to a bq multiple, and the key block
+    # is the largest size <= block_k that divides the padded count: both
+    # grid axes tile with zero remainder.
+    rows8 = -(-max(n, 8) // 8) * 8
+    bq = min(block_q, rows8)
+    np_ = -(-rows8 // bq) * bq  # round padded rows up to a bq multiple
+    limit = min(block_k, np_)
+    bk = next(b for b in range(limit, 0, -1) if np_ % b == 0)
+    pad = np_ - n
     d_pad = (-d) % 128 if d > 128 else (128 - d)
     xp = jnp.pad(x, ((0, pad), (0, d_pad)))
     vp = jnp.pad(valid, (0, pad))
-    np_ = xp.shape[0]
 
     grid = (np_ // bq, np_ // bk)
     kernel = functools.partial(

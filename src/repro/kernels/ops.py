@@ -1,10 +1,14 @@
 """Jit'd public wrappers around the Pallas kernels.
 
 Dispatch policy (``impl=``):
+  * ``None``     — pull the policy from the active runtime config
+    (:func:`repro.runtime.active`); this is the default everywhere, so one
+    ``runtime.configure(impl=...)`` switches the whole pipeline.
   * ``"auto"``   — Pallas on TPU, jnp reference elsewhere (XLA:CPU/GPU compile
     the references well; Pallas-interpret would be orders slower).
   * ``"pallas"`` — force the kernel; on non-TPU backends runs ``interpret=True``
-    (that is exactly what the correctness tests do).
+    (that is exactly what the correctness tests do) unless the runtime config
+    pins ``interpret`` explicitly.
   * ``"ref"``    — force the pure-jnp oracle.
 
 The dry-run/roofline path always uses ``"ref"`` so that
@@ -18,6 +22,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import runtime
+
 from . import flash_attention as _fa
 from . import knn_topk as _knn
 from . import pairwise_l2 as _pw
@@ -25,13 +31,18 @@ from . import ref
 from . import segment_sum as _ss
 
 
-def _resolve(impl: str) -> str:
+def _resolve(impl: Optional[str] = None) -> str:
+    if impl is None:
+        impl = runtime.active().impl
     if impl == "auto":
         return "pallas" if jax.default_backend() == "tpu" else "ref"
     return impl
 
 
 def _interpret() -> bool:
+    pinned = runtime.active().interpret
+    if pinned is not None:
+        return bool(pinned)
     return jax.default_backend() != "tpu"
 
 
@@ -40,7 +51,7 @@ def pairwise_sq_l2(
     y: jax.Array,
     *,
     y_valid: Optional[jax.Array] = None,
-    impl: str = "auto",
+    impl: Optional[str] = None,
 ) -> jax.Array:
     if _resolve(impl) == "pallas":
         return _pw.pairwise_sq_l2(x, y, y_valid, interpret=_interpret())
@@ -53,7 +64,7 @@ def knn(
     *,
     valid: Optional[jax.Array] = None,
     exclude_self: bool = True,
-    impl: str = "auto",
+    impl: Optional[str] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     if _resolve(impl) == "pallas":
         return _knn.knn_topk(
@@ -68,7 +79,7 @@ def segment_sum(
     num_segments: int,
     *,
     weights: Optional[jax.Array] = None,
-    impl: str = "auto",
+    impl: Optional[str] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     if _resolve(impl) == "pallas":
         return _ss.segment_sum(
@@ -83,8 +94,8 @@ def blocked_segment_sum(
     num_segments: int,
     *,
     weights: Optional[jax.Array] = None,
-    n_blocks: int = 8,
-    impl: str = "auto",
+    n_blocks: Optional[int] = None,
+    impl: Optional[str] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Segment sum with a *fixed* reduction tree (DESIGN.md §4.3).
 
@@ -97,8 +108,11 @@ def blocked_segment_sum(
     block order reproduces this result bit-for-bit. This is what makes the
     distributed ITIS/IHTC pipeline label-identical to the single-device one.
 
+    ``n_blocks`` defaults to the active runtime config's reduction width;
     ``n_blocks <= 1`` falls back to the plain one-shot ``segment_sum``.
     """
+    if n_blocks is None:
+        n_blocks = runtime.active().n_blocks
     n = x.shape[0]
     if n_blocks <= 1:
         return segment_sum(x, segment_ids, num_segments, weights=weights,
@@ -130,7 +144,7 @@ def flash_attention(
     scale: Optional[float] = None,
     kv_bias: Optional[jax.Array] = None,
     logit_softcap: float = 0.0,
-    impl: str = "auto",
+    impl: Optional[str] = None,
 ) -> jax.Array:
     """GQA-aware attention entry point: q (b, hq, lq, dh); k/v (b, hkv, lk, dh)."""
     hq, hkv = q.shape[1], k.shape[1]

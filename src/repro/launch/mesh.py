@@ -10,10 +10,9 @@ from typing import Optional, Tuple
 
 import jax
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.models.frontends import VISION_PREFIX_TOKENS
 from repro.models.transformer import ShardingPlan
 
 

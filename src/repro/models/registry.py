@@ -10,7 +10,7 @@ Batch conventions (all inputs produced by data/pipeline.py or input_specs):
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -11,9 +11,8 @@ standard production pattern, cf. MaxText).
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Any, List, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

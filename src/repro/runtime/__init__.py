@@ -1,0 +1,16 @@
+"""Runtime subsystem: one home for every dispatch/sharding knob.
+
+``runtime.active()`` is what every kernel wrapper and driver consults for
+its defaults; ``with runtime.configure(...)`` scopes an override. See
+runtime/config.py and DESIGN.md §10 for the dispatch contract.
+"""
+from repro.runtime.config import (  # noqa: F401
+    RuntimeConfig,
+    active,
+    config_from_env,
+    configure,
+    default_config,
+    dispatch_key,
+    set_default,
+    update_default,
+)

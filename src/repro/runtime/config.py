@@ -1,0 +1,183 @@
+"""Process-wide runtime configuration for kernel dispatch and sharding.
+
+Every knob that used to be hand-threaded through the pipeline as a kwarg
+(``impl=``, ``knn_block=``, ``n_blocks=``, Pallas block sizes, the mesh) now
+has exactly one home: the active :class:`RuntimeConfig`. Call sites keep
+their keyword arguments — an explicit kwarg always wins — but the *default*
+for every one of them is pulled from here, so switching the whole pipeline
+to a new backend / block size / mesh is one ``configure(...)`` instead of an
+edit across 18 files (the alpa ``GlobalConfig`` idiom, adapted to an
+immutable config + context stack so scoped overrides compose).
+
+Three layers, last one wins:
+
+  1. the built-in defaults of :class:`RuntimeConfig`;
+  2. ``REPRO_*`` environment variables, read once at import into the
+     process-global default (see ``_ENV_FIELDS``);
+  3. ``with configure(impl="ref", knn_block=4096): ...`` — a thread-local
+     override stack for scoped changes (nests; exceptions unwind it).
+
+Dispatch contract (DESIGN.md §10): jitted entry points resolve their
+``None`` defaults from the active config *before* tracing and pass concrete
+values down as static arguments, so a config change can never be masked by
+a stale jit cache — the cache key always contains the resolved values.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import threading
+from typing import Any, Iterator, Mapping, Optional
+
+_IMPLS = ("auto", "pallas", "ref")
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """Immutable snapshot of every dispatch/sharding knob.
+
+    Fields (``None`` means "decide from the environment at use time"):
+      impl: kernel dispatch policy — "auto" (Pallas on TPU, jnp reference
+        elsewhere), "pallas" (force the kernel), "ref" (force the oracle).
+      interpret: force Pallas interpret mode on/off; None = interpret
+        everywhere except real TPUs (the existing behaviour).
+      knn_block: query/key block for the blocked kNN drivers; 0 = auto
+        (one-shot below the O(n²)-HBM threshold, blocks of
+        ``repro.core.knn.AUTO_KNN_BLOCK`` rows above — shared by
+        ``threshold_clustering`` and ``knn_graph_blocked``).
+      block_q / block_k: Pallas knn_topk tile sizes.
+      n_blocks: width of the canonical fixed reduction tree used by every
+        segment-sum accumulation (the single/multi-device parity contract,
+        DESIGN.md §4.3).
+      precision: dtype name ("float32" | "bfloat16") used by the serving
+        path for query/prototype distance evaluation.
+      mesh: default jax.sharding.Mesh for ``ihtc``/``ClusterIndex.assign``;
+        None = single device unless a mesh is passed explicitly.
+      axis_name: mesh axis the data dimension is sharded over.
+    """
+
+    impl: str = "auto"
+    interpret: Optional[bool] = None
+    knn_block: int = 0
+    block_q: int = 256
+    block_k: int = 512
+    n_blocks: int = 8
+    precision: str = "float32"
+    mesh: Any = None
+    axis_name: str = "data"
+
+    def __post_init__(self) -> None:
+        if self.impl not in _IMPLS:
+            raise ValueError(f"impl must be one of {_IMPLS}, got {self.impl!r}")
+        if self.knn_block < 0:
+            raise ValueError(f"knn_block must be >= 0, got {self.knn_block}")
+        for name in ("block_q", "block_k", "n_blocks"):
+            if getattr(self, name) < 1:
+                raise ValueError(f"{name} must be >= 1, got {getattr(self, name)}")
+        if self.precision not in ("float32", "bfloat16"):
+            raise ValueError(f"precision must be 'float32' or 'bfloat16', "
+                             f"got {self.precision!r}")
+
+    def replace(self, **overrides: Any) -> "RuntimeConfig":
+        return dataclasses.replace(self, **overrides)
+
+    def dispatch_key(self) -> tuple:
+        """Hashable fingerprint of every field a kernel wrapper may read at
+        trace time. Jitted inner functions take this as an extra static
+        argument, so a config change always retraces instead of hitting a
+        cache entry compiled under the previous config — the §10
+        no-stale-cache contract, extended to fields the outer jit does not
+        itself resolve (``interpret``, Pallas tile sizes, ...). ``mesh`` /
+        ``axis_name`` / ``precision`` are excluded: they are only consulted
+        at the host-driver level and resolved into explicit statics, so
+        including them would just force spurious recompiles.
+        """
+        return (self.impl, self.interpret, self.knn_block, self.block_q,
+                self.block_k, self.n_blocks)
+
+
+def _parse_bool(s: str) -> bool:
+    return s.strip().lower() in ("1", "true", "yes", "on")
+
+
+# env var -> (field, parser); mesh has no env form (it is a live object)
+_ENV_FIELDS = {
+    "REPRO_IMPL": ("impl", str),
+    "REPRO_INTERPRET": ("interpret", _parse_bool),
+    "REPRO_KNN_BLOCK": ("knn_block", int),
+    "REPRO_BLOCK_Q": ("block_q", int),
+    "REPRO_BLOCK_K": ("block_k", int),
+    "REPRO_N_BLOCKS": ("n_blocks", int),
+    "REPRO_PRECISION": ("precision", str),
+    "REPRO_AXIS_NAME": ("axis_name", str),
+}
+
+
+def config_from_env(env: Optional[Mapping[str, str]] = None) -> RuntimeConfig:
+    """Built-in defaults overridden by any ``REPRO_*`` variables in ``env``."""
+    env = os.environ if env is None else env
+    overrides = {}
+    for var, (field, parse) in _ENV_FIELDS.items():
+        if var in env and env[var] != "":
+            overrides[field] = parse(env[var])
+    return RuntimeConfig(**overrides)
+
+
+# process-global default (layer 2) + per-thread override stack (layer 3)
+_default = config_from_env()
+
+
+class _Stack(threading.local):
+    def __init__(self) -> None:
+        self.frames: list = []
+
+
+_stack = _Stack()
+
+
+def active() -> RuntimeConfig:
+    """The config governing dispatch right now (innermost override wins)."""
+    return _stack.frames[-1] if _stack.frames else _default
+
+
+def dispatch_key() -> tuple:
+    """``active().dispatch_key()`` — the static cache-key fingerprint."""
+    return active().dispatch_key()
+
+
+def default_config() -> RuntimeConfig:
+    """The process-global default (env-seeded; ignores ``configure`` scopes)."""
+    return _default
+
+
+def set_default(config: RuntimeConfig) -> RuntimeConfig:
+    """Replace the process-global default; returns the previous one."""
+    global _default
+    if not isinstance(config, RuntimeConfig):
+        raise TypeError(f"expected RuntimeConfig, got {type(config).__name__}")
+    prev, _default = _default, config
+    return prev
+
+
+def update_default(**overrides: Any) -> RuntimeConfig:
+    """Update fields of the process-global default in place (returns it)."""
+    global _default
+    _default = _default.replace(**overrides)
+    return _default
+
+
+@contextlib.contextmanager
+def configure(**overrides: Any) -> Iterator[RuntimeConfig]:
+    """Scoped override: ``with configure(impl="ref"): ...``.
+
+    Overrides stack on top of the currently-active config (so nested scopes
+    compose) and are popped on exit, including on exceptions. Thread-local:
+    a scope opened on one thread never leaks into another.
+    """
+    cfg = active().replace(**overrides)
+    _stack.frames.append(cfg)
+    try:
+        yield cfg
+    finally:
+        _stack.frames.pop()

@@ -1,2 +1,4 @@
-"""Serving: batched engine + IHTC KV-cache prototype compression."""
+"""Serving: batched LM engine, IHTC KV-cache prototype compression, and the
+micro-batched online cluster-assignment service."""
+from repro.serve.cluster_service import ClusterService  # noqa: F401
 from repro.serve.engine import ServeConfig, ServeEngine  # noqa: F401

@@ -9,7 +9,7 @@ fills — steady-state memory is O(S / t^m + tail) per sequence.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,7 @@ computation sharded end-to-end and re-gathers params only where consumed).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,13 +8,12 @@ unbiased estimate of the full-corpus loss.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, ParallelConfig
+from repro.configs.base import ParallelConfig
 from repro.models.registry import ModelBundle
 from repro.models.transformer import ShardingPlan
 from repro.train.optimizer import OptConfig, adamw_update

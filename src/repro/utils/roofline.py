@@ -12,8 +12,8 @@ the step; the MODEL/HLO ratio flags remat- or dispatch-inflated compute.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, asdict
-from typing import Dict, Optional
+from dataclasses import dataclass
+from typing import Optional
 
 PEAK_FLOPS = 197e12     # bf16 FLOP/s per chip
 HBM_BW = 819e9          # B/s per chip

@@ -1,0 +1,205 @@
+"""Small-n oracle tests: the JAX HAC / DBSCAN backends vs naive pure-Python
+references built from first principles (member sets and brute-force scans,
+no Lance–Williams recurrence, no label propagation), including the
+weighted/mass cases that the prototype pipeline depends on."""
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster.dbscan import dbscan
+from repro.cluster.hac import hac
+
+
+def partition(labels):
+    """Canonical form of a flat clustering: set of frozensets of indices."""
+    labels = np.asarray(labels)
+    return {
+        frozenset(np.flatnonzero(labels == c).tolist())
+        for c in np.unique(labels[labels >= 0])
+    }
+
+
+# ------------------------------------------------------------------ HAC
+
+
+def _cluster_dist(a, b, d, w, cents, linkage):
+    """Dissimilarity between member-index sets a and b, from scratch."""
+    if linkage == "single":
+        return min(d[i, j] for i in a for j in b)
+    if linkage == "complete":
+        return max(d[i, j] for i in a for j in b)
+    wa = sum(w[i] for i in a)
+    wb = sum(w[j] for j in b)
+    if linkage == "average":  # mass-weighted mean pairwise dissimilarity
+        return sum(w[i] * w[j] * d[i, j] for i in a for j in b) / (wa * wb)
+    # ward: (Wa Wb / (Wa + Wb)) ||centroid_a - centroid_b||^2
+    ca = sum(cents[i] * w[i] for i in a) / wa
+    cb = sum(cents[j] * w[j] for j in b) / wb
+    return wa * wb / (wa + wb) * float(((ca - cb) ** 2).sum())
+
+
+def naive_hac(x, k, linkage, weights=None):
+    """Greedy agglomeration over explicit member sets (O(n^4), tiny n)."""
+    x = np.asarray(x, np.float64)
+    n = len(x)
+    w = np.ones(n) if weights is None else np.asarray(weights, np.float64)
+    sq = ((x[:, None] - x[None]) ** 2).sum(-1)
+    d = sq if linkage == "ward" else np.sqrt(sq)
+    clusters = [{i} for i in range(n)]
+    while len(clusters) > k:
+        best, bi, bj = np.inf, -1, -1
+        for i, j in itertools.combinations(range(len(clusters)), 2):
+            dd = _cluster_dist(clusters[i], clusters[j], d, w, x, linkage)
+            if dd < best:
+                best, bi, bj = dd, i, j
+        clusters[bi] |= clusters[bj]
+        del clusters[bj]
+    labels = np.zeros(n, int)
+    for c, members in enumerate(clusters):
+        for i in members:
+            labels[i] = c
+    return labels
+
+
+@pytest.mark.parametrize("linkage", ["single", "complete", "average", "ward"])
+def test_hac_matches_naive_reference(rng, linkage):
+    x = rng.normal(size=(14, 3)).astype(np.float32)
+    got = hac(jnp.asarray(x), 4, linkage=linkage).labels
+    want = naive_hac(x, 4, linkage)
+    assert partition(got) == partition(want), linkage
+
+
+@pytest.mark.parametrize("linkage", ["average", "ward"])
+def test_hac_weighted_matches_naive_reference(rng, linkage):
+    """Mass-weighted linkages (the prototype-clustering case): HAC on
+    weighted points must agree with the from-scratch weighted oracle."""
+    x = rng.normal(size=(12, 2)).astype(np.float32)
+    w = rng.integers(1, 6, size=12).astype(np.float32)
+    got = hac(jnp.asarray(x), 3, linkage=linkage,
+              weights=jnp.asarray(w)).labels
+    want = naive_hac(x, 3, linkage, weights=w)
+    assert partition(got) == partition(want), linkage
+
+
+@pytest.mark.parametrize("linkage", ["average", "ward"])
+def test_hac_mass_equals_replication(rng, linkage):
+    """A point with mass q must cluster like q coincident unit points — the
+    invariant that makes HAC-on-prototypes approximate HAC-on-units."""
+    x = rng.normal(size=(8, 2)).astype(np.float32)
+    w = np.array([3, 1, 1, 2, 1, 1, 1, 1], np.float32)
+    got = hac(jnp.asarray(x), 3, linkage=linkage,
+              weights=jnp.asarray(w)).labels
+    # replicate each point w_i times and cluster unweighted, from scratch
+    rep = np.repeat(np.arange(8), w.astype(int))
+    want_rep = naive_hac(x[rep], 3, linkage)
+    # replicas of one point always end up together; map back
+    want = np.array([want_rep[np.flatnonzero(rep == i)[0]] for i in range(8)])
+    for i in range(8):
+        assert len(set(want_rep[rep == i])) == 1
+    assert partition(got) == partition(want), linkage
+
+
+def test_hac_masked_rows_are_inert(rng):
+    x = rng.normal(size=(10, 2)).astype(np.float32)
+    pad = np.full((4, 2), 37.0, np.float32)
+    xp = jnp.asarray(np.vstack([x, pad]))
+    valid = jnp.asarray([True] * 10 + [False] * 4)
+    got = hac(xp, 3, linkage="complete", valid=valid).labels
+    lab = np.asarray(got)
+    assert (lab[10:] == -1).all()
+    assert partition(lab[:10]) == partition(naive_hac(x, 3, "complete"))
+
+
+# ---------------------------------------------------------------- DBSCAN
+
+
+def naive_dbscan(x, eps, min_pts, weights=None):
+    """Brute-force DBSCAN matching the backend's labelling conventions:
+    components carry the min core index as representative; borders adopt the
+    neighbouring core component with the smallest representative; labels are
+    representative ranks; noise is -1."""
+    x = np.asarray(x, np.float64)
+    n = len(x)
+    w = np.ones(n) if weights is None else np.asarray(weights, np.float64)
+    d = np.sqrt(((x[:, None] - x[None]) ** 2).sum(-1))
+    neigh = [set(np.flatnonzero(d[i] <= eps).tolist()) for i in range(n)]
+    density = np.array([sum(w[j] for j in neigh[i]) for i in range(n)])
+    core = density >= min_pts
+
+    rep = -np.ones(n, int)  # component representative (min core index)
+    for i in range(n):  # BFS per unvisited core
+        if not core[i] or rep[i] >= 0:
+            continue
+        stack, members = [i], []
+        seen = {i}
+        while stack:
+            u = stack.pop()
+            members.append(u)
+            for v in neigh[u]:
+                if core[v] and v not in seen:
+                    seen.add(v)
+                    stack.append(v)
+        r = min(members)
+        for u in members:
+            rep[u] = r
+
+    full = -np.ones(n, int)
+    for i in range(n):
+        if core[i]:
+            full[i] = rep[i]
+        else:  # border: neighbouring core component with smallest rep
+            cands = [rep[j] for j in neigh[i] if core[j]]
+            if cands:
+                full[i] = min(cands)
+    reps = sorted({r for r in full if r >= 0})
+    rank = {r: c for c, r in enumerate(reps)}
+    return np.array([rank[r] if r >= 0 else -1 for r in full])
+
+
+def test_dbscan_matches_naive_reference(rng):
+    x = rng.normal(size=(24, 2)).astype(np.float32)
+    got = np.asarray(dbscan(jnp.asarray(x), eps=0.8, min_pts=3.0).labels)
+    want = naive_dbscan(x, 0.8, 3.0)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_dbscan_weighted_matches_naive_reference(rng):
+    """Weighted density (prototype masses): exact agreement with the naive
+    oracle, including which points become core."""
+    x = rng.normal(size=(20, 2)).astype(np.float32)
+    w = rng.integers(1, 5, size=20).astype(np.float32)
+    r = dbscan(jnp.asarray(x), eps=0.7, min_pts=4.0, weights=jnp.asarray(w))
+    want = naive_dbscan(x, 0.7, 4.0, weights=w)
+    np.testing.assert_array_equal(np.asarray(r.labels), want)
+    # core flags agree too
+    d = np.sqrt(((x[:, None] - x[None]) ** 2).sum(-1))
+    dens = (w[None, :] * (d <= 0.7)).sum(1)
+    np.testing.assert_array_equal(np.asarray(r.is_core), dens >= 4.0)
+
+
+def test_dbscan_mass_equals_replication(rng):
+    """DBSCAN on weighted points == DBSCAN on the replicated unit points."""
+    x = rng.normal(scale=0.5, size=(10, 2)).astype(np.float32)
+    w = np.array([4, 1, 1, 1, 2, 1, 1, 1, 1, 1], np.float32)
+    got = np.asarray(
+        dbscan(jnp.asarray(x), eps=0.6, min_pts=3.0,
+               weights=jnp.asarray(w)).labels)
+    rep = np.repeat(np.arange(10), w.astype(int))
+    want_rep = naive_dbscan(x[rep], 0.6, 3.0)
+    want = np.array([want_rep[np.flatnonzero(rep == i)[0]] for i in range(10)])
+    assert partition(got) == partition(want)
+    # noise sets match as well
+    np.testing.assert_array_equal(got == -1, want == -1)
+
+
+def test_dbscan_masked_rows_are_inert(rng):
+    x = rng.normal(size=(15, 2)).astype(np.float32)
+    pad = np.zeros((5, 2), np.float32)  # would be dense if not masked
+    xp = jnp.asarray(np.vstack([x, pad]))
+    valid = jnp.asarray([True] * 15 + [False] * 5)
+    r = dbscan(xp, eps=0.8, min_pts=3.0, valid=valid)
+    lab = np.asarray(r.labels)
+    assert (lab[15:] == -1).all()
+    np.testing.assert_array_equal(lab[:15], naive_dbscan(x, 0.8, 3.0))

@@ -1,5 +1,4 @@
 """Data pipeline determinism + ITIS instance selection as a data stage."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 

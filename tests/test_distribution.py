@@ -11,8 +11,6 @@ import os
 import subprocess
 import sys
 
-import pytest
-
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
 _SCRIPT_COMMON = """
@@ -196,6 +194,26 @@ assert int(res1.n_prototypes) == int(res2.n_prototypes)
 res3 = ihtc(x, 3, 2, "kmeans", k=3, key=jax.random.PRNGKey(7),
             mesh=make_data_mesh())
 assert np.array_equal(l1, np.asarray(res3.labels))
+# dispatch resolved via RuntimeConfig (no kwargs): same bits again, and a
+# configured mesh shards the plain ihtc() call
+from repro import runtime
+with runtime.configure(mesh=make_data_mesh()):
+    res4 = ihtc(x, 3, 2, "kmeans", k=3, key=jax.random.PRNGKey(7))
+assert np.array_equal(l1, np.asarray(res4.labels))
+assert np.array_equal(p1.view(np.uint32),
+                      np.asarray(res4.protos).view(np.uint32))
+# the fitted index serves the mesh-fitted result identically; batch 100
+# is not divisible by the 8 devices (exercises the shard-pad path), and
+# assign under a configured mesh matches the single-device assign
+from repro.core import ClusterIndex
+idx1 = ClusterIndex.from_result(res1)
+idx2 = ClusterIndex.from_result(res2)
+q = x[:100]
+want = np.asarray(idx1.assign(q))
+assert np.array_equal(want, np.asarray(idx2.assign(q)))
+with runtime.configure(mesh=make_data_mesh()):
+    got = np.asarray(idx2.replicate(make_data_mesh()).assign(q))
+assert np.array_equal(want, got)
 print("SHARDED-IHTC-PARITY-OK")
 """)
     assert "SHARDED-IHTC-PARITY-OK" in out

@@ -54,6 +54,25 @@ def test_knn_insufficient_candidates(rng):
     assert np.all(np.isinf(np.asarray(gd[:, 4:])))
 
 
+@pytest.mark.parametrize("n,bq,bk", [
+    (300, 256, 512),   # regression: pad=max(212, 0) left 512 % 300 != 0
+    (300, 512, 256),   # bq clamps to 300; bk must shrink to a divisor
+    (260, 256, 96),    # bk does not divide the bq-padded count
+    (7, 256, 512),     # sub-minimum n pads to the floor of 8 rows
+])
+def test_knn_topk_ragged_blocks(rng, n, bq, bk):
+    """Awkward (n, block) combinations must still tile the BlockSpec grid
+    exactly (both grid axes cover the padded rows with zero remainder)."""
+    from repro.kernels.knn_topk import knn_topk
+
+    x = jnp.asarray(rng.normal(size=(n, 5)), jnp.float32)
+    k = min(4, n - 1)
+    gd, gi = knn_topk(x, k, block_q=bq, block_k=bk, interpret=True)
+    wd, wi = ref.knn(x, k)
+    np.testing.assert_allclose(gd, wd, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(gi, wi)
+
+
 @pytest.mark.parametrize("n,d,s", [(10, 3, 4), (100, 7, 13), (257, 2, 64)])
 def test_segment_sum(rng, n, d, s):
     x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)

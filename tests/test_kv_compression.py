@@ -7,7 +7,6 @@ the error in the general case."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import ARCHS, smoke_config
 from repro.kernels import ref

@@ -1,0 +1,266 @@
+"""Runtime-config dispatch, the backend registry, and the fitted
+ClusterIndex / ClusterService online-assignment path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import gmm_sample
+from repro import runtime
+from repro.cluster.registry import (
+    available_backends,
+    register_backend,
+    resolve_backend,
+    validate_backend_fn,
+)
+from repro.core import ClusterIndex, ihtc, threshold_clustering
+from repro.serve import ClusterService
+
+
+# ---------------------------------------------------------------- runtime
+
+
+def test_configure_scopes_nest_and_unwind():
+    base = runtime.active()
+    assert base.impl == "auto"
+    with runtime.configure(impl="ref", knn_block=64) as cfg:
+        assert cfg is runtime.active()
+        assert runtime.active().impl == "ref"
+        assert runtime.active().knn_block == 64
+        with runtime.configure(n_blocks=4):
+            inner = runtime.active()
+            assert (inner.impl, inner.knn_block, inner.n_blocks) == ("ref", 64, 4)
+        assert runtime.active().n_blocks == base.n_blocks
+    assert runtime.active() == base
+
+
+def test_configure_unwinds_on_exception():
+    before = runtime.active()
+    with pytest.raises(RuntimeError):
+        with runtime.configure(impl="ref"):
+            raise RuntimeError("boom")
+    assert runtime.active() == before
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        runtime.RuntimeConfig(impl="cuda")
+    with pytest.raises(ValueError):
+        runtime.RuntimeConfig(n_blocks=0)
+    with pytest.raises(ValueError):
+        runtime.RuntimeConfig(knn_block=-1)
+    with pytest.raises(ValueError):
+        runtime.RuntimeConfig(precision="float64")
+
+
+def test_config_from_env():
+    cfg = runtime.config_from_env(
+        {"REPRO_IMPL": "ref", "REPRO_KNN_BLOCK": "4096",
+         "REPRO_INTERPRET": "true", "REPRO_N_BLOCKS": "16"})
+    assert cfg.impl == "ref"
+    assert cfg.knn_block == 4096
+    assert cfg.interpret is True
+    assert cfg.n_blocks == 16
+    # unknown/empty vars leave defaults untouched
+    cfg2 = runtime.config_from_env({"REPRO_IMPL": "", "OTHER": "x"})
+    assert cfg2 == runtime.RuntimeConfig()
+
+
+def test_set_default_roundtrip():
+    prev = runtime.set_default(runtime.RuntimeConfig(impl="ref"))
+    try:
+        assert runtime.active().impl == "ref"
+        # scoped overrides stack on the new default
+        with runtime.configure(knn_block=32):
+            assert runtime.active().impl == "ref"
+    finally:
+        runtime.set_default(prev)
+    assert runtime.active() == prev
+
+
+def test_config_driven_dispatch_matches_explicit_kwargs(rng):
+    """De-threading contract: resolving impl/knn_block via the config is
+    the same computation as passing them explicitly (no behavior drift)."""
+    x, _ = gmm_sample(600, rng)
+    xj = jnp.asarray(x)
+    explicit = ihtc(xj, 2, 2, "kmeans", k=3, key=jax.random.PRNGKey(5),
+                    impl="ref", knn_block=128)
+    with runtime.configure(impl="ref", knn_block=128):
+        configured = ihtc(xj, 2, 2, "kmeans", k=3, key=jax.random.PRNGKey(5))
+    np.testing.assert_array_equal(np.asarray(explicit.labels),
+                                  np.asarray(configured.labels))
+    np.testing.assert_array_equal(
+        np.asarray(explicit.protos).view(np.uint32),
+        np.asarray(configured.protos).view(np.uint32))
+
+
+def test_config_change_retraces_inner_jit(rng):
+    """Trace-time config reads (Pallas tile sizes, interpret) are pinned
+    into the jit cache key via dispatch_key(): changing them between
+    identical-shape calls must retrace, not reuse a stale entry."""
+    from repro.core.tc import _threshold_clustering
+
+    x, _ = gmm_sample(64, rng)
+    xj = jnp.asarray(x)
+    threshold_clustering(xj, 2, impl="ref")
+    before = _threshold_clustering._cache_size()
+    with runtime.configure(block_k=64):  # read only while tracing knn_topk
+        threshold_clustering(xj, 2, impl="ref")
+    assert _threshold_clustering._cache_size() == before + 1
+    with runtime.configure(block_k=64):  # same key again: cached now
+        threshold_clustering(xj, 2, impl="ref")
+    assert _threshold_clustering._cache_size() == before + 1
+
+
+def test_explicit_kwarg_overrides_config(rng):
+    """An explicit kwarg must win over the active config."""
+    x, _ = gmm_sample(200, rng)
+    xj = jnp.asarray(x)
+    want = threshold_clustering(xj, 3, impl="ref", knn_block=64)
+    with runtime.configure(knn_block=9999):  # would be one-shot if used
+        got = threshold_clustering(xj, 3, impl="ref", knn_block=64)
+    np.testing.assert_array_equal(np.asarray(want.labels),
+                                  np.asarray(got.labels))
+
+
+# ---------------------------------------------------------------- registry
+
+
+def test_builtin_backends_registered():
+    assert {"kmeans", "hac", "dbscan"} <= set(available_backends())
+    fn = resolve_backend("kmeans")
+    assert callable(fn)
+
+
+def test_resolve_unknown_backend_raises():
+    with pytest.raises(ValueError, match="unknown backend"):
+        resolve_backend("spectral")
+
+
+def test_validate_rejects_bad_signature():
+    def missing_kwargs(x, *, valid=None):
+        return x
+
+    with pytest.raises(TypeError, match="weights"):
+        validate_backend_fn(missing_kwargs)
+
+    def no_positional(*, valid=None, weights=None, key=None, impl=None):
+        return None
+
+    with pytest.raises(TypeError, match="positional"):
+        validate_backend_fn(no_positional)
+
+
+def test_register_and_use_custom_backend(rng):
+    @register_backend("_test_constant")
+    def constant_backend(x, *, valid=None, weights=None, key=None,
+                         impl=None, **_):
+        del weights, key, impl
+        v = jnp.ones((x.shape[0],), bool) if valid is None else valid
+        return jnp.where(v, 0, -1).astype(jnp.int32)
+
+    try:
+        assert "_test_constant" in available_backends()
+        with pytest.raises(ValueError, match="already registered"):
+            register_backend("_test_constant")(lambda x, **kw: x)
+        x, _ = gmm_sample(120, rng)
+        res = ihtc(jnp.asarray(x), 2, 1, "_test_constant")
+        lab = np.asarray(res.labels)
+        assert (lab == 0).all()  # every unit backs out to the single cluster
+    finally:
+        from repro.cluster import registry
+
+        registry._REGISTRY.pop("_test_constant", None)
+
+
+# ------------------------------------------------------- ClusterIndex/serve
+
+
+def _blobs(rng, n_per=100, spread=0.3):
+    centers = np.array([[0, 0], [6, 0], [3, 6]], float)
+    comp = np.repeat(np.arange(3), n_per)
+    x = centers[comp] + rng.normal(scale=spread, size=(3 * n_per, 2))
+    return jnp.asarray(x, jnp.float32), comp
+
+
+def test_assign_reproduces_training_labels_exactly(rng):
+    """Acceptance contract: nearest-valid-prototype assignment on the
+    training points reproduces the fitted ihtc() labels for all valid rows
+    (well-separated blobs: every point is nearer its own cluster's
+    prototypes than any other cluster's)."""
+    x, _ = _blobs(rng)
+    res = ihtc(x, 2, 2, "kmeans", k=3, key=jax.random.PRNGKey(0))
+    index = ClusterIndex.from_result(res)
+    got = np.asarray(index.assign(x))
+    np.testing.assert_array_equal(got, np.asarray(res.labels))
+
+
+def test_assign_m0_is_exact_identity(rng):
+    """m=0: the prototypes are the points themselves — assign must return
+    each training point's own label (distance-0 self match)."""
+    x, _ = gmm_sample(150, rng)
+    xj = jnp.asarray(x)
+    res = ihtc(xj, 2, 0, "kmeans", k=3, key=jax.random.PRNGKey(1))
+    index = ClusterIndex.from_result(res)
+    np.testing.assert_array_equal(np.asarray(index.assign(xj)),
+                                  np.asarray(res.labels))
+
+
+def test_assign_blocked_matches_one_shot(rng):
+    x, _ = _blobs(rng)
+    index = ClusterIndex.fit(x, 2, 1, "kmeans", k=3,
+                             key=jax.random.PRNGKey(2))
+    q = jnp.asarray(rng.normal(size=(64, 2)), jnp.float32) * 3.0
+    np.testing.assert_array_equal(np.asarray(index.assign(q)),
+                                  np.asarray(index.assign(q, block=17)))
+
+
+def test_assign_labels_new_queries_by_blob(rng):
+    x, _ = _blobs(rng)
+    res = ihtc(x, 2, 2, "kmeans", k=3, key=jax.random.PRNGKey(0))
+    index = ClusterIndex.from_result(res)
+    # fresh draws right on the blob centres must get the blobs' labels
+    train = np.asarray(res.labels)
+    blob_label = [np.bincount(train[i * 100:(i + 1) * 100]).argmax()
+                  for i in range(3)]
+    q = jnp.asarray([[0.0, 0.0], [6.0, 0.0], [3.0, 6.0]], jnp.float32)
+    np.testing.assert_array_equal(np.asarray(index.assign(q)), blob_label)
+
+
+def test_assign_respects_runtime_impl(rng):
+    x, _ = _blobs(rng)
+    index = ClusterIndex.fit(x, 2, 1, "kmeans", k=3,
+                             key=jax.random.PRNGKey(3))
+    q = x[: 50]
+    want = np.asarray(index.assign(q, impl="ref"))
+    with runtime.configure(impl="pallas", interpret=True):
+        got = np.asarray(index.assign(q))
+    np.testing.assert_array_equal(want, got)
+
+
+def test_cluster_service_buckets_and_chunking(rng):
+    x, _ = _blobs(rng)
+    index = ClusterIndex.fit(x, 2, 2, "kmeans", k=3,
+                             key=jax.random.PRNGKey(0))
+    svc = ClusterService(index, buckets=(16, 64, 256))
+    svc.warmup()
+    assert svc.stats["requests"] == 0  # warmup is not traffic
+    want = np.asarray(index.assign(x))
+    # odd sizes pad to buckets; > top bucket chunks through it
+    for n in (1, 16, 17, 100, 300):
+        got = np.asarray(svc.assign(x[:n]))
+        np.testing.assert_array_equal(got, want[:n], err_msg=f"n={n}")
+    st = svc.stats
+    assert st["requests"] == 5
+    assert st["points"] == 1 + 16 + 17 + 100 + 300
+    assert st["bucket_256"] >= 2  # the n=300 request used 256 + 64
+    assert svc.assign(x[:0]).shape == (0,)
+
+
+def test_cluster_service_rejects_bad_buckets(rng):
+    x, _ = _blobs(rng, n_per=20)
+    index = ClusterIndex.fit(x, 2, 1, "kmeans", k=3)
+    with pytest.raises(ValueError):
+        ClusterService(index, buckets=())
+    with pytest.raises(ValueError):
+        ClusterService(index, buckets=(0, 8))

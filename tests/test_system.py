@@ -7,7 +7,7 @@ import numpy as np
 
 from conftest import gmm_sample
 from repro.cluster.metrics import clustering_accuracy
-from repro.configs import ARCHS, SHAPES, smoke_config
+from repro.configs import ARCHS, smoke_config
 from repro.core import ihtc
 from repro.data.instance_selection import (SelectionConfig, reduced_batch,
                                            select_instances)
