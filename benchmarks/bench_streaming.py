@@ -1,0 +1,150 @@
+"""Out-of-core streaming IHTC fit: bounded device memory vs growing n.
+
+Sweeps the dataset size n at a *fixed* chunk/reservoir budget and records,
+per point: streaming wall time, fit throughput, and the peak live
+device-buffer footprint (sampled at every chunk boundary plus the
+finalize/backend steps), against the same numbers for the in-memory
+``ihtc`` driver. The claim under test is the tentpole's memory contract:
+the streaming column stays O(chunk + reservoir) — flat — while the
+in-memory column grows with n (and is skipped entirely past
+``--inmem-max-n``, the point of the exercise).
+
+Writes benchmarks/results/BENCH_streaming.json (schema in
+docs/BENCHMARKS.md); summarized by run.py, which also gained
+``--streaming``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+# direct-run support: repo root for the benchmarks package, src/ for repro
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_REPO, os.path.join(_REPO, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import live_mb, print_csv
+from repro.core import ihtc, ihtc_streaming
+from repro.data import PointStreamConfig, point_chunks
+
+RESULTS = os.path.join(os.path.dirname(os.path.abspath(__file__)), "results")
+
+
+def _watched(chunks, peak):
+    """Pass chunks through, sampling the live device footprint between
+    every chunk (the reservoir + per-chunk buffers are live right here)."""
+    for c in chunks:
+        peak[0] = max(peak[0], live_mb())
+        yield c
+
+
+def run(
+    ns=(8_192, 32_768, 131_072),
+    chunk: int = 2_048,
+    reservoir: int = 0,
+    t: int = 2,
+    m: int = 2,
+    d: int = 8,
+    k: int = 4,
+    inmem_max_n: int = 32_768,
+    seed: int = 0,
+    mode: str = "quick",
+):
+    rows = []
+    for n in ns:
+        cfg = PointStreamConfig(n=n, d=d, chunk=chunk, seed=seed,
+                                kind="blobs", k=k)
+        peak = [0.0]
+        t0 = time.perf_counter()
+        res = ihtc_streaming(
+            _watched(point_chunks(cfg), peak), t, m, "kmeans", k=k,
+            chunk_n=chunk, reservoir_n=reservoir or None,
+            key=jax.random.PRNGKey(seed))
+        jax.block_until_ready(res.proto_labels)
+        peak[0] = max(peak[0], live_mb())
+        stream_sec = time.perf_counter() - t0
+        n_assigned = sum(int((lab >= 0).sum()) for lab in res.iter_labels())
+        row = {
+            "n": n,
+            "chunks": res.n_chunks,
+            "cascades": res.n_cascades,
+            "n_prototypes": int(res.n_prototypes),
+            "all_assigned": n_assigned == n,
+            "stream_seconds": round(stream_sec, 4),
+            "stream_points_per_sec": round(n / stream_sec),
+            "stream_peak_mb": round(peak[0], 3),
+            "inmem_seconds": None,
+            "inmem_peak_mb": None,
+        }
+        del res
+        if n <= inmem_max_n:
+            x = jnp.asarray(np.concatenate(list(point_chunks(cfg))))
+            t0 = time.perf_counter()
+            mem = ihtc(x, t, m, "kmeans", k=k, key=jax.random.PRNGKey(seed))
+            jax.block_until_ready(mem.labels)
+            row["inmem_seconds"] = round(time.perf_counter() - t0, 4)
+            # x + the O(n) level-0 assignment maps are all still live here
+            row["inmem_peak_mb"] = round(live_mb(), 3)
+            del x, mem
+        rows.append(row)
+
+    print_csv(
+        "streaming_ihtc",
+        [(r["n"], r["chunks"], r["cascades"], r["stream_seconds"],
+          r["stream_points_per_sec"], r["stream_peak_mb"],
+          r["inmem_seconds"], r["inmem_peak_mb"]) for r in rows],
+        "n,chunks,cascades,stream_seconds,stream_points_per_sec,"
+        "stream_peak_mb,inmem_seconds,inmem_peak_mb",
+    )
+
+    os.makedirs(RESULTS, exist_ok=True)
+    artifact = {
+        "name": "streaming_ihtc",
+        "mode": mode,
+        "t": t, "m": m, "d": d, "k": k,
+        "chunk_n": chunk,
+        "reservoir_n": reservoir,
+        "recorded_unix": round(time.time(), 1),
+        "rows": rows,
+    }
+    path = os.path.join(RESULTS, "BENCH_streaming.json")
+    with open(path, "w") as f:
+        json.dump(artifact, f, indent=1)
+    print(f"# wrote {os.path.relpath(path, _REPO)}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ns", type=str, default="")
+    ap.add_argument("--chunk", type=int, default=2_048)
+    ap.add_argument("--reservoir", type=int, default=0,
+                    help="0 = auto (4x the per-chunk prototype budget)")
+    ap.add_argument("--t", type=int, default=2)
+    ap.add_argument("--m", type=int, default=2)
+    ap.add_argument("--d", type=int, default=8)
+    ap.add_argument("--inmem-max-n", type=int, default=32_768,
+                    help="skip the in-memory comparison above this n")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny sweep for CI smoke")
+    args = ap.parse_args()
+    if args.quick:
+        run(ns=(4_096, 8_192), chunk=1_024, t=args.t, m=args.m, d=2,
+            inmem_max_n=8_192, mode="smoke")
+        return
+    ns = (tuple(int(v) for v in args.ns.split(",")) if args.ns
+          else (8_192, 32_768, 131_072))
+    run(ns=ns, chunk=args.chunk, reservoir=args.reservoir, t=args.t,
+        m=args.m, d=args.d, inmem_max_n=args.inmem_max_n, mode="cli")
+
+
+if __name__ == "__main__":
+    main()

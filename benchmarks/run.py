@@ -86,7 +86,8 @@ def _bench_json_summary() -> None:
     import glob
     import json
 
-    axes = (("devices", "seconds"), ("batch", "points_per_sec"))
+    axes = (("devices", "seconds"), ("batch", "points_per_sec"),
+            ("n", "stream_peak_mb"))
     results = os.path.join(os.path.dirname(__file__), "results")
     for path in sorted(glob.glob(os.path.join(results, "BENCH_*.json"))):
         with open(path) as f:
@@ -110,8 +111,17 @@ def main() -> None:
                          "(subprocesses with forced CPU device counts)")
     ap.add_argument("--serve", action="store_true",
                     help="also run the ClusterIndex.assign serving sweep")
+    ap.add_argument("--streaming", action="store_true",
+                    help="also run the out-of-core streaming-fit sweep")
+    ap.add_argument("--summary-only", action="store_true",
+                    help="skip every harness; just print the one-line "
+                         "summary per recorded BENCH_*.json artifact")
     args, _ = ap.parse_known_args()
     quick = not args.full
+
+    if args.summary_only:
+        _bench_json_summary()
+        return
 
     from benchmarks import (bench_table1_kmeans, bench_table2_hac,
                             bench_table4_datasets, bench_table7_threshold,
@@ -137,6 +147,11 @@ def main() -> None:
 
             bench_serve.run(n=20_000, buckets=(32, 128, 512, 2048),
                             mode="quick")
+        if args.streaming:
+            from benchmarks import bench_streaming
+
+            bench_streaming.run(ns=(8_192, 32_768), chunk=2_048,
+                                inmem_max_n=32_768, mode="quick")
     else:
         mx = args.max_n or 1_000_000
         bench_table1_kmeans.run(
@@ -158,6 +173,13 @@ def main() -> None:
             bench_serve.run(n=min(mx, 1_000_000), m=3,
                             buckets=(32, 128, 512, 2048, 8192, 32_768),
                             mode="full")
+        if args.streaming:
+            from benchmarks import bench_streaming
+
+            bench_streaming.run(
+                ns=tuple(n for n in (65_536, 262_144, 1_048_576) if n <= mx)
+                or (mx,),
+                chunk=8_192, inmem_max_n=min(mx, 262_144), mode="full")
 
     # dry-run roofline summary, if artifacts exist
     results = os.path.join(os.path.dirname(__file__), "results", "dryrun")

@@ -37,7 +37,9 @@ def bss_tss(
     cent = sums / jnp.maximum(mass, 1e-30)[:, None]
     wss = jnp.sum(w * jnp.sum(jnp.square(x - cent[jnp.where(ok, labels, 0)]), axis=1)
                   * ok.astype(jnp.float32))
-    return (tss - wss) / tss
+    # constant / single-point data has tss == 0; clamp like every other
+    # division here so degenerate inputs report 0.0 instead of NaN
+    return (tss - wss) / jnp.maximum(tss, 1e-30)
 
 
 def confusion(true: np.ndarray, pred: np.ndarray, k_true: int, k_pred: int) -> np.ndarray:

@@ -8,12 +8,22 @@ from repro.core.distributed import (  # noqa: F401
 )
 from repro.core.ihtc import IHTCResult, ihtc  # noqa: F401
 from repro.core.index import ClusterIndex, nearest_valid_prototype  # noqa: F401
-from repro.core.itis import ITISResult, itis, itis_step, level_sizes  # noqa: F401
+from repro.core.itis import (  # noqa: F401
+    ITISResult,
+    itis,
+    itis_step,
+    level_sizes,
+    validate_reduction_params,
+)
 from repro.core.knn import knn_graph, knn_graph_blocked, ring_knn  # noqa: F401
 from repro.core.prototypes import (  # noqa: F401
     PrototypeSet,
     compose_assignments,
     reduce_to_prototypes,
     standardize,
+)
+from repro.core.streaming import (  # noqa: F401
+    StreamingIHTCResult,
+    ihtc_streaming,
 )
 from repro.core.tc import TCResult, threshold_clustering  # noqa: F401

@@ -49,7 +49,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro import runtime
 from repro.cluster.registry import BackendFn, resolve_backend
 from repro.core.ihtc import IHTCResult
-from repro.core.itis import ITISResult, level_sizes
+from repro.core.itis import ITISResult, level_sizes, validate_reduction_params
 from repro.core.knn import _axis_size, ring_knn
 from repro.core.prototypes import compose_assignments
 from repro.core.tc import _NEG, luby_mis_rounds, seed_priorities
@@ -501,6 +501,7 @@ def itis_sharded(
     cfg = runtime.active()
     impl = cfg.impl if impl is None else impl
     axis_name = cfg.axis_name if axis_name is None else axis_name
+    validate_reduction_params(t, m, n=x.shape[0], driver="itis_sharded")
     if mesh is None:
         mesh = cfg.mesh if cfg.mesh is not None else make_data_mesh()
     if key is None:
@@ -577,6 +578,7 @@ def ihtc_sharded(
     cfg = runtime.active()
     impl = cfg.impl if impl is None else impl
     axis_name = cfg.axis_name if axis_name is None else axis_name
+    validate_reduction_params(t, m, n=x.shape[0], driver="ihtc_sharded")
     if mesh is None:
         mesh = cfg.mesh if cfg.mesh is not None else make_data_mesh()
     if key is None:

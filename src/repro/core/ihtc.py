@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from repro import runtime
 from repro.cluster.registry import BackendFn, resolve_backend
-from repro.core.itis import ITISResult, itis
+from repro.core.itis import ITISResult, itis, validate_reduction_params
 from repro.core.prototypes import compose_assignments
 
 # backwards-compatible alias: backend resolution now lives in the registry
@@ -71,6 +71,7 @@ def ihtc(
     knn_block = cfg.knn_block if knn_block is None else knn_block
     mesh = cfg.mesh if mesh is None else mesh
     axis_name = cfg.axis_name if axis_name is None else axis_name
+    validate_reduction_params(t, m, n=x.shape[0], driver="ihtc")
     if mesh is not None:
         from repro.core.distributed import ihtc_sharded  # lazy: no cycle
 

@@ -68,6 +68,29 @@ class ClusterIndex(NamedTuple):
         """
         return cls.from_result(ihtc(x, t, m, backend, **ihtc_kwargs))
 
+    @classmethod
+    def fit_streaming(
+        cls,
+        chunks,
+        t: int,
+        m: int,
+        backend: Union[str, BackendFn] = "kmeans",
+        **streaming_kwargs,
+    ) -> "ClusterIndex":
+        """Out-of-core fit: freeze the servable index straight from a chunk
+        stream without ever materializing the (n, d) array on device.
+
+        Accepts every :func:`repro.core.streaming.ihtc_streaming` keyword
+        (``chunk_n``/``reservoir_n`` default to the runtime config). The
+        streaming result's host-side label spill is dropped — use
+        ``ihtc_streaming(...)`` directly when the training labels are also
+        needed, then ``.to_index()`` for this same artifact.
+        """
+        from repro.core.streaming import ihtc_streaming  # lazy: no cycle
+
+        return ihtc_streaming(chunks, t, m, backend,
+                              **streaming_kwargs).to_index()
+
     @property
     def dim(self) -> int:
         return self.protos.shape[1]

@@ -32,6 +32,31 @@ def round_up(n: int, multiple: int) -> int:
     return ((n + multiple - 1) // multiple) * multiple
 
 
+def validate_reduction_params(
+    t: int, m: int, *, n: Optional[int] = None, min_m: int = 0,
+    driver: str = "itis",
+) -> None:
+    """Reject t/m values every ITIS-family driver would silently mishandle.
+
+    ``t < 2`` never shrinks the point set, so ``t = 1`` would run ``m``
+    full-size levels (the original silent-acceptance bug); ``m`` below
+    ``min_m`` is meaningless for the driver; and with any reduction level to
+    run, TC needs a ``k = t - 1``-NN graph, which requires ``t - 1 < n``.
+    """
+    if int(t) != t or t < 2:
+        raise ValueError(
+            f"{driver}: threshold t must be an integer >= 2 (t={t!r} would "
+            f"never shrink the point set, so every level stays full-size)")
+    if int(m) != m or m < min_m:
+        raise ValueError(
+            f"{driver}: iteration count m must be an integer >= {min_m}, "
+            f"got {m!r}")
+    if n is not None and m >= 1 and t - 1 >= n:
+        raise ValueError(
+            f"{driver}: TC builds a k = t-1 = {t - 1} nearest-neighbour "
+            f"graph, which needs t - 1 < n points; got n={n}")
+
+
 def level_sizes(n0: int, t: int, m: int, *, multiple: int = 1) -> List[int]:
     """Static buffer size of every ITIS level, levels 0..m inclusive.
 
@@ -42,6 +67,7 @@ def level_sizes(n0: int, t: int, m: int, *, multiple: int = 1) -> List[int]:
     sizes already satisfy the multiple, the two compute in identical buffers
     and their results agree bit-for-bit (DESIGN.md §4.3).
     """
+    validate_reduction_params(t, m, driver="level_sizes")
     sizes = [round_up(n0, multiple)]
     for _ in range(m):
         sizes.append(round_up(max(sizes[-1] // t, 1), multiple))
@@ -153,6 +179,7 @@ def itis(
     impl = cfg.impl if impl is None else impl
     knn_block = cfg.knn_block if knn_block is None else knn_block
     n_blocks = cfg.n_blocks if n_blocks is None else n_blocks
+    validate_reduction_params(t, m, n=x.shape[0], driver="itis")
     if key is None:
         key = jax.random.PRNGKey(0)
     n = x.shape[0]

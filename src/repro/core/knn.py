@@ -55,7 +55,17 @@ def knn_graph(
     valid: Optional[jax.Array] = None,
     impl: Optional[str] = None,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Exact (dists, idx) of the k nearest valid neighbours of each row."""
+    """Exact (dists, idx) of the k nearest valid neighbours of each row.
+
+    ``k`` may exceed the number of *valid* rows — unfillable slots come back
+    with ``inf`` distance and index ``-1`` — but not the buffer size ``n``
+    (XLA's top_k would fail with an opaque shape error deep in the trace).
+    """
+    if k > x.shape[0]:
+        raise ValueError(
+            f"knn_graph: k={k} exceeds the number of rows n={x.shape[0]}; "
+            f"slots beyond the valid count are padded with -1, but k itself "
+            f"must be <= n")
     return ops.knn(x, k, valid=valid, exclude_self=True, impl=impl)
 
 

@@ -1,0 +1,441 @@
+"""Out-of-core streaming IHTC fit — clustering data that never fits at once.
+
+The paper's whole premise is data too massive for k-means/HAC, yet the
+in-memory drivers (:func:`repro.core.ihtc.ihtc`, the sharded twin, and
+``ClusterIndex.fit``) all require the full (n, d) array resident in device
+memory — ``data.stream_to_mesh`` streams *ingestion* only. This module
+closes that gap with the reduce-then-cluster aggregation strategy of the
+Data Nuggets / hierarchical-aggregation line of work: every host chunk is
+collapsed to weighted prototypes by one jitted ITIS level, the prototypes
+fold into a bounded device-side **reservoir**, and the reservoir cascades
+through a further ITIS level whenever it fills. Peak device memory is
+O(chunk + reservoir) — independent of n.
+
+Execution plan (DESIGN.md §12):
+
+  * **level 0, per chunk** — every chunk is padded to the static
+    ``chunk_n`` shape and reduced by the *existing* jitted
+    :func:`repro.core.itis.itis_step` (one compiled program for the whole
+    stream). The (chunk_n,)-sized chunk→prototype assignment map spills to
+    host memory for the final back-out.
+  * **reservoir fold** — each chunk's prototype buffer (its ``chunk_n//t``
+    slots, validity-masked) lands at the reservoir's write frontier via one
+    jitted ``dynamic_update_slice``; the frontier advances by plain host
+    arithmetic, so the chunk loop never synchronizes with the device.
+  * **cascade** — when the next fold would overflow, one ``itis_step`` over
+    the whole reservoir buffer (again a single compiled program for every
+    cascade) compacts it to ``reservoir_n // t`` slots; the reservoir-wide
+    assignment map spills to host.
+  * **finalize** — after the stream, the occupied reservoir prefix runs the
+    remaining ``m - 1`` ITIS levels (the same key-split schedule and
+    early-stop rule as :func:`repro.core.itis.itis`), and the backend from
+    :mod:`repro.cluster.registry` labels the surviving prototypes.
+
+Labels stream *back out* chunk-by-chunk: ``labels_for(c)`` composes chunk
+c's spilled map through every cascade/finalize map recorded at-or-after its
+fold epoch, entirely in host numpy — the device never holds an O(n) label
+array.
+
+Parity contract (tested): when the stream presents the dataset as a single
+level-0 buffer (one chunk with ``chunk_n == n``) and the reservoir never
+overflows mid-level, the fold degenerates to an identity placement and
+every subsequent level runs in the exact buffers, with the exact keys, of
+the in-memory driver — labels, prototypes and masses are bit-identical to
+``ihtc``. Multi-chunk streams are a *different estimator of the same
+family* (level 0's TC graph cannot cross chunk boundaries), so they are
+held to the pipeline's invariants (mass conservation, the (t*)^m size
+guarantee, accuracy on the §4 mixture) rather than bitwise equality —
+DESIGN.md §12 spells out why.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Iterable, Iterator, List, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import runtime
+from repro.cluster.registry import BackendFn, resolve_backend
+from repro.core.itis import (
+    itis_step,
+    level_sizes,
+    validate_reduction_params,
+)
+
+# fold_in tag separating the cascade key stream from the per-chunk stream
+_CASCADE_KEY_TAG = 0x7FFFFFFF
+
+
+class StreamingIHTCResult:
+    """Fitted artifact of :func:`ihtc_streaming` plus the host-side spill
+    needed to stream final labels back out.
+
+    Device-resident (all O(reservoir), never O(n)):
+      ``protos`` / ``proto_mass`` / ``proto_valid`` — the final prototype
+      buffer; ``proto_labels`` — backend labels (-1 pad/noise);
+      ``n_prototypes`` — valid count.
+
+    Host-resident spill: one int32 assignment map per chunk plus one per
+    cascade/finalize level (the format §12 documents). ``labels_for`` /
+    ``iter_labels`` compose them lazily; nothing O(n) ever lands on device.
+    """
+
+    def __init__(
+        self,
+        *,
+        protos: jax.Array,
+        proto_mass: jax.Array,
+        proto_valid: jax.Array,
+        proto_labels: jax.Array,
+        n_prototypes: jax.Array,
+        chunk_n: int,
+        chunk_assign: List[np.ndarray],
+        chunk_offset: List[int],
+        chunk_epoch: List[int],
+        chunk_counts: List[int],
+        maps: List[np.ndarray],
+        n_cascades: int,
+    ):
+        self.protos = protos
+        self.proto_mass = proto_mass
+        self.proto_valid = proto_valid
+        self.proto_labels = proto_labels
+        self.n_prototypes = n_prototypes
+        self.chunk_n = chunk_n
+        self.n_cascades = n_cascades
+        self._chunk_assign = chunk_assign
+        self._chunk_offset = chunk_offset
+        self._chunk_epoch = chunk_epoch
+        self._chunk_counts = chunk_counts
+        self._maps = maps
+        self._proto_labels_host = np.asarray(proto_labels)
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self._chunk_assign)
+
+    @property
+    def n_total(self) -> int:
+        return int(sum(self._chunk_counts))
+
+    def labels_for(self, chunk_idx: int) -> np.ndarray:
+        """Final cluster labels of chunk ``chunk_idx``'s valid rows.
+
+        Pure host numpy over the spilled maps: chunk-local prototype id →
+        reservoir slot at fold time → through every cascade/finalize map
+        from the chunk's epoch onward → backend label.
+        """
+        count = self._chunk_counts[chunk_idx]
+        lab = self._chunk_assign[chunk_idx][:count].astype(np.int64)
+        slot = np.where(lab >= 0, lab + self._chunk_offset[chunk_idx], -1)
+        for mp in self._maps[self._chunk_epoch[chunk_idx]:]:
+            slot = np.where(slot >= 0, mp[np.maximum(slot, 0)], -1)
+        out = np.where(
+            slot >= 0, self._proto_labels_host[np.maximum(slot, 0)], -1)
+        return out.astype(np.int32)
+
+    def iter_labels(self) -> Iterator[np.ndarray]:
+        """Final labels, one array per input chunk, in stream order."""
+        for c in range(self.n_chunks):
+            yield self.labels_for(c)
+
+    def labels(self) -> np.ndarray:
+        """All labels concatenated — convenience for datasets that fit on
+        host; prefer :meth:`iter_labels` at scale."""
+        if self.n_chunks == 0:
+            return np.zeros((0,), np.int32)
+        return np.concatenate(list(self.iter_labels()))
+
+    def to_index(self):
+        """Freeze into a servable :class:`repro.core.index.ClusterIndex`."""
+        from repro.core.index import ClusterIndex  # lazy: no import cycle
+
+        return ClusterIndex(
+            protos=self.protos,
+            proto_mass=self.proto_mass,
+            proto_valid=self.proto_valid,
+            proto_labels=self.proto_labels,
+            n_prototypes=self.n_prototypes,
+        )
+
+
+def _normalize_chunk(item) -> Tuple[np.ndarray, int]:
+    """Accept bare (c, d) arrays or ``(chunk, n_valid)`` pairs."""
+    if isinstance(item, (tuple, list)) and len(item) == 2:
+        arr, n_valid = item
+        arr = np.asarray(arr, np.float32)
+        n_valid = int(n_valid)
+        if not 0 <= n_valid <= arr.shape[0]:
+            raise ValueError(
+                f"ihtc_streaming: chunk n_valid={n_valid} outside "
+                f"[0, {arr.shape[0]}]")
+        return arr, n_valid
+    arr = np.asarray(item, np.float32)
+    return arr, arr.shape[0]
+
+
+@jax.jit
+def _compact(res_x, res_m, res_v):
+    """Gather the valid reservoir rows to the front (an identity level: no
+    reduction, just squeezing out the masked holes between slabs). Returns
+    the compacted buffers plus the old-slot → new-slot assignment map, in
+    the same format an ITIS level emits."""
+    n = res_v.shape[0]
+    rank = (jnp.cumsum(res_v) - 1).astype(jnp.int32)
+    dst = jnp.where(res_v, rank, n)  # invalid rows: out of range, dropped
+    new_x = jnp.zeros_like(res_x).at[dst].set(res_x, mode="drop")
+    new_m = jnp.zeros_like(res_m).at[dst].set(res_m, mode="drop")
+    new_v = jnp.zeros_like(res_v).at[dst].set(res_v, mode="drop")
+    assignment = jnp.where(res_v, rank, -1)
+    return new_x, new_m, new_v, assignment
+
+
+@functools.partial(jax.jit, static_argnames=("_dispatch",))
+def _fold(res_x, res_m, res_v, px, pm, pv, offset, _dispatch: tuple = ()):
+    """Write one prototype slab at the reservoir frontier (traced offset:
+    a single compiled program serves the whole stream)."""
+    res_x = jax.lax.dynamic_update_slice(res_x, px, (offset, 0))
+    res_m = jax.lax.dynamic_update_slice(res_m, pm, (offset,))
+    res_v = jax.lax.dynamic_update_slice(res_v, pv, (offset,))
+    return res_x, res_m, res_v
+
+
+def ihtc_streaming(
+    chunks: Iterable,
+    t: int,
+    m: int,
+    backend: Union[str, BackendFn] = "kmeans",
+    *,
+    chunk_n: Optional[int] = None,
+    reservoir_n: Optional[int] = None,
+    weighted: bool = False,
+    use_mass_in_backend: bool = True,
+    key: Optional[jax.Array] = None,
+    impl: Optional[str] = None,
+    knn_block: Optional[int] = None,
+    n_blocks: Optional[int] = None,
+    min_points: int = 4,
+    **backend_kwargs,
+) -> StreamingIHTCResult:
+    """Fit IHTC over a chunk stream in O(chunk + reservoir) device memory.
+
+    ``chunks`` is any iterator of host chunks — bare (c, d) arrays (e.g.
+    :func:`repro.data.pipeline.point_chunks`) or ``(chunk, n_valid)`` pairs
+    for pre-padded buffers. Chunks may be ragged up to ``chunk_n`` rows;
+    each is padded to the static ``chunk_n`` shape so the whole stream runs
+    through one compiled level-0 program.
+
+    ``chunk_n`` / ``reservoir_n`` default to the active runtime config
+    (``REPRO_CHUNK_N`` / ``REPRO_RESERVOIR_N``); 0 = auto (the first
+    chunk's row count, resp. ``4 * (chunk_n // t)``). ``m >= 1`` is
+    required: with m = 0 no reduction ever happens and the backend would
+    need all n points at once — exactly what streaming exists to avoid.
+
+    Returns a :class:`StreamingIHTCResult`; ``labels_for(i)`` /
+    ``iter_labels()`` stream the final labels back out, ``to_index()``
+    (or :meth:`repro.core.index.ClusterIndex.fit_streaming`) freezes the
+    servable artifact. See the module docstring for the parity contract
+    with the in-memory driver.
+    """
+    cfg = runtime.active()
+    impl = cfg.impl if impl is None else impl
+    knn_block = cfg.knn_block if knn_block is None else knn_block
+    n_blocks = cfg.n_blocks if n_blocks is None else n_blocks
+    chunk_n = cfg.chunk_n if chunk_n is None else chunk_n
+    reservoir_n = cfg.reservoir_n if reservoir_n is None else reservoir_n
+    validate_reduction_params(t, m, min_m=1, driver="ihtc_streaming")
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    key_itis, key_backend = jax.random.split(key)
+    # the in-memory driver's key schedule: one split per level, level 0 first
+    key_chain, key_level0 = jax.random.split(key_itis)
+    key_cascade = jax.random.fold_in(key_level0, _CASCADE_KEY_TAG)
+
+    it = iter(chunks)
+    first = None
+    for item in it:
+        first = _normalize_chunk(item)
+        break
+    if first is None:
+        raise ValueError("ihtc_streaming: the chunk stream is empty")
+    if not chunk_n:
+        chunk_n = first[0].shape[0]
+        if chunk_n == 0:
+            raise ValueError(
+                "ihtc_streaming: cannot infer chunk_n from an empty first "
+                "chunk; pass chunk_n= or configure runtime chunk_n")
+    d = first[0].shape[1] if first[0].ndim == 2 else None
+    if d is None:
+        raise ValueError("ihtc_streaming: chunks must be 2-D (rows, d)")
+    validate_reduction_params(t, m, n=chunk_n, min_m=1,
+                              driver="ihtc_streaming")
+
+    chunk_out = max(chunk_n // t, 1)
+    # raw-fold slab for chunks too small to reduce (the in-memory early-stop
+    # rule, applied per chunk): their valid prefix is copied verbatim
+    raw_len = min(chunk_n, max(min_points, 2 * t))
+    if not reservoir_n:
+        # large enough for the feasibility bound below by construction,
+        # including the compaction degradation case
+        reservoir_n = max(4 * chunk_out, 2 * raw_len,
+                          max(min_points, 2 * t) - 1 + max(chunk_out, raw_len))
+    cascade_out = max(reservoir_n // t, 1)
+    # feasibility up front, before any of the stream is consumed: an
+    # overflow frees down to cascade_out (reduction) or, degraded, to at
+    # most max(min_points, 2t) - 1 valid rows (compaction — too few valid
+    # prototypes to reduce); the next slab may be a full chunk reduce
+    # (chunk_out rows) or a raw tail (raw_len)
+    post_overflow = max(cascade_out, max(min_points, 2 * t) - 1)
+    if reservoir_n - post_overflow < max(chunk_out, raw_len):
+        raise ValueError(
+            f"ihtc_streaming: reservoir_n={reservoir_n} cannot absorb a "
+            f"{max(chunk_out, raw_len)}-row slab right after an overflow "
+            f"(which frees down to at most {post_overflow} occupied "
+            f"slots); need reservoir_n - max(reservoir_n//t, "
+            f"{max(min_points, 2 * t) - 1}) >= max(chunk_n//t, {raw_len})")
+
+    res_x = jnp.zeros((reservoir_n, d), jnp.float32)
+    res_m = jnp.zeros((reservoir_n,), jnp.float32)
+    res_v = jnp.zeros((reservoir_n,), bool)
+    frontier = 0          # host-tracked write position (no device sync)
+    n_cascades = 0
+
+    chunk_assign: List[np.ndarray] = []
+    chunk_offset: List[int] = []
+    chunk_epoch: List[int] = []
+    chunk_counts: List[int] = []
+    maps: List[np.ndarray] = []
+
+    def cascade():
+        nonlocal res_x, res_m, res_v, frontier, n_cascades
+        occ_valid = int(jnp.sum(res_v))
+        if occ_valid < max(min_points, 2 * t):
+            # the frontier is exhausted but the slots are mostly masked
+            # holes (slabs whose chunks produced very few clusters): too
+            # few valid prototypes for a reduction level, so squeeze the
+            # holes out instead — an identity level that frees the space
+            # without collapsing anything
+            res_x, res_m, res_v, assignment = _compact(res_x, res_m, res_v)
+            maps.append(np.array(assignment))  # true host copy
+            frontier = occ_valid
+            return
+        ck = jax.random.fold_in(key_cascade, n_cascades)
+        out = itis_step(
+            res_x, res_m, res_v, t, key=ck, weighted=weighted, impl=impl,
+            knn_block=knn_block, n_out=cascade_out, n_blocks=n_blocks)
+        maps.append(np.array(out.assignment))  # true host copy, not a zero-copy view
+        pad = reservoir_n - cascade_out
+        res_x = jnp.pad(out.protos, ((0, pad), (0, 0)))
+        res_m = jnp.pad(out.mass, (0, pad))
+        res_v = jnp.pad(out.valid, (0, pad))
+        frontier = cascade_out
+        n_cascades += 1
+
+    def fold(px, pm, pv, slab: int):
+        nonlocal res_x, res_m, res_v, frontier
+        if frontier + slab > reservoir_n:
+            cascade()
+        if frontier + slab > reservoir_n:
+            raise ValueError(
+                f"ihtc_streaming: a {slab}-row slab does not fit the "
+                f"reservoir even after a cascade (frontier={frontier}, "
+                f"reservoir_n={reservoir_n}); increase reservoir_n")
+        offset = frontier
+        res_x, res_m, res_v = _fold(
+            res_x, res_m, res_v, px, pm, pv, jnp.int32(offset),
+            _dispatch=cfg.dispatch_key())
+        frontier += slab
+        return offset
+
+    def consume(arr: np.ndarray, n_valid: int, chunk_idx: int) -> None:
+        if arr.shape[0] > chunk_n:
+            raise ValueError(
+                f"ihtc_streaming: chunk {chunk_idx} has {arr.shape[0]} rows "
+                f"> chunk_n={chunk_n}; re-chunk the stream or raise chunk_n")
+        if arr.ndim != 2 or arr.shape[1] != d:
+            raise ValueError(
+                f"ihtc_streaming: chunk {chunk_idx} has shape {arr.shape}, "
+                f"expected (<= {chunk_n}, {d})")
+        if n_valid == 0:  # nothing to cluster; keep chunk indexing aligned
+            chunk_assign.append(np.full((chunk_n,), -1, np.int32))
+            chunk_offset.append(0)
+            chunk_epoch.append(len(maps))
+            chunk_counts.append(0)
+            return
+        buf = np.zeros((chunk_n, d), np.float32)
+        buf[: arr.shape[0]] = arr
+        xj = jnp.asarray(buf)
+        vj = jnp.arange(chunk_n) < n_valid
+        mj = vj.astype(jnp.float32)
+        if n_valid < max(min_points, 2 * t):
+            # too small to reduce (the itis early-stop rule): fold the valid
+            # prefix raw, with an identity assignment map
+            off = fold(xj[:raw_len], mj[:raw_len], vj[:raw_len], raw_len)
+            # epoch AFTER the fold: a cascade the fold itself triggered
+            # must not apply to the slots it just wrote
+            epoch = len(maps)
+            ident = np.arange(chunk_n, dtype=np.int32)
+            chunk_assign.append(
+                np.where(ident < n_valid, ident, -1).astype(np.int32))
+            chunk_offset.append(off)
+            chunk_epoch.append(epoch)
+            chunk_counts.append(n_valid)
+            return
+        sub = key_level0 if chunk_idx == 0 else jax.random.fold_in(
+            key_level0, chunk_idx)
+        out = itis_step(
+            xj, mj, vj, t, key=sub, weighted=weighted, impl=impl,
+            knn_block=knn_block, n_out=chunk_out, n_blocks=n_blocks)
+        off = fold(out.protos, out.mass, out.valid, chunk_out)
+        epoch = len(maps)  # after the fold — see the raw path above
+        chunk_assign.append(np.array(out.assignment))  # true host copy
+        chunk_offset.append(off)
+        chunk_epoch.append(epoch)
+        chunk_counts.append(n_valid)
+
+    consume(*first, 0)
+    for chunk_idx, item in enumerate(it, start=1):
+        consume(*_normalize_chunk(item), chunk_idx)
+    if frontier == 0:
+        raise ValueError(
+            "ihtc_streaming: the stream contained no valid rows (every "
+            "chunk was empty or fully masked) — nothing to cluster")
+
+    # ---- finalize: levels 1..m-1 on the occupied reservoir prefix --------
+    buf_x = res_x[:frontier]
+    buf_m = res_m[:frontier]
+    buf_v = res_v[:frontier]
+    sizes = level_sizes(frontier, t, m - 1) if m > 1 else [frontier]
+    for level in range(m - 1):
+        n_valid = int(jnp.sum(buf_v))
+        if n_valid < max(min_points, 2 * t):
+            break
+        key_chain, sub = jax.random.split(key_chain)
+        out = itis_step(
+            buf_x, buf_m, buf_v, t, key=sub, weighted=weighted, impl=impl,
+            knn_block=knn_block, n_out=sizes[level + 1], n_blocks=n_blocks)
+        maps.append(np.array(out.assignment))  # true host copy, not a zero-copy view
+        buf_x, buf_m, buf_v = out.protos, out.mass, out.valid
+
+    fn = resolve_backend(backend)
+    w = buf_m if use_mass_in_backend else None
+    proto_labels = fn(buf_x, valid=buf_v, weights=w, key=key_backend,
+                      impl=impl, **backend_kwargs)
+    proto_labels = jnp.where(buf_v, proto_labels, -1).astype(jnp.int32)
+
+    return StreamingIHTCResult(
+        protos=buf_x,
+        proto_mass=buf_m,
+        proto_valid=buf_v,
+        proto_labels=proto_labels,
+        n_prototypes=jnp.sum(buf_v).astype(jnp.int32),
+        chunk_n=chunk_n,
+        chunk_assign=chunk_assign,
+        chunk_offset=chunk_offset,
+        chunk_epoch=chunk_epoch,
+        chunk_counts=chunk_counts,
+        maps=maps,
+        n_cascades=n_cascades,
+    )

@@ -55,6 +55,13 @@ class RuntimeConfig:
       mesh: default jax.sharding.Mesh for ``ihtc``/``ClusterIndex.assign``;
         None = single device unless a mesh is passed explicitly.
       axis_name: mesh axis the data dimension is sharded over.
+      chunk_n: static per-chunk buffer rows for the out-of-core streaming fit
+        (:func:`repro.core.streaming.ihtc_streaming`); 0 = auto (the first
+        chunk's row count fixes the shape).
+      reservoir_n: device-side prototype reservoir capacity for the streaming
+        fit; 0 = auto (at least 4x the per-chunk prototype budget
+        ``chunk_n // t``, raised to cover the feasibility bound of
+        DESIGN.md §12).
     """
 
     impl: str = "auto"
@@ -66,12 +73,15 @@ class RuntimeConfig:
     precision: str = "float32"
     mesh: Any = None
     axis_name: str = "data"
+    chunk_n: int = 0
+    reservoir_n: int = 0
 
     def __post_init__(self) -> None:
         if self.impl not in _IMPLS:
             raise ValueError(f"impl must be one of {_IMPLS}, got {self.impl!r}")
-        if self.knn_block < 0:
-            raise ValueError(f"knn_block must be >= 0, got {self.knn_block}")
+        for name in ("knn_block", "chunk_n", "reservoir_n"):
+            if getattr(self, name) < 0:
+                raise ValueError(f"{name} must be >= 0, got {getattr(self, name)}")
         for name in ("block_q", "block_k", "n_blocks"):
             if getattr(self, name) < 1:
                 raise ValueError(f"{name} must be >= 1, got {getattr(self, name)}")
@@ -88,13 +98,15 @@ class RuntimeConfig:
         argument, so a config change always retraces instead of hitting a
         cache entry compiled under the previous config — the §10
         no-stale-cache contract, extended to fields the outer jit does not
-        itself resolve (``interpret``, Pallas tile sizes, ...). ``mesh`` /
-        ``axis_name`` / ``precision`` are excluded: they are only consulted
-        at the host-driver level and resolved into explicit statics, so
-        including them would just force spurious recompiles.
+        itself resolve (``interpret``, Pallas tile sizes, ...). ``chunk_n``
+        and ``reservoir_n`` participate because the streaming drivers derive
+        static buffer shapes from them. ``mesh`` / ``axis_name`` /
+        ``precision`` are excluded: they are only consulted at the
+        host-driver level and resolved into explicit statics, so including
+        them would just force spurious recompiles.
         """
         return (self.impl, self.interpret, self.knn_block, self.block_q,
-                self.block_k, self.n_blocks)
+                self.block_k, self.n_blocks, self.chunk_n, self.reservoir_n)
 
 
 def _parse_bool(s: str) -> bool:
@@ -111,6 +123,8 @@ _ENV_FIELDS = {
     "REPRO_N_BLOCKS": ("n_blocks", int),
     "REPRO_PRECISION": ("precision", str),
     "REPRO_AXIS_NAME": ("axis_name", str),
+    "REPRO_CHUNK_N": ("chunk_n", int),
+    "REPRO_RESERVOIR_N": ("reservoir_n", int),
 }
 
 

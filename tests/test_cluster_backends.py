@@ -104,3 +104,16 @@ def test_bss_tss_range(rng):
     x, true = three_blobs(rng)
     ratio = float(bss_tss(jnp.asarray(x), jnp.asarray(true), 3))
     assert 0.9 < ratio <= 1.0
+
+
+def test_bss_tss_degenerate_data_is_finite():
+    """Regression: constant or single-point data has tss == 0 — the ratio
+    must clamp to 0.0 like the other guarded divisions, not return NaN."""
+    const = jnp.ones((10, 3), jnp.float32)
+    labels = jnp.zeros((10,), jnp.int32)
+    assert float(bss_tss(const, labels, 1)) == 0.0
+    single = jnp.asarray([[1.0, 2.0]], jnp.float32)
+    assert float(bss_tss(single, jnp.zeros((1,), jnp.int32), 1)) == 0.0
+    # all rows masked out (-1): still finite
+    masked = float(bss_tss(const, jnp.full((10,), -1, jnp.int32), 2))
+    assert masked == masked  # not NaN

@@ -97,3 +97,36 @@ def test_ihtc_m0_equals_backend(rng):
     res = ihtc(jnp.asarray(x), 2, 0, "kmeans", k=3, key=jax.random.PRNGKey(4))
     assert int(res.n_prototypes) == 200
     assert np.asarray(res.labels).shape == (200,)
+
+
+def test_threshold_validation_rejects_degenerate_t_and_m(rng):
+    """Regression: t=1 never shrinks, so the drivers used to run m
+    full-size levels silently; now every public entry point rejects it."""
+    from repro.core import level_sizes
+
+    x = jnp.asarray(gmm_sample(50, rng)[0])
+    for bad_t in (1, 0, -3):
+        with pytest.raises(ValueError, match="t must be"):
+            level_sizes(50, bad_t, 2)
+        with pytest.raises(ValueError, match="t must be"):
+            itis(x, bad_t, 2)
+        with pytest.raises(ValueError, match="t must be"):
+            ihtc(x, bad_t, 2, "kmeans", k=3)
+    with pytest.raises(ValueError, match="m must be"):
+        itis(x, 2, -1)
+    with pytest.raises(ValueError, match="m must be"):
+        ihtc(x, 2, -2, "kmeans", k=3)
+    with pytest.raises(ValueError, match="m must be"):
+        level_sizes(50, 2, -1)
+
+
+def test_threshold_validation_requires_k_below_n(rng):
+    """With any level to run, TC needs a k = t-1 < n neighbour graph."""
+    tiny = jnp.asarray(rng.normal(size=(4, 2)), jnp.float32)
+    with pytest.raises(ValueError, match="t - 1 < n"):
+        ihtc(tiny, 5, 1, "kmeans", k=2)
+    with pytest.raises(ValueError, match="t - 1 < n"):
+        itis(tiny, 5, 1)
+    # m=0 never builds the graph, so a large t is harmless there
+    res = ihtc(tiny, 4, 0, "kmeans", k=2)
+    assert np.asarray(res.labels).shape == (4,)

@@ -264,3 +264,99 @@ def test_cluster_service_rejects_bad_buckets(rng):
         ClusterService(index, buckets=())
     with pytest.raises(ValueError):
         ClusterService(index, buckets=(0, 8))
+
+
+def test_cluster_service_top_bucket_boundaries(rng):
+    """Requests exactly at and one over the top bucket: at the boundary the
+    request is one chunk; one over must chunk as top + remainder, and the
+    stats counters must account for every chunk exactly."""
+    x, _ = _blobs(rng, n_per=30)
+    index = ClusterIndex.fit(x, 2, 1, "kmeans", k=3,
+                             key=jax.random.PRNGKey(0))
+    top = 64
+    svc = ClusterService(index, buckets=(16, top))
+    want = np.asarray(index.assign(x))
+
+    got = np.asarray(svc.assign(x[:top]))  # exactly the top bucket
+    np.testing.assert_array_equal(got, want[:top])
+    st = svc.stats
+    assert (st["chunks"], st[f"bucket_{top}"], st["bucket_16"]) == (1, 1, 0)
+
+    got = np.asarray(svc.assign(x[:top + 1]))  # one over: top + 1 remainder
+    np.testing.assert_array_equal(got, want[:top + 1])
+    st = svc.stats
+    assert st["chunks"] == 3  # 1 (boundary request) + 2 (chunked request)
+    assert st[f"bucket_{top}"] == 2
+    assert st["bucket_16"] == 1  # the 1-row remainder pads to the smallest
+    assert st["requests"] == 2
+    assert st["points"] == top + (top + 1)
+
+
+def test_cluster_service_empty_request_under_mesh(rng):
+    """Empty request after warmup with a mesh configured: must return an
+    empty result without touching the mesh padding path or the counters'
+    chunk accounting."""
+    from repro.core.distributed import make_data_mesh
+
+    x, _ = _blobs(rng, n_per=20)
+    index = ClusterIndex.fit(x, 2, 1, "kmeans", k=3,
+                             key=jax.random.PRNGKey(1))
+    svc = ClusterService(index, buckets=(8, 32))
+    with runtime.configure(mesh=make_data_mesh()):
+        svc.warmup()  # replicates the index onto the mesh
+        out = svc.assign(x[:0])
+        assert out.shape == (0,)
+        assert out.dtype == jnp.int32
+        st = svc.stats
+        assert (st["requests"], st["points"], st["chunks"]) == (1, 0, 0)
+        # and a real request still serves correctly under the mesh
+        np.testing.assert_array_equal(np.asarray(svc.assign(x[:5])),
+                                      np.asarray(index.assign(x[:5])))
+
+
+def test_assign_with_zero_valid_prototypes(rng):
+    """An index with no valid prototypes (e.g. restored from an all-noise
+    fit) must label everything -1 — not garbage from the all-inf top-1
+    merge — in both the one-shot and blocked paths, and via the service."""
+    nmax, d = 16, 2
+    index = ClusterIndex(
+        protos=jnp.zeros((nmax, d), jnp.float32),
+        proto_mass=jnp.zeros((nmax,), jnp.float32),
+        proto_valid=jnp.zeros((nmax,), bool),
+        proto_labels=jnp.full((nmax,), -1, jnp.int32),
+        n_prototypes=jnp.int32(0),
+    )
+    q = jnp.asarray(rng.normal(size=(9, d)), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(index.assign(q)), -1)
+    np.testing.assert_array_equal(np.asarray(index.assign(q, block=4)), -1)
+    svc = ClusterService(index, buckets=(4, 16))
+    np.testing.assert_array_equal(np.asarray(svc.assign(q)), -1)
+
+
+def test_assign_all_noise_backend_labels(rng):
+    """Valid prototypes whose backend labelled everything noise: assign
+    returns the noise label -1 for every query."""
+    x, _ = _blobs(rng, n_per=20)
+    # dbscan with an impossible density: every prototype is noise
+    index = ClusterIndex.fit(x, 2, 1, "dbscan", eps=1e-6, min_pts=1e9,
+                             key=jax.random.PRNGKey(2))
+    assert not bool(jnp.any(index.proto_labels >= 0))
+    np.testing.assert_array_equal(np.asarray(index.assign(x[:7])), -1)
+
+
+def test_knn_graph_k_exceeding_valid_count(rng):
+    """k >= n_valid: the unfillable neighbour slots must come back as
+    (-1, inf), never as indices of invalid rows."""
+    from repro.core import knn_graph
+
+    x = jnp.asarray(rng.normal(size=(8, 2)), jnp.float32)
+    valid = jnp.asarray([True, True, True] + [False] * 5)
+    d, idx = knn_graph(x, 5, valid=valid)
+    idx = np.asarray(idx)
+    d = np.asarray(d)
+    for row in range(3):  # each valid row: 2 real neighbours, 3 empty slots
+        assert set(idx[row, :2]) <= {0, 1, 2} - {row}
+        assert (idx[row, 2:] == -1).all()
+        assert np.isinf(d[row, 2:]).all()
+    with pytest.raises(ValueError, match="exceeds the number of rows"):
+        knn_graph(x, 9)

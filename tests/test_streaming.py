@@ -1,0 +1,252 @@
+"""Out-of-core streaming IHTC: parity with the in-memory driver on
+single-buffer streams, bounded-reservoir cascades on multi-chunk streams,
+the chunk input formats, and the new runtime-config knobs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import gmm_sample
+from repro import runtime
+from repro.cluster.metrics import clustering_accuracy
+from repro.core import ClusterIndex, ihtc, ihtc_streaming
+
+
+def _chunked(x: np.ndarray, size: int):
+    for lo in range(0, len(x), size):
+        yield x[lo:lo + size]
+
+
+# ----------------------------------------------------------------- parity
+
+
+@pytest.mark.parametrize("m", [1, 2, 3])
+def test_streaming_parity_single_buffer(rng, m):
+    """Acceptance contract: a chunk-aligned stream (one chunk == the whole
+    level-0 buffer) with a non-overflowing reservoir is bit-identical to
+    the in-memory driver — labels, prototypes, masses and backend labels.
+    """
+    x, _ = gmm_sample(512, rng)
+    xj = jnp.asarray(x)
+    key = jax.random.PRNGKey(7)
+    want = ihtc(xj, 2, m, "kmeans", k=3, key=key)
+    got = ihtc_streaming(iter([x]), 2, m, "kmeans", k=3, key=key,
+                         chunk_n=512, reservoir_n=1024)
+    assert got.n_cascades == 0
+    np.testing.assert_array_equal(got.labels_for(0), np.asarray(want.labels))
+    np.testing.assert_array_equal(np.asarray(got.proto_labels),
+                                  np.asarray(want.proto_labels))
+    np.testing.assert_array_equal(
+        np.asarray(got.protos).view(np.uint32),
+        np.asarray(want.protos).view(np.uint32))
+    np.testing.assert_array_equal(
+        np.asarray(got.proto_mass).view(np.uint32),
+        np.asarray(want.proto_mass).view(np.uint32))
+    assert int(got.n_prototypes) == int(want.n_prototypes)
+
+
+def test_streaming_parity_through_early_stop(rng):
+    """The finalize loop must replicate itis's early-stop rule (m larger
+    than the data supports), keeping parity intact."""
+    x, _ = gmm_sample(64, rng)
+    key = jax.random.PRNGKey(3)
+    want = ihtc(jnp.asarray(x), 2, 6, "kmeans", k=2, key=key)
+    got = ihtc_streaming(iter([x]), 2, 6, "kmeans", k=2, key=key,
+                         chunk_n=64, reservoir_n=64)
+    np.testing.assert_array_equal(got.labels_for(0), np.asarray(want.labels))
+
+
+def test_streaming_parity_tiny_raw_fold(rng):
+    """A chunk below the reduction threshold folds raw; with one tiny chunk
+    that is exactly the in-memory zero-level path (backend on x itself)."""
+    x = rng.normal(size=(3, 2)).astype(np.float32)
+    key = jax.random.PRNGKey(5)
+    want = ihtc(jnp.asarray(x), 2, 2, "kmeans", k=2, key=key)
+    got = ihtc_streaming(iter([x]), 2, 2, "kmeans", k=2, key=key,
+                         chunk_n=3, reservoir_n=16)
+    np.testing.assert_array_equal(got.labels_for(0), np.asarray(want.labels))
+    np.testing.assert_array_equal(np.asarray(got.proto_labels),
+                                  np.asarray(want.proto_labels))
+
+
+def test_fit_streaming_index_matches_in_memory_fit(rng):
+    """ClusterIndex.fit_streaming on a single-buffer stream freezes the
+    same artifact as ClusterIndex.fit."""
+    x, _ = gmm_sample(256, rng)
+    key = jax.random.PRNGKey(0)
+    want = ClusterIndex.fit(jnp.asarray(x), 2, 2, "kmeans", k=3, key=key)
+    got = ClusterIndex.fit_streaming(iter([x]), 2, 2, "kmeans", k=3, key=key,
+                                     chunk_n=256, reservoir_n=512)
+    np.testing.assert_array_equal(
+        np.asarray(got.protos).view(np.uint32),
+        np.asarray(want.protos).view(np.uint32))
+    np.testing.assert_array_equal(np.asarray(got.proto_labels),
+                                  np.asarray(want.proto_labels))
+    q = jnp.asarray(gmm_sample(64, rng)[0])
+    np.testing.assert_array_equal(np.asarray(got.assign(q)),
+                                  np.asarray(want.assign(q)))
+
+
+# ------------------------------------------------------- multi-chunk runs
+
+
+def test_streaming_multichunk_cascades_and_invariants(rng):
+    """A reservoir much smaller than n forces mid-stream cascades; the
+    pipeline invariants (coverage, mass conservation, the (t*)^m size
+    guarantee, GMM accuracy) must survive them."""
+    n, chunk, t, m = 4096, 512, 2, 2
+    x, true = gmm_sample(n, rng)
+    res = ihtc_streaming(_chunked(x, chunk), t, m, "kmeans", k=3,
+                         chunk_n=chunk, reservoir_n=640,
+                         key=jax.random.PRNGKey(0))
+    assert res.n_chunks == n // chunk
+    assert res.n_cascades >= 1  # the bounded reservoir actually cascaded
+    lab = res.labels()
+    assert lab.shape == (n,)
+    assert lab.min() >= 0  # every point backed out to a real cluster
+    # per-chunk access agrees with the concatenated view
+    np.testing.assert_array_equal(res.labels_for(3),
+                                  lab[3 * chunk:4 * chunk])
+    # mass conservation through chunk reduces + cascades + finalize
+    mass = np.asarray(res.proto_mass)[np.asarray(res.proto_valid)]
+    assert abs(mass.sum() - n) < 1e-2
+    # the paper's guarantee: every final cluster holds >= t^m units
+    sizes = np.bincount(lab)
+    assert sizes[sizes > 0].min() >= t ** m
+    assert clustering_accuracy(true, lab, 3) > 0.85
+
+
+def test_streaming_quality_tracks_in_memory(rng):
+    """Multi-chunk streaming is a different estimator (level-0 TC cannot
+    cross chunks) but must cluster the §4 mixture about as well."""
+    n = 3000
+    x, true = gmm_sample(n, rng)
+    mem = ihtc(jnp.asarray(x), 2, 2, "kmeans", k=3, key=jax.random.PRNGKey(1))
+    acc_mem = clustering_accuracy(true, np.asarray(mem.labels), 3)
+    res = ihtc_streaming(_chunked(x, 500), 2, 2, "kmeans", k=3,
+                         chunk_n=500, key=jax.random.PRNGKey(1))
+    acc_stream = clustering_accuracy(true, res.labels(), 3)
+    assert acc_stream > acc_mem - 0.05, (acc_mem, acc_stream)
+
+
+def test_streaming_accepts_tuples_ragged_tail_and_empty_chunks(rng):
+    """(chunk, n_valid) pairs, bare arrays, a ragged tail shorter than
+    chunk_n, and an empty chunk all compose in one stream."""
+    x, _ = gmm_sample(700, rng)
+    padded = np.zeros((256, 2), np.float32)
+    padded[:200] = x[:200]
+    chunks = [
+        (padded, 200),               # pre-padded pair
+        x[200:456],                  # full bare chunk
+        np.zeros((0, 2), np.float32),  # empty chunk
+        x[456:700],                  # ragged tail (244 rows)
+    ]
+    res = ihtc_streaming(iter(chunks), 2, 2, "kmeans", k=3, chunk_n=256,
+                         key=jax.random.PRNGKey(2))
+    assert res.n_chunks == 4
+    assert [len(lab) for lab in res.iter_labels()] == [200, 256, 0, 244]
+    assert res.n_total == 700
+    lab = res.labels()
+    assert lab.shape == (700,)
+    assert lab.min() >= 0
+    mass = np.asarray(res.proto_mass)[np.asarray(res.proto_valid)]
+    assert abs(mass.sum() - 700) < 1e-2
+
+
+def test_streaming_point_chunks_pipeline(rng):
+    """End-to-end with the data pipeline's chunk generator."""
+    from repro.data import PointStreamConfig, point_chunks
+
+    cfg = PointStreamConfig(n=2000, d=2, chunk=512, seed=0, kind="gmm")
+    res = ihtc_streaming(point_chunks(cfg), 2, 2, "kmeans", k=3)
+    assert res.chunk_n == 512  # auto from the first chunk
+    lab = res.labels()
+    assert lab.shape == (2000,)
+    assert lab.min() >= 0
+
+
+# ------------------------------------------------- config + validation
+
+
+def test_streaming_runtime_config_fields(rng):
+    x, _ = gmm_sample(600, rng)
+    explicit = ihtc_streaming(_chunked(x, 200), 2, 2, "kmeans", k=3,
+                              chunk_n=200, reservoir_n=400,
+                              key=jax.random.PRNGKey(4))
+    with runtime.configure(chunk_n=200, reservoir_n=400):
+        configured = ihtc_streaming(_chunked(x, 200), 2, 2, "kmeans", k=3,
+                                    key=jax.random.PRNGKey(4))
+    np.testing.assert_array_equal(explicit.labels(), configured.labels())
+    cfg = runtime.config_from_env(
+        {"REPRO_CHUNK_N": "8192", "REPRO_RESERVOIR_N": "32768"})
+    assert (cfg.chunk_n, cfg.reservoir_n) == (8192, 32768)
+    with pytest.raises(ValueError):
+        runtime.RuntimeConfig(chunk_n=-1)
+    with pytest.raises(ValueError):
+        runtime.RuntimeConfig(reservoir_n=-2)
+
+
+def test_streaming_validation_errors(rng):
+    x, _ = gmm_sample(64, rng)
+    with pytest.raises(ValueError, match="m must be"):
+        ihtc_streaming(iter([x]), 2, 0, "kmeans", k=3)
+    with pytest.raises(ValueError, match="t must be"):
+        ihtc_streaming(iter([x]), 1, 2, "kmeans", k=3)
+    with pytest.raises(ValueError, match="empty"):
+        ihtc_streaming(iter([]), 2, 2, "kmeans", k=3)
+    with pytest.raises(ValueError, match="chunk_n"):  # chunk > chunk_n
+        ihtc_streaming(_chunked(x, 64), 2, 2, "kmeans", k=3, chunk_n=32)
+    with pytest.raises(ValueError, match="reservoir_n"):
+        ihtc_streaming(_chunked(x, 32), 2, 2, "kmeans", k=3, chunk_n=32,
+                       reservoir_n=20)
+    with pytest.raises(ValueError, match="n_valid"):
+        ihtc_streaming(iter([(x, 999)]), 2, 2, "kmeans", k=3)
+    # insufficient reservoir for a raw tail slab is caught up front too
+    with pytest.raises(ValueError, match="reservoir_n"):
+        ihtc_streaming(_chunked(x, 10), 3, 2, "kmeans", k=2, chunk_n=10,
+                       reservoir_n=7)
+    # ... including when only the compaction degradation path would
+    # overflow (post-compaction frontier can exceed reservoir_n//t)
+    with pytest.raises(ValueError, match="reservoir_n"):
+        ihtc_streaming(iter([(x[:6], 5), (x[6:12], 5), (x[12:18], 5)]),
+                       3, 2, "kmeans", k=2, chunk_n=6, reservoir_n=9)
+
+
+def test_streaming_auto_reservoir_small_chunks_large_t(rng):
+    """The auto reservoir default must satisfy the feasibility bound by
+    construction, even for small chunks with a large threshold (where the
+    compaction term dominates 4x the per-chunk prototype budget)."""
+    x = rng.normal(size=(20, 2)).astype(np.float32)
+    res = ihtc_streaming(_chunked(x, 5), 4, 1, "kmeans", k=2, chunk_n=5,
+                         key=jax.random.PRNGKey(0))
+    lab = res.labels()
+    assert lab.shape == (20,)
+    assert lab.min() >= 0
+
+
+def test_streaming_all_masked_stream_raises_clearly():
+    """A stream whose every chunk is empty/fully masked must fail with a
+    clear error, not an opaque backend crash on an empty buffer."""
+    z = np.zeros((8, 2), np.float32)
+    with pytest.raises(ValueError, match="no valid rows"):
+        ihtc_streaming(iter([(z, 0), (z, 0)]), 2, 2, "kmeans", k=3,
+                       chunk_n=8)
+
+
+def test_streaming_hole_heavy_reservoir_compacts(rng):
+    """Slabs that are mostly masked holes (chunks collapsing to very few
+    clusters) can fill the reservoir with fewer valid prototypes than a
+    reduction level needs; the fold must compact the holes out and carry
+    on, with the back-out chain still exact."""
+    # near-duplicate chunks: TC at t=3 collapses 30 rows to a handful of
+    # clusters, so each 10-slot slab is mostly holes
+    base = rng.normal(size=(1, 2)).astype(np.float32)
+    chunks = [base + 1e-4 * rng.normal(size=(30, 2)).astype(np.float32)
+              for _ in range(6)]
+    res = ihtc_streaming(iter(chunks), 3, 2, "kmeans", k=1, chunk_n=30,
+                         reservoir_n=15, key=jax.random.PRNGKey(0))
+    lab = res.labels()
+    assert lab.shape == (180,)
+    assert lab.min() >= 0
+    mass = np.asarray(res.proto_mass)[np.asarray(res.proto_valid)]
+    assert abs(mass.sum() - 180) < 1e-2
