@@ -30,6 +30,15 @@ RESULTS_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                            "results")
 _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+# benchmark-registry entry (benchmarks/run.py --bench distributed)
+BENCH = {
+    "name": "distributed",
+    "artifact": "BENCH_distributed.json",
+    "summary": ("devices", "seconds"),
+    "quick": dict(n_per_device=4096),
+    "full": lambda mx: dict(n_per_device=min(mx, 65_536)),
+}
+
 
 def _child(devices: int, n: int, t: int, m: int, k: int) -> None:
     """Runs in a subprocess with ``devices`` forced CPU devices; prints one

@@ -31,6 +31,17 @@ from repro.serve.cluster_service import ClusterService
 
 RESULTS = os.path.join(os.path.dirname(os.path.abspath(__file__)), "results")
 
+# benchmark-registry entry (benchmarks/run.py --bench serve)
+BENCH = {
+    "name": "serve",
+    "artifact": "BENCH_serve.json",
+    "summary": ("batch", "points_per_sec"),
+    "quick": dict(n=20_000, buckets=(32, 128, 512, 2048), mode="quick"),
+    "full": lambda mx: dict(n=min(mx, 1_000_000), m=3,
+                            buckets=(32, 128, 512, 2048, 8192, 32_768),
+                            mode="full"),
+}
+
 
 def run(
     n: int = 20_000,

@@ -4,14 +4,20 @@ Sweeps the dataset size n at a *fixed* chunk/reservoir budget and records,
 per point: streaming wall time, fit throughput, and the peak live
 device-buffer footprint (sampled at every chunk boundary plus the
 finalize/backend steps), against the same numbers for the in-memory
-``ihtc`` driver. The claim under test is the tentpole's memory contract:
-the streaming column stays O(chunk + reservoir) — flat — while the
-in-memory column grows with n (and is skipped entirely past
-``--inmem-max-n``, the point of the exercise).
+``repro.fit`` executor. The claim under test is the memory contract: the
+streaming column stays O(chunk + reservoir) — flat — while the in-memory
+column grows with n (and is skipped entirely past ``--inmem-max-n``, the
+point of the exercise).
+
+``executors`` picks which streaming-family executor(s) run: the plain
+single-device ``streaming`` path and/or the composed ``streaming_sharded``
+path (host chunks reduced by sharded level steps into a mesh-sharded
+reservoir — run it under ``XLA_FLAGS=--xla_force_host_platform_device_
+count=8`` to smoke the composition; CI does exactly that).
 
 Writes benchmarks/results/BENCH_streaming.json (schema in
-docs/BENCHMARKS.md); summarized by run.py, which also gained
-``--streaming``.
+docs/BENCHMARKS.md); discovered and summarized by run.py's benchmark
+registry (``--bench streaming``).
 """
 from __future__ import annotations
 
@@ -32,10 +38,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import live_mb, print_csv
-from repro.core import ihtc, ihtc_streaming
-from repro.data import PointStreamConfig, point_chunks
 
 RESULTS = os.path.join(os.path.dirname(os.path.abspath(__file__)), "results")
+
+# benchmark-registry entry (benchmarks/run.py --bench streaming)
+BENCH = {
+    "name": "streaming",
+    "artifact": "BENCH_streaming.json",
+    "summary": ("n", "stream_peak_mb"),
+    "quick": dict(ns=(8_192, 32_768), chunk=2_048, inmem_max_n=32_768,
+                  mode="quick"),
+    "full": lambda mx: dict(
+        ns=tuple(n for n in (65_536, 262_144, 1_048_576) if n <= mx) or (mx,),
+        chunk=8_192, inmem_max_n=min(mx, 262_144), mode="full"),
+}
 
 
 def _watched(chunks, peak):
@@ -44,6 +60,15 @@ def _watched(chunks, peak):
     for c in chunks:
         peak[0] = max(peak[0], live_mb())
         yield c
+
+
+def _default_executors():
+    """The composed executor joins the sweep whenever the host actually has
+    multiple devices to compose over."""
+    execs = ["streaming"]
+    if len(jax.devices()) > 1:
+        execs.append("streaming_sharded")
+    return tuple(execs)
 
 
 def run(
@@ -57,51 +82,66 @@ def run(
     inmem_max_n: int = 32_768,
     seed: int = 0,
     mode: str = "quick",
+    executors=None,
 ):
+    import repro
+    from repro.core import ihtc, make_data_mesh
+    from repro.data import PointStreamConfig, point_chunks
+
+    executors = _default_executors() if executors is None else executors
+    mesh = (make_data_mesh()
+            if any(e == "streaming_sharded" for e in executors) else None)
     rows = []
     for n in ns:
         cfg = PointStreamConfig(n=n, d=d, chunk=chunk, seed=seed,
                                 kind="blobs", k=k)
-        peak = [0.0]
-        t0 = time.perf_counter()
-        res = ihtc_streaming(
-            _watched(point_chunks(cfg), peak), t, m, "kmeans", k=k,
-            chunk_n=chunk, reservoir_n=reservoir or None,
-            key=jax.random.PRNGKey(seed))
-        jax.block_until_ready(res.proto_labels)
-        peak[0] = max(peak[0], live_mb())
-        stream_sec = time.perf_counter() - t0
-        n_assigned = sum(int((lab >= 0).sum()) for lab in res.iter_labels())
-        row = {
-            "n": n,
-            "chunks": res.n_chunks,
-            "cascades": res.n_cascades,
-            "n_prototypes": int(res.n_prototypes),
-            "all_assigned": n_assigned == n,
-            "stream_seconds": round(stream_sec, 4),
-            "stream_points_per_sec": round(n / stream_sec),
-            "stream_peak_mb": round(peak[0], 3),
-            "inmem_seconds": None,
-            "inmem_peak_mb": None,
-        }
-        del res
-        if n <= inmem_max_n:
-            x = jnp.asarray(np.concatenate(list(point_chunks(cfg))))
+        for executor in executors:
+            peak = [0.0]
             t0 = time.perf_counter()
-            mem = ihtc(x, t, m, "kmeans", k=k, key=jax.random.PRNGKey(seed))
-            jax.block_until_ready(mem.labels)
-            row["inmem_seconds"] = round(time.perf_counter() - t0, 4)
-            # x + the O(n) level-0 assignment maps are all still live here
-            row["inmem_peak_mb"] = round(live_mb(), 3)
-            del x, mem
-        rows.append(row)
+            res = repro.fit(
+                _watched(point_chunks(cfg), peak), t, m, "kmeans", k=k,
+                executor=executor, chunk_n=chunk,
+                reservoir_n=reservoir or None,
+                mesh=mesh if executor == "streaming_sharded" else None,
+                key=jax.random.PRNGKey(seed))
+            jax.block_until_ready(res.proto_labels)
+            peak[0] = max(peak[0], live_mb())
+            stream_sec = time.perf_counter() - t0
+            n_assigned = sum(int((lab >= 0).sum())
+                             for lab in res.iter_labels())
+            row = {
+                "n": n,
+                "executor": executor,
+                "chunks": res.n_chunks,
+                "cascades": res.n_cascades,
+                "n_prototypes": int(res.n_prototypes),
+                "all_assigned": n_assigned == n,
+                "stream_seconds": round(stream_sec, 4),
+                "stream_points_per_sec": round(n / stream_sec),
+                "stream_peak_mb": round(peak[0], 3),
+                "inmem_seconds": None,
+                "inmem_peak_mb": None,
+            }
+            del res
+            if executor == "streaming" and n <= inmem_max_n:
+                x = jnp.asarray(np.concatenate(list(point_chunks(cfg))))
+                t0 = time.perf_counter()
+                mem = ihtc(x, t, m, "kmeans", k=k,
+                           key=jax.random.PRNGKey(seed))
+                jax.block_until_ready(mem.labels)
+                row["inmem_seconds"] = round(time.perf_counter() - t0, 4)
+                # x + the O(n) level-0 assignment maps are all live here
+                row["inmem_peak_mb"] = round(live_mb(), 3)
+                del x, mem
+            rows.append(row)
 
     print_csv(
         "streaming_ihtc",
-        [(r["n"], r["chunks"], r["cascades"], r["stream_seconds"],
-          r["stream_points_per_sec"], r["stream_peak_mb"],
-          r["inmem_seconds"], r["inmem_peak_mb"]) for r in rows],
-        "n,chunks,cascades,stream_seconds,stream_points_per_sec,"
+        [(r["n"], r["executor"], r["chunks"], r["cascades"],
+          r["stream_seconds"], r["stream_points_per_sec"],
+          r["stream_peak_mb"], r["inmem_seconds"], r["inmem_peak_mb"])
+         for r in rows],
+        "n,executor,chunks,cascades,stream_seconds,stream_points_per_sec,"
         "stream_peak_mb,inmem_seconds,inmem_peak_mb",
     )
 
@@ -112,6 +152,8 @@ def run(
         "t": t, "m": m, "d": d, "k": k,
         "chunk_n": chunk,
         "reservoir_n": reservoir,
+        "devices": len(jax.devices()),
+        "executors": list(executors),
         "recorded_unix": round(time.time(), 1),
         "rows": rows,
     }
@@ -133,17 +175,23 @@ def main():
     ap.add_argument("--d", type=int, default=8)
     ap.add_argument("--inmem-max-n", type=int, default=32_768,
                     help="skip the in-memory comparison above this n")
+    ap.add_argument("--executors", type=str, default="",
+                    help="comma list among streaming,streaming_sharded "
+                         "(default: streaming, plus the composed executor "
+                         "when more than one device is visible)")
     ap.add_argument("--quick", action="store_true",
                     help="tiny sweep for CI smoke")
     args = ap.parse_args()
+    executors = tuple(args.executors.split(",")) if args.executors else None
     if args.quick:
         run(ns=(4_096, 8_192), chunk=1_024, t=args.t, m=args.m, d=2,
-            inmem_max_n=8_192, mode="smoke")
+            inmem_max_n=8_192, mode="smoke", executors=executors)
         return
     ns = (tuple(int(v) for v in args.ns.split(",")) if args.ns
           else (8_192, 32_768, 131_072))
     run(ns=ns, chunk=args.chunk, reservoir=args.reservoir, t=args.t,
-        m=args.m, d=args.d, inmem_max_n=args.inmem_max_n, mode="cli")
+        m=args.m, d=args.d, inmem_max_n=args.inmem_max_n, mode="cli",
+        executors=executors)
 
 
 if __name__ == "__main__":

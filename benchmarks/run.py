@@ -1,19 +1,36 @@
 """Benchmark driver: one harness per paper table (+ the LM-stack micro
-benches, the distributed weak-scaling sweep, and the dry-run roofline
-summary). Default mode is sized for a CPU container; pass --full for
-paper-scale sweeps and --distributed for the multi-device IHTC sweep
-(subprocesses with forced CPU device counts).
+benches and the dry-run roofline summary), plus a **registry of optional
+harnesses** discovered from the ``bench_*.py`` modules themselves.
+
+Any ``benchmarks/bench_<name>.py`` that defines a module-level ``BENCH``
+dict joins the registry with zero edits here::
+
+    BENCH = {
+        "name": "fit_matrix",                  # --bench fit_matrix
+        "artifact": "BENCH_fit_matrix.json",   # results/ trajectory file
+        "summary": ("n", "peak_mb"),           # axis/metric summary pair
+        "quick": {...},                        # kwargs for run() (default)
+        "full": lambda max_n: {...},           # kwargs for run() (--full)
+    }
+
+``--bench a,b`` runs the named harnesses after the core table suite;
+``--bench all`` runs every discovered one; ``--list-benches`` prints the
+registry. (This replaces the old hand-added ``--serve`` / ``--streaming``
+/ ``--distributed`` flags — new executors get benchmarked by dropping in a
+module, not by touching this driver.)
 
 Output: `name,<row>` CSV per table on stdout (see each bench module's
-header line). Harnesses that sweep an axis worth keeping (currently
-bench_distributed) additionally record a trajectory artifact under
-benchmarks/results/BENCH_<name>.json; this driver prints a one-line summary
-per artifact at the end of every run. Schemas are documented in
-docs/BENCHMARKS.md.
+header line). Harnesses that sweep an axis worth keeping record a
+trajectory artifact under benchmarks/results/BENCH_<name>.json; this
+driver prints a one-line summary per artifact at the end of every run,
+using the registering module's ``summary`` hint when it has one. Schemas
+are documented in docs/BENCHMARKS.md.
 """
 from __future__ import annotations
 
 import argparse
+import glob as _glob
+import importlib
 import os
 import sys
 
@@ -26,12 +43,50 @@ for _p in (_REPO, os.path.join(_REPO, "src")):
 
 import time
 
-import jax
-import jax.numpy as jnp
+
+def discover_benches() -> dict:
+    """name → registry spec for every bench_*.py exposing a ``BENCH`` dict.
+
+    Discovery parses the source with ``ast`` instead of importing — bench
+    modules pull in jax and the whole repro stack at module scope, which
+    ``--summary-only`` / ``--list-benches`` must not pay for. Literal
+    fields (``name``, ``artifact``, ``summary``) land in the spec; the
+    module itself (for ``run()`` and the non-literal ``full`` lambda) is
+    imported lazily by :func:`_run_registered` via the ``module_name``
+    key."""
+    import ast
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    specs = {}
+    for path in sorted(_glob.glob(os.path.join(here, "bench_*.py"))):
+        stem = os.path.splitext(os.path.basename(path))[0]
+        try:
+            tree = ast.parse(open(path).read())
+        except SyntaxError:
+            continue
+        for node in tree.body:
+            if not (isinstance(node, ast.Assign) and any(
+                    isinstance(t, ast.Name) and t.id == "BENCH"
+                    for t in node.targets)):
+                continue
+            if not isinstance(node.value, ast.Dict):
+                continue
+            spec = {"module_name": f"benchmarks.{stem}"}
+            for k, v in zip(node.value.keys, node.value.values):
+                if isinstance(k, ast.Constant):
+                    try:
+                        spec[k.value] = ast.literal_eval(v)
+                    except ValueError:  # lambdas etc.: import-time only
+                        pass
+            if "name" in spec:
+                specs[spec["name"]] = spec
+    return specs
 
 
 def _lm_microbench(quick: bool = True):
     """LM-stack sanity perf: per-token train cost of smoke models."""
+    import jax
+
     from benchmarks.common import print_csv, timed
     from repro.configs import ARCHS, SHAPES, smoke_config
     from repro.data import make_batch
@@ -57,6 +112,8 @@ def _lm_microbench(quick: bool = True):
 
 def _kernel_microbench():
     """Clustering hot-spot timings (oracle path on CPU)."""
+    import jax
+    import jax.numpy as jnp
     import numpy as np
 
     from benchmarks.common import print_csv, timed
@@ -77,28 +134,55 @@ def _kernel_microbench():
     print_csv("kernel_microbench", rows, "kernel,ms,ns_per_point")
 
 
-def _bench_json_summary() -> None:
+# fallback (axis, metric) pairs for artifacts whose writer predates the
+# registry's per-module ``summary`` hint
+_SUMMARY_AXES = (("devices", "seconds"), ("batch", "points_per_sec"),
+                 ("n", "stream_peak_mb"), ("n", "peak_mb"))
+
+
+def _bench_json_summary(specs: dict) -> None:
     """One summary line per benchmarks/results/BENCH_*.json trajectory.
 
-    Schema-flexible: the sweep axis / metric pair is picked per artifact
-    (devices/seconds for the distributed sweep, batch/points_per_sec for
-    the serving sweep — docs/BENCHMARKS.md)."""
-    import glob
+    The sweep axis / metric pair comes from the registering module's
+    ``summary`` hint when the artifact belongs to a registered harness,
+    falling back to schema sniffing for anything else (docs/BENCHMARKS.md).
+    """
     import json
 
-    axes = (("devices", "seconds"), ("batch", "points_per_sec"),
-            ("n", "stream_peak_mb"))
+    hints = {spec["artifact"]: spec.get("summary")
+             for spec in specs.values() if spec.get("artifact")}
     results = os.path.join(os.path.dirname(__file__), "results")
-    for path in sorted(glob.glob(os.path.join(results, "BENCH_*.json"))):
+    for path in sorted(_glob.glob(os.path.join(results, "BENCH_*.json"))):
         with open(path) as f:
             art = json.load(f)
         rows = art.get("rows", [])
-        axis, metric = next(
-            (a for a in axes if rows and a[0] in rows[0]), axes[0])
+        pair = hints.get(os.path.basename(path))
+        if not (pair and rows and pair[0] in rows[0]):
+            pair = next(
+                (a for a in _SUMMARY_AXES if rows and a[0] in rows[0]),
+                _SUMMARY_AXES[0])
+        axis, metric = pair
         xs = ",".join(str(r.get(axis, "?")) for r in rows)
         ys = ",".join(str(r.get(metric, "?")) for r in rows)
         print(f"# {os.path.basename(path)}: {art.get('name')} "
               f"mode={art.get('mode')} {axis}=[{xs}] {metric}=[{ys}]")
+
+
+def _run_registered(specs: dict, names, full: bool, max_n: int) -> None:
+    for name in names:
+        if name not in specs:
+            print(f"# unknown bench {name!r}; have {sorted(specs)}",
+                  file=sys.stderr)
+            continue
+        mod = importlib.import_module(specs[name]["module_name"])
+        bench = getattr(mod, "BENCH", {})
+        kwargs = bench.get("full") if full else bench.get("quick", {})
+        if callable(kwargs):
+            kwargs = kwargs(max_n)
+        print(f"# bench {name}: {mod.__name__}.run("
+              + ", ".join(f"{k}={v!r}" for k, v in (kwargs or {}).items())
+              + ")")
+        mod.run(**(kwargs or {}))
 
 
 def main() -> None:
@@ -106,21 +190,25 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sweeps (hours on CPU)")
     ap.add_argument("--max-n", type=int, default=0)
-    ap.add_argument("--distributed", action="store_true",
-                    help="also run the multi-device weak-scaling sweep "
-                         "(subprocesses with forced CPU device counts)")
-    ap.add_argument("--serve", action="store_true",
-                    help="also run the ClusterIndex.assign serving sweep")
-    ap.add_argument("--streaming", action="store_true",
-                    help="also run the out-of-core streaming-fit sweep")
+    ap.add_argument("--bench", type=str, default="",
+                    help="comma list of registered harnesses to run after "
+                         "the core suite (or 'all'); see --list-benches")
+    ap.add_argument("--list-benches", action="store_true",
+                    help="print the discovered bench registry and exit")
     ap.add_argument("--summary-only", action="store_true",
                     help="skip every harness; just print the one-line "
                          "summary per recorded BENCH_*.json artifact")
     args, _ = ap.parse_known_args()
     quick = not args.full
 
+    specs = discover_benches()
+    if args.list_benches:
+        for name, spec in sorted(specs.items()):
+            print(f"{name}: {spec['module_name']} "
+                  f"(artifact {spec.get('artifact', '-')})")
+        return
     if args.summary_only:
-        _bench_json_summary()
+        _bench_json_summary(specs)
         return
 
     from benchmarks import (bench_table1_kmeans, bench_table2_hac,
@@ -138,20 +226,6 @@ def main() -> None:
         bench_table9_dbscan.run(max_n=4_000, ms=(1, 2))
         _lm_microbench()
         _kernel_microbench()
-        if args.distributed:
-            from benchmarks import bench_distributed
-
-            bench_distributed.run(n_per_device=4096)
-        if args.serve:
-            from benchmarks import bench_serve
-
-            bench_serve.run(n=20_000, buckets=(32, 128, 512, 2048),
-                            mode="quick")
-        if args.streaming:
-            from benchmarks import bench_streaming
-
-            bench_streaming.run(ns=(8_192, 32_768), chunk=2_048,
-                                inmem_max_n=32_768, mode="quick")
     else:
         mx = args.max_n or 1_000_000
         bench_table1_kmeans.run(
@@ -163,23 +237,12 @@ def main() -> None:
         bench_table9_dbscan.run(max_n=min(mx, 50_000))
         _lm_microbench()
         _kernel_microbench()
-        if args.distributed:
-            from benchmarks import bench_distributed
 
-            bench_distributed.run(n_per_device=min(mx, 65_536))
-        if args.serve:
-            from benchmarks import bench_serve
-
-            bench_serve.run(n=min(mx, 1_000_000), m=3,
-                            buckets=(32, 128, 512, 2048, 8192, 32_768),
-                            mode="full")
-        if args.streaming:
-            from benchmarks import bench_streaming
-
-            bench_streaming.run(
-                ns=tuple(n for n in (65_536, 262_144, 1_048_576) if n <= mx)
-                or (mx,),
-                chunk=8_192, inmem_max_n=min(mx, 262_144), mode="full")
+    if args.bench:
+        names = (sorted(specs) if args.bench.strip() == "all"
+                 else [n.strip() for n in args.bench.split(",") if n.strip()])
+        _run_registered(specs, names, args.full,
+                        args.max_n or 1_000_000)
 
     # dry-run roofline summary, if artifacts exist
     results = os.path.join(os.path.dirname(__file__), "results", "dryrun")
@@ -191,7 +254,7 @@ def main() -> None:
         skip = sum(1 for c in cells if c["status"] == "skip")
         err = sum(1 for c in cells if c["status"] not in ("ok", "skip"))
         print(f"# dryrun_cells: ok={ok} skip={skip} error={err}")
-    _bench_json_summary()
+    _bench_json_summary(specs)
     print(f"# total_bench_seconds,{round(time.time() - t0, 1)}")
 
 

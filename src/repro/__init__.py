@@ -1,0 +1,45 @@
+"""repro — Hybridized Threshold Clustering at production scale.
+
+``repro.fit(x_or_chunks, t, m, backend)`` is the single public entry
+point: the planner (:mod:`repro.core.plan`) resolves every dispatch knob
+from the active :mod:`repro.runtime` config, picks the executor from the
+input type and the mesh (in-memory, sharded, streaming, or the composed
+streaming+sharded path), and returns the canonical
+:class:`repro.core.plan.FitResult`.
+
+Heavy submodules load lazily (PEP 562), so ``import repro`` stays cheap
+and the ``from repro import runtime`` idiom used throughout the package
+never cycles through the clustering stack.
+"""
+from repro import runtime  # noqa: F401  (light: no jax import)
+
+# public name -> defining module, resolved on first attribute access
+_LAZY = {
+    "fit": "repro.core.plan",
+    "plan_fit": "repro.core.plan",
+    "execute_plan": "repro.core.plan",
+    "FitPlan": "repro.core.plan",
+    "FitResult": "repro.core.plan",
+    "register_executor": "repro.core.plan",
+    "available_executors": "repro.core.plan",
+    "ClusterIndex": "repro.core.index",
+    "ClusterService": "repro.serve.cluster_service",
+    "ihtc": "repro.core.ihtc",
+    "ihtc_sharded": "repro.core.distributed",
+    "ihtc_streaming": "repro.core.streaming",
+    "make_data_mesh": "repro.core.distributed",
+}
+
+__all__ = ["runtime", *sorted(_LAZY)]
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

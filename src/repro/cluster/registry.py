@@ -2,9 +2,12 @@
 
 The paper's pipeline is deliberately backend-agnostic: ITIS reduces n units
 to prototypes and *any* clusterer labels the prototypes. This module is the
-one place that agnosticism lives — ``ihtc``, ``ihtc_sharded``, the serving
-path and the benchmarks all resolve backends here instead of each keeping a
-private name→function dict.
+one place that agnosticism lives — the fit planner's epilogue
+(:mod:`repro.core.plan`, the single backend call site for every executor),
+the serving path and the benchmarks all resolve backends here instead of
+each keeping a private name→function dict. The planner's *executor*
+registry (``@register_executor``, DESIGN.md §13) is this module's twin one
+level up: backends label prototypes, executors move data.
 
 Every backend must satisfy the uniform ``BackendFn`` contract::
 

@@ -1,4 +1,9 @@
-"""The paper's primary contribution: TC / ITIS / IHTC, TPU-native in JAX."""
+"""The paper's primary contribution: TC / ITIS / IHTC, TPU-native in JAX.
+
+``repro.core.plan.fit`` (re-exported as ``repro.fit``) is the single entry
+point over every execution strategy; the per-strategy drivers survive as
+deprecation aliases.
+"""
 from repro.core.distributed import (  # noqa: F401
     ihtc_sharded,
     itis_sharded,
@@ -16,6 +21,18 @@ from repro.core.itis import (  # noqa: F401
     validate_reduction_params,
 )
 from repro.core.knn import knn_graph, knn_graph_blocked, ring_knn  # noqa: F401
+from repro.core.plan import (  # noqa: F401
+    FitPlan,
+    FitResult,
+    LabelSpill,
+    Reduction,
+    available_executors,
+    execute_plan,
+    fit,
+    plan_fit,
+    register_executor,
+    resolve_executor,
+)
 from repro.core.prototypes import (  # noqa: F401
     PrototypeSet,
     compose_assignments,

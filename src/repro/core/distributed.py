@@ -47,11 +47,16 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import runtime
-from repro.cluster.registry import BackendFn, resolve_backend
-from repro.core.ihtc import IHTCResult
+from repro.cluster.registry import BackendFn
 from repro.core.itis import ITISResult, level_sizes, validate_reduction_params
 from repro.core.knn import _axis_size, ring_knn
-from repro.core.prototypes import compose_assignments
+from repro.core.plan import (
+    FitPlan,
+    FitResult,
+    Reduction,
+    fit,
+    register_executor,
+)
 from repro.core.tc import _NEG, luby_mis_rounds, seed_priorities
 from repro.kernels import ops
 
@@ -549,6 +554,27 @@ def itis_sharded(
     return ITISResult(cur_x, cur_m, cur_v, assignments, n_protos)
 
 
+@register_executor("sharded")
+def _execute_sharded(plan: FitPlan, x: jax.Array) -> Reduction:
+    """Mesh data-movement strategy: every level buffer is padded to the
+    plan's shard multiple and row-sharded over ``axis_name``; the points
+    are never gathered to one device. The planner's epilogue keeps the
+    ``kmeans`` backend on the mesh (:func:`kmeans_sharded`) and runs any
+    other backend single-device on the already-reduced prototype set."""
+    key_itis, _ = plan.split_keys()
+    r = itis_sharded(
+        x, plan.t, plan.m, mesh=plan.mesh, axis_name=plan.axis_name,
+        weights=plan.weights, valid=plan.valid, key=key_itis,
+        weighted=plan.weighted, impl=plan.impl,
+        min_points=plan.min_points, n_blocks=plan.shard_multiple(),
+    )
+    return Reduction(
+        protos=r.protos, mass=r.mass, valid=r.valid,
+        n_prototypes=r.n_prototypes, assignments=r.assignments,
+        n0=x.shape[0],
+    )
+
+
 def ihtc_sharded(
     x: jax.Array,
     t: int,
@@ -565,8 +591,9 @@ def ihtc_sharded(
     impl: Optional[str] = None,
     n_blocks: Optional[int] = None,
     **backend_kwargs,
-) -> IHTCResult:
-    """Multi-device twin of :func:`repro.core.ihtc.ihtc`.
+) -> FitResult:
+    """Multi-device twin of :func:`repro.core.ihtc.ihtc` (deprecated alias
+    of ``repro.fit(..., executor="sharded")``).
 
     ``backend="kmeans"`` runs the mesh-aware k-means (prototypes stay
     sharded). Other backends resolve through the registry and fall back to
@@ -575,47 +602,10 @@ def ihtc_sharded(
     never gathered. ``impl``/``axis_name``/``mesh`` default to the active
     runtime config.
     """
-    cfg = runtime.active()
-    impl = cfg.impl if impl is None else impl
-    axis_name = cfg.axis_name if axis_name is None else axis_name
-    validate_reduction_params(t, m, n=x.shape[0], driver="ihtc_sharded")
-    if mesh is None:
-        mesh = cfg.mesh if cfg.mesh is not None else make_data_mesh()
-    if key is None:
-        key = jax.random.PRNGKey(0)
-    key_itis, key_backend = jax.random.split(key)
-
-    n0 = x.shape[0]
-    r = itis_sharded(
-        x, t, m, mesh=mesh, axis_name=axis_name, weights=weights, valid=valid,
-        key=key_itis, weighted=weighted, impl=impl, n_blocks=n_blocks,
-    )
-    w = r.mass if use_mass_in_backend else None
-    if backend == "kmeans":
-        p = mesh.shape[axis_name]
-        nb = n_blocks or -(-max(cfg.n_blocks, p) // p) * p
-        kw = dict(backend_kwargs)
-        k = kw.pop("k", 3)
-        iters = kw.pop("iters", 100)
-        proto_labels = kmeans_sharded(
-            r.protos, k, valid=r.valid,
-            weights=jnp.ones_like(r.mass) if w is None else w,
-            key=key_backend, mesh=mesh, axis_name=axis_name, iters=iters,
-            impl=impl, n_blocks=nb, **kw)
-    else:
-        fn = resolve_backend(backend)
-        proto_labels = fn(
-            jax.device_get(r.protos), valid=jax.device_get(r.valid),
-            weights=None if w is None else jax.device_get(w),
-            key=key_backend, impl=impl, **backend_kwargs)
-    proto_labels = jnp.where(r.valid, proto_labels, -1).astype(jnp.int32)
-
-    if r.assignments:
-        labels = compose_assignments(r.assignments, proto_labels)
-    else:
-        labels = proto_labels[:n0]
-    labels = labels[:n0]
-    return IHTCResult(
-        labels.astype(jnp.int32), proto_labels, r.protos, r.mass, r.valid,
-        r.n_prototypes, r.assignments,
+    return fit(
+        x, t, m, backend, executor="sharded",
+        mesh=mesh, axis_name=axis_name, weights=weights, valid=valid,
+        weighted=weighted, use_mass_in_backend=use_mass_in_backend, key=key,
+        impl=impl, n_blocks=n_blocks, driver="ihtc_sharded",
+        **backend_kwargs,
     )

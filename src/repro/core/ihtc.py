@@ -4,31 +4,46 @@ ITIS reduces n units to ≤ n/(t*)^m weighted prototypes, a "sophisticated"
 clusterer (k-means / HAC / DBSCAN / any callable) runs on the prototypes,
 and labels are backed out to all n units. Guarantee: every final cluster
 contains ≥ (t*)^m original units.
+
+Since the planner/executor split (DESIGN.md §13) this module owns exactly
+one thing: the **memory executor** — the data-movement strategy for a
+dataset resident on one device (the per-level ``itis_step`` loop over
+static buffers). Validation, level scheduling, backend finalize and label
+back-out live once in :mod:`repro.core.plan`; :func:`ihtc` survives as a
+thin deprecation alias over ``repro.fit``.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Sequence, Union
+from typing import Optional, Union
 
 import jax
-import jax.numpy as jnp
 
-from repro import runtime
 from repro.cluster.registry import BackendFn, resolve_backend
-from repro.core.itis import ITISResult, itis, validate_reduction_params
-from repro.core.prototypes import compose_assignments
+from repro.core.itis import itis
+from repro.core.plan import FitPlan, FitResult, Reduction, fit, register_executor
 
-# backwards-compatible alias: backend resolution now lives in the registry
+# backwards-compatible aliases: backend resolution lives in the registry,
+# the result type in the planner
 _resolve_backend = resolve_backend
+IHTCResult = FitResult
 
 
-class IHTCResult(NamedTuple):
-    labels: jax.Array           # (n,) int32 final cluster label per original unit
-    proto_labels: jax.Array     # (n_max,) labels of final-level prototypes (-1 pad)
-    protos: jax.Array           # (n_max, d)
-    proto_mass: jax.Array       # (n_max,)
-    proto_valid: jax.Array      # (n_max,) bool
-    n_prototypes: jax.Array     # () int32
-    assignments: Sequence[jax.Array]
+@register_executor("memory")
+def _execute_memory(plan: FitPlan, x: jax.Array) -> Reduction:
+    """Single-device resident-array strategy: every level is one jitted
+    ``itis_step`` over a static padded buffer; assignment maps stay on
+    device for the planner's back-out."""
+    key_itis, _ = plan.split_keys()
+    r = itis(
+        x, plan.t, plan.m, weights=plan.weights, key=key_itis,
+        weighted=plan.weighted, impl=plan.impl, knn_block=plan.knn_block,
+        min_points=plan.min_points, n_blocks=plan.n_blocks,
+    )
+    return Reduction(
+        protos=r.protos, mass=r.mass, valid=r.valid,
+        n_prototypes=r.n_prototypes, assignments=r.assignments,
+        n0=x.shape[0],
+    )
 
 
 def ihtc(
@@ -46,8 +61,9 @@ def ihtc(
     mesh=None,
     axis_name: Optional[str] = None,
     **backend_kwargs,
-) -> IHTCResult:
-    """Full IHTC pipeline (host driver).
+) -> FitResult:
+    """Full IHTC pipeline on a resident array (deprecated alias of
+    :func:`repro.fit` — prefer that entry point for new code).
 
     ``weighted`` controls ITIS centroid weighting (paper-faithful default:
     False). ``use_mass_in_backend`` feeds prototype masses as sample weights
@@ -60,48 +76,16 @@ def ihtc(
     ``with runtime.configure(mesh=...)`` shards this call without touching
     the call site.
 
-    Passing ``mesh`` (or configuring one) dispatches to the multi-device
-    pipeline (:func:`repro.core.distributed.ihtc_sharded`): every level is
-    sharded over the mesh's ``axis_name`` axis and the points are never
-    gathered to one device. See DESIGN.md §4 for the determinism contract
-    between the two paths.
+    Passing ``mesh`` (or configuring one) plans the "sharded" executor:
+    every level is sharded over the mesh's ``axis_name`` axis and the
+    points are never gathered to one device (DESIGN.md §4 has the
+    determinism contract between the two paths). An explicit ``knn_block``
+    is rejected there — the ring kNN has no blocked scan to apply it to.
     """
-    cfg = runtime.active()
-    impl = cfg.impl if impl is None else impl
-    knn_block = cfg.knn_block if knn_block is None else knn_block
-    mesh = cfg.mesh if mesh is None else mesh
-    axis_name = cfg.axis_name if axis_name is None else axis_name
-    validate_reduction_params(t, m, n=x.shape[0], driver="ihtc")
-    if mesh is not None:
-        from repro.core.distributed import ihtc_sharded  # lazy: no cycle
-
-        return ihtc_sharded(
-            x, t, m, backend, mesh=mesh, axis_name=axis_name,
-            weights=weights, weighted=weighted,
-            use_mass_in_backend=use_mass_in_backend, key=key, impl=impl,
-            **backend_kwargs,
-        )
-    if key is None:
-        key = jax.random.PRNGKey(0)
-    key_itis, key_backend = jax.random.split(key)
-
-    r: ITISResult = itis(
-        x, t, m, weights=weights, key=key_itis, weighted=weighted,
-        impl=impl, knn_block=knn_block,
-    )
-    fn = resolve_backend(backend)
-    w = r.mass if use_mass_in_backend else None
-    proto_labels = fn(
-        r.protos, valid=r.valid, weights=w, key=key_backend, impl=impl,
+    return fit(
+        x, t, m, backend,
+        weights=weights, weighted=weighted,
+        use_mass_in_backend=use_mass_in_backend, key=key, impl=impl,
+        knn_block=knn_block, mesh=mesh, axis_name=axis_name, driver="ihtc",
         **backend_kwargs,
-    )
-    proto_labels = jnp.where(r.valid, proto_labels, -1).astype(jnp.int32)
-
-    if r.assignments:
-        labels = compose_assignments(r.assignments, proto_labels)
-    else:  # m == 0 or early-stop before the first level: backend ran on x itself
-        labels = proto_labels[: x.shape[0]]
-    return IHTCResult(
-        labels.astype(jnp.int32), proto_labels, r.protos, r.mass, r.valid,
-        r.n_prototypes, r.assignments,
     )

@@ -5,7 +5,8 @@ to prototypes, a backend labels them, labels are backed out, done. But the
 reduced representation is *exactly* what an online deployment needs (the
 TeraHAC observation): the final prototypes + their backend labels are a
 complete, tiny (n/(t*)^m-sized) classifier for new points. ``fit`` freezes
-that artifact out of an :class:`IHTCResult`; ``assign`` labels query batches
+that artifact out of any :class:`repro.core.plan.FitResult` (every executor
+returns the same canonical type); ``assign`` labels query batches
 by nearest-valid-prototype lookup — a jitted streamed top-1 over the same
 ``ops.pairwise_sq_l2`` / running-best-list machinery the kNN graph builder
 uses, dispatched under the runtime config, so the serving path exercises the
@@ -24,8 +25,9 @@ import jax.numpy as jnp
 
 from repro import runtime
 from repro.cluster.registry import BackendFn
-from repro.core.ihtc import IHTCResult, ihtc
 from repro.core.knn import _merge_topk
+from repro.core.plan import FitResult
+from repro.core.plan import fit as _fit
 from repro.kernels import ops
 
 
@@ -40,8 +42,9 @@ class ClusterIndex(NamedTuple):
     n_prototypes: jax.Array  # () int32 — valid count
 
     @classmethod
-    def from_result(cls, result: IHTCResult) -> "ClusterIndex":
-        """Freeze a fitted :func:`repro.core.ihtc.ihtc` result."""
+    def from_result(cls, result: FitResult) -> "ClusterIndex":
+        """Freeze any fitted :class:`repro.core.plan.FitResult` (every
+        executor returns the same canonical artifact)."""
         return cls(
             protos=result.protos,
             proto_mass=result.proto_mass,
@@ -53,20 +56,23 @@ class ClusterIndex(NamedTuple):
     @classmethod
     def fit(
         cls,
-        x: jax.Array,
+        x,
         t: int,
         m: int,
         backend: Union[str, BackendFn] = "kmeans",
-        **ihtc_kwargs,
+        **fit_kwargs,
     ) -> "ClusterIndex":
-        """Run the full IHTC pipeline and freeze the servable artifact.
+        """Run the planned fit (:func:`repro.fit`) and freeze the servable
+        artifact.
 
-        Accepts every :func:`ihtc` keyword (``mesh=`` shards the fit; all
-        dispatch knobs default to the runtime config). Use
-        ``from_result`` instead when the per-point training labels are also
-        needed — ``fit`` keeps only the O(n/(t*)^m) index.
+        ``x`` is a resident (n, d) array or any chunk iterable — the
+        planner picks the executor from the input type and the mesh
+        (``mesh=``/``executor=`` pin it; all dispatch knobs default to the
+        runtime config). Use ``from_result`` instead when the per-point
+        training labels are also needed — ``fit`` keeps only the
+        O(n/(t*)^m) index.
         """
-        return cls.from_result(ihtc(x, t, m, backend, **ihtc_kwargs))
+        return cls.from_result(_fit(x, t, m, backend, **fit_kwargs))
 
     @classmethod
     def fit_streaming(
@@ -81,15 +87,15 @@ class ClusterIndex(NamedTuple):
         stream without ever materializing the (n, d) array on device.
 
         Accepts every :func:`repro.core.streaming.ihtc_streaming` keyword
-        (``chunk_n``/``reservoir_n`` default to the runtime config). The
-        streaming result's host-side label spill is dropped — use
-        ``ihtc_streaming(...)`` directly when the training labels are also
-        needed, then ``.to_index()`` for this same artifact.
+        (``chunk_n``/``reservoir_n`` default to the runtime config); with a
+        mesh configured the planner composes the out-of-core fit with the
+        sharded level steps (the ``streaming_sharded`` executor). The
+        result's host-side label spill is dropped — use ``repro.fit``
+        directly when the training labels are also needed, then
+        ``.to_index()`` for this same artifact.
         """
-        from repro.core.streaming import ihtc_streaming  # lazy: no cycle
-
-        return ihtc_streaming(chunks, t, m, backend,
-                              **streaming_kwargs).to_index()
+        return cls.from_result(_fit(chunks, t, m, backend,
+                                    **streaming_kwargs))
 
     @property
     def dim(self) -> int:

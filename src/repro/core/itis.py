@@ -11,6 +11,11 @@ shares :func:`level_sizes` so both drivers agree on every buffer shape.
 
 The host-level driver (`itis`) orchestrates the per-level jitted step and
 keeps the level assignment maps needed for IHTC back-out.
+
+:func:`level_sizes` and :func:`validate_reduction_params` are the single
+sources every fit executor shares — the planner (:mod:`repro.core.plan`,
+DESIGN.md §13) wraps them as ``FitPlan.schedule`` and validates once at
+plan time, so no executor re-implements level scheduling or t/m rules.
 """
 from __future__ import annotations
 

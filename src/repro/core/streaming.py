@@ -1,167 +1,101 @@
-"""Out-of-core streaming IHTC fit — clustering data that never fits at once.
+"""Out-of-core streaming IHTC executors — clustering data that never fits
+at once, on one device or on every device of a mesh.
 
 The paper's whole premise is data too massive for k-means/HAC, yet the
-in-memory drivers (:func:`repro.core.ihtc.ihtc`, the sharded twin, and
-``ClusterIndex.fit``) all require the full (n, d) array resident in device
-memory — ``data.stream_to_mesh`` streams *ingestion* only. This module
-closes that gap with the reduce-then-cluster aggregation strategy of the
-Data Nuggets / hierarchical-aggregation line of work: every host chunk is
-collapsed to weighted prototypes by one jitted ITIS level, the prototypes
-fold into a bounded device-side **reservoir**, and the reservoir cascades
-through a further ITIS level whenever it fills. Peak device memory is
-O(chunk + reservoir) — independent of n.
+resident-array executors require the full (n, d) array in device memory.
+These executors close that gap with the reduce-then-cluster aggregation
+strategy of the Data Nuggets / hierarchical-aggregation line of work: every
+host chunk is collapsed to weighted prototypes by one jitted ITIS level,
+the prototypes fold into a bounded device-side **reservoir**, and the
+reservoir cascades through a further ITIS level whenever it fills. Peak
+device memory is O(chunk + reservoir) — independent of n.
 
-Execution plan (DESIGN.md §12):
+Since the planner/executor split (DESIGN.md §13) the stream loop lives here
+ONCE, parameterized by a *placement strategy* — the only thing the two
+executors disagree on:
+
+  * ``streaming`` (:class:`_DevicePlacement`) — chunk buffers and the
+    reservoir live on the default device; levels run through the jitted
+    single-device :func:`repro.core.itis.itis_step`.
+  * ``streaming_sharded`` (:class:`_MeshPlacement`) — the composed path
+    neither PR's driver could reach: chunk buffers and the reservoir are
+    **row-sharded over the mesh**, per-chunk reduces and cascades run
+    through the sharded level step of :mod:`repro.core.distributed`, and
+    the slab fold is a per-shard ``shard_map`` write at the frontier. Every
+    device works on every chunk while per-device memory stays
+    O((chunk + reservoir) / shards).
+
+Execution plan (DESIGN.md §12–§13):
 
   * **level 0, per chunk** — every chunk is padded to the static
-    ``chunk_n`` shape and reduced by the *existing* jitted
-    :func:`repro.core.itis.itis_step` (one compiled program for the whole
-    stream). The (chunk_n,)-sized chunk→prototype assignment map spills to
-    host memory for the final back-out.
-  * **reservoir fold** — each chunk's prototype buffer (its ``chunk_n//t``
-    slots, validity-masked) lands at the reservoir's write frontier via one
-    jitted ``dynamic_update_slice``; the frontier advances by plain host
-    arithmetic, so the chunk loop never synchronizes with the device.
-  * **cascade** — when the next fold would overflow, one ``itis_step`` over
-    the whole reservoir buffer (again a single compiled program for every
-    cascade) compacts it to ``reservoir_n // t`` slots; the reservoir-wide
-    assignment map spills to host.
+    ``chunk_n`` shape (rounded to the shard multiple under a mesh) and
+    reduced by one ITIS level (one compiled program for the whole stream).
+    The chunk→prototype assignment map spills to host for the back-out.
+  * **reservoir fold** — each chunk's prototype slab lands at the
+    reservoir's write frontier; the frontier advances by host arithmetic,
+    so the chunk loop never synchronizes with the device.
+  * **cascade** — when the next fold would overflow, one ITIS level over
+    the whole reservoir compacts it to ``reservoir_n // t`` slots (or, with
+    too few valid prototypes to reduce, an identity hole-compaction); the
+    reservoir-wide assignment map spills to host.
   * **finalize** — after the stream, the occupied reservoir prefix runs the
-    remaining ``m - 1`` ITIS levels (the same key-split schedule and
-    early-stop rule as :func:`repro.core.itis.itis`), and the backend from
-    :mod:`repro.cluster.registry` labels the surviving prototypes.
+    remaining ``m - 1`` ITIS levels (the in-memory key schedule and
+    early-stop rule); the planner's epilogue labels the survivors.
 
-Labels stream *back out* chunk-by-chunk: ``labels_for(c)`` composes chunk
-c's spilled map through every cascade/finalize map recorded at-or-after its
-fold epoch, entirely in host numpy — the device never holds an O(n) label
-array.
+Labels stream *back out* chunk-by-chunk through the spilled maps
+(:class:`repro.core.plan.LabelSpill`), entirely in host numpy — the device
+never holds an O(n) label array.
 
 Parity contract (tested): when the stream presents the dataset as a single
 level-0 buffer (one chunk with ``chunk_n == n``) and the reservoir never
 overflows mid-level, the fold degenerates to an identity placement and
 every subsequent level runs in the exact buffers, with the exact keys, of
-the in-memory driver — labels, prototypes and masses are bit-identical to
-``ihtc``. Multi-chunk streams are a *different estimator of the same
-family* (level 0's TC graph cannot cross chunk boundaries), so they are
-held to the pipeline's invariants (mass conservation, the (t*)^m size
-guarantee, accuracy on the §4 mixture) rather than bitwise equality —
-DESIGN.md §12 spells out why.
+the in-memory executor — labels, prototypes and masses are bit-identical to
+``repro.fit(x)``. The same holds between ``streaming_sharded`` and the
+plain ``streaming`` executor when every buffer size already divides the
+shard multiple (the DESIGN.md §4.3 alignment condition), which is what the
+executor-equivalence matrix in tests/test_distribution.py asserts.
+Multi-chunk streams are a *different estimator of the same family* (level
+0's TC graph cannot cross chunk boundaries), so they are held to the
+pipeline's invariants (mass conservation, the (t*)^m size guarantee,
+accuracy on the §4 mixture) rather than bitwise equality — DESIGN.md §12
+spells out why.
 """
 from __future__ import annotations
 
 import functools
-from typing import Iterable, Iterator, List, Optional, Tuple, Union
+from typing import List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import runtime
-from repro.cluster.registry import BackendFn, resolve_backend
+from repro.cluster.registry import BackendFn
 from repro.core.itis import (
+    ITISLevelOut,
     itis_step,
     level_sizes,
+    round_up,
     validate_reduction_params,
+)
+from repro.core.plan import (
+    FitPlan,
+    FitResult,
+    LabelSpill,
+    Reduction,
+    fit,
+    register_executor,
 )
 
 # fold_in tag separating the cascade key stream from the per-chunk stream
 _CASCADE_KEY_TAG = 0x7FFFFFFF
 
-
-class StreamingIHTCResult:
-    """Fitted artifact of :func:`ihtc_streaming` plus the host-side spill
-    needed to stream final labels back out.
-
-    Device-resident (all O(reservoir), never O(n)):
-      ``protos`` / ``proto_mass`` / ``proto_valid`` — the final prototype
-      buffer; ``proto_labels`` — backend labels (-1 pad/noise);
-      ``n_prototypes`` — valid count.
-
-    Host-resident spill: one int32 assignment map per chunk plus one per
-    cascade/finalize level (the format §12 documents). ``labels_for`` /
-    ``iter_labels`` compose them lazily; nothing O(n) ever lands on device.
-    """
-
-    def __init__(
-        self,
-        *,
-        protos: jax.Array,
-        proto_mass: jax.Array,
-        proto_valid: jax.Array,
-        proto_labels: jax.Array,
-        n_prototypes: jax.Array,
-        chunk_n: int,
-        chunk_assign: List[np.ndarray],
-        chunk_offset: List[int],
-        chunk_epoch: List[int],
-        chunk_counts: List[int],
-        maps: List[np.ndarray],
-        n_cascades: int,
-    ):
-        self.protos = protos
-        self.proto_mass = proto_mass
-        self.proto_valid = proto_valid
-        self.proto_labels = proto_labels
-        self.n_prototypes = n_prototypes
-        self.chunk_n = chunk_n
-        self.n_cascades = n_cascades
-        self._chunk_assign = chunk_assign
-        self._chunk_offset = chunk_offset
-        self._chunk_epoch = chunk_epoch
-        self._chunk_counts = chunk_counts
-        self._maps = maps
-        self._proto_labels_host = np.asarray(proto_labels)
-
-    @property
-    def n_chunks(self) -> int:
-        return len(self._chunk_assign)
-
-    @property
-    def n_total(self) -> int:
-        return int(sum(self._chunk_counts))
-
-    def labels_for(self, chunk_idx: int) -> np.ndarray:
-        """Final cluster labels of chunk ``chunk_idx``'s valid rows.
-
-        Pure host numpy over the spilled maps: chunk-local prototype id →
-        reservoir slot at fold time → through every cascade/finalize map
-        from the chunk's epoch onward → backend label.
-        """
-        count = self._chunk_counts[chunk_idx]
-        lab = self._chunk_assign[chunk_idx][:count].astype(np.int64)
-        slot = np.where(lab >= 0, lab + self._chunk_offset[chunk_idx], -1)
-        for mp in self._maps[self._chunk_epoch[chunk_idx]:]:
-            slot = np.where(slot >= 0, mp[np.maximum(slot, 0)], -1)
-        out = np.where(
-            slot >= 0, self._proto_labels_host[np.maximum(slot, 0)], -1)
-        return out.astype(np.int32)
-
-    def iter_labels(self) -> Iterator[np.ndarray]:
-        """Final labels, one array per input chunk, in stream order."""
-        for c in range(self.n_chunks):
-            yield self.labels_for(c)
-
-    def labels(self) -> np.ndarray:
-        """All labels concatenated — convenience for datasets that fit on
-        host; prefer :meth:`iter_labels` at scale."""
-        if self.n_chunks == 0:
-            return np.zeros((0,), np.int32)
-        return np.concatenate(list(self.iter_labels()))
-
-    def to_index(self):
-        """Freeze into a servable :class:`repro.core.index.ClusterIndex`."""
-        from repro.core.index import ClusterIndex  # lazy: no import cycle
-
-        return ClusterIndex(
-            protos=self.protos,
-            proto_mass=self.proto_mass,
-            proto_valid=self.proto_valid,
-            proto_labels=self.proto_labels,
-            n_prototypes=self.n_prototypes,
-        )
+# deprecation alias: every executor returns the canonical FitResult now
+StreamingIHTCResult = FitResult
 
 
-def _normalize_chunk(item) -> Tuple[np.ndarray, int]:
+def _normalize_chunk(item, driver: str) -> Tuple[np.ndarray, int]:
     """Accept bare (c, d) arrays or ``(chunk, n_valid)`` pairs."""
     if isinstance(item, (tuple, list)) and len(item) == 2:
         arr, n_valid = item
@@ -169,7 +103,7 @@ def _normalize_chunk(item) -> Tuple[np.ndarray, int]:
         n_valid = int(n_valid)
         if not 0 <= n_valid <= arr.shape[0]:
             raise ValueError(
-                f"ihtc_streaming: chunk n_valid={n_valid} outside "
+                f"{driver}: chunk n_valid={n_valid} outside "
                 f"[0, {arr.shape[0]}]")
         return arr, n_valid
     arr = np.asarray(item, np.float32)
@@ -202,8 +136,364 @@ def _fold(res_x, res_m, res_v, px, pm, pv, offset, _dispatch: tuple = ()):
     return res_x, res_m, res_v
 
 
+# ---------------------------------------------------------------------------
+# placement strategies — the ONLY thing the two streaming executors differ on
+# ---------------------------------------------------------------------------
+
+
+class _DevicePlacement:
+    """Single-device strategy: buffers live on the default device, levels
+    run through the jitted single-device ``itis_step``."""
+
+    def __init__(self, plan: FitPlan, d: int):
+        self.plan = plan
+        self.d = d
+        self.mult = 1
+
+    def reservoir(self, n: int):
+        return (jnp.zeros((n, self.d), jnp.float32),
+                jnp.zeros((n,), jnp.float32),
+                jnp.zeros((n,), bool))
+
+    def place_chunk(self, buf: np.ndarray, n_valid: int):
+        xj = jnp.asarray(buf)
+        vj = jnp.arange(buf.shape[0]) < n_valid
+        return xj, vj.astype(jnp.float32), vj
+
+    def place_slab(self, px, pm, pv):
+        """Raw host slab → device (replication is a no-op here)."""
+        return jnp.asarray(px), jnp.asarray(pm), jnp.asarray(pv)
+
+    def level_step(self, x, mass, valid, key, n_out: int) -> ITISLevelOut:
+        p = self.plan
+        return itis_step(
+            x, mass, valid, p.t, key=key, weighted=p.weighted, impl=p.impl,
+            knn_block=p.knn_block, n_out=n_out, n_blocks=p.n_blocks)
+
+    def fold(self, res, px, pm, pv, offset: int):
+        return _fold(*res, px, pm, pv, jnp.int32(offset),
+                     _dispatch=runtime.dispatch_key())
+
+    def compact(self, res):
+        new_x, new_m, new_v, assignment = _compact(*res)
+        return (new_x, new_m, new_v), assignment
+
+    def pad_protos(self, out: ITISLevelOut, total_n: int):
+        pad = total_n - out.protos.shape[0]
+        return (jnp.pad(out.protos, ((0, pad), (0, 0))),
+                jnp.pad(out.mass, (0, pad)),
+                jnp.pad(out.valid, (0, pad)))
+
+    def prefix(self, res, frontier: int, size0: int):
+        res_x, res_m, res_v = res
+        return res_x[:size0], res_m[:size0], res_v[:size0]
+
+
+class _MeshPlacement:
+    """Mesh strategy (the composed ``streaming_sharded`` executor): the
+    reservoir and every chunk buffer are row-sharded over the plan's mesh
+    axis, levels run through the sharded level step, and the slab fold is a
+    per-shard masked write (each shard overwrites exactly its rows of the
+    ``[offset, offset + slab)`` window from the replicated slab — no
+    cross-shard traffic beyond replicating the already-reduced slab)."""
+
+    def __init__(self, plan: FitPlan, d: int):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        self.plan = plan
+        self.d = d
+        self.mult = plan.shard_multiple()
+        self.mesh = plan.mesh
+        self.axis_name = plan.axis_name
+        self._row = NamedSharding(self.mesh, P(self.axis_name, None))
+        self._vec = NamedSharding(self.mesh, P(self.axis_name))
+        self._rep = NamedSharding(self.mesh, P())
+
+    def _place(self, x, m, v):
+        return (jax.device_put(x, self._row), jax.device_put(m, self._vec),
+                jax.device_put(v, self._vec))
+
+    def reservoir(self, n: int):
+        return self._place(jnp.zeros((n, self.d), jnp.float32),
+                           jnp.zeros((n,), jnp.float32),
+                           jnp.zeros((n,), bool))
+
+    def place_chunk(self, buf: np.ndarray, n_valid: int):
+        vj = np.arange(buf.shape[0]) < n_valid
+        return self._place(buf, vj.astype(np.float32), vj)
+
+    def place_slab(self, px, pm, pv):
+        return (jax.device_put(jnp.asarray(px), self._rep),
+                jax.device_put(jnp.asarray(pm), self._rep),
+                jax.device_put(jnp.asarray(pv), self._rep))
+
+    def level_step(self, x, mass, valid, key, n_out: int) -> ITISLevelOut:
+        from repro.core.distributed import _itis_level_sharded
+
+        p = self.plan
+        protos, pmass, pvalid, assignment, ncs = _itis_level_sharded(
+            x, mass, valid, key, t=p.t, n_out=n_out, weighted=p.weighted,
+            impl=p.impl, n_blocks=self.mult, axis_name=self.axis_name,
+            mesh=self.mesh, _dispatch=runtime.dispatch_key())
+        return ITISLevelOut(protos, pmass, pvalid, assignment, ncs[0])
+
+    def fold(self, res, px, pm, pv, offset: int):
+        px, pm, pv = self.place_slab(px, pm, pv)
+        return _fold_sharded(
+            *res, px, pm, pv, jnp.int32(offset),
+            slab_n=px.shape[0], axis_name=self.axis_name, mesh=self.mesh,
+            _dispatch=runtime.dispatch_key())
+
+    def compact(self, res):
+        # _compact is exact (integer ranks + unique-index scatters), so
+        # running it resident and re-pinning the layout stays deterministic
+        new_x, new_m, new_v, assignment = _compact(*res)
+        return self._place(new_x, new_m, new_v), assignment
+
+    def pad_protos(self, out: ITISLevelOut, total_n: int):
+        pad = total_n - out.protos.shape[0]
+        return self._place(jnp.pad(out.protos, ((0, pad), (0, 0))),
+                           jnp.pad(out.mass, (0, pad)),
+                           jnp.pad(out.valid, (0, pad)))
+
+    def prefix(self, res, frontier: int, size0: int):
+        res_x, res_m, res_v = res
+        pad = size0 - frontier
+        return self._place(
+            jnp.pad(res_x[:frontier], ((0, pad), (0, 0))),
+            jnp.pad(res_m[:frontier], (0, pad)),
+            jnp.pad(res_v[:frontier], (0, pad)))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("slab_n", "axis_name", "mesh", "_dispatch"))
+def _fold_sharded(res_x, res_m, res_v, px, pm, pv, offset, *,
+                  slab_n: int, axis_name: str, mesh, _dispatch: tuple = ()):
+    """Per-shard twin of :func:`_fold`: every shard overwrites the rows of
+    the global ``[offset, offset + slab_n)`` window it owns, reading from
+    the replicated slab. One compiled program per slab shape serves the
+    whole stream (the offset stays traced)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.distributed import _shard_map
+
+    def body(rx, rm, rv, px, pm, pv, offset):
+        nl = rx.shape[0]
+        me = jax.lax.axis_index(axis_name)
+        rel = me * nl + jnp.arange(nl, dtype=jnp.int32) - offset
+        take = (rel >= 0) & (rel < slab_n)
+        safe = jnp.clip(rel, 0, slab_n - 1)
+        rx = jnp.where(take[:, None], px[safe], rx)
+        rm = jnp.where(take, pm[safe], rm)
+        rv = jnp.where(take, pv[safe], rv)
+        return rx, rm, rv
+
+    a = axis_name
+    return _shard_map(
+        body, mesh,
+        in_specs=(P(a, None), P(a), P(a), P(), P(), P(), P()),
+        out_specs=(P(a, None), P(a), P(a)),
+    )(res_x, res_m, res_v, px, pm, pv, offset)
+
+
+# ---------------------------------------------------------------------------
+# the stream loop (once, for both executors)
+# ---------------------------------------------------------------------------
+
+
+def _run_stream(plan: FitPlan, chunks, placement_cls) -> Reduction:
+    driver = plan.driver
+    t, m = plan.t, plan.m
+    floor = plan.reduction_floor()
+    key_itis, _ = plan.split_keys()
+    # the in-memory key schedule: one split per level, level 0 first
+    key_chain, key_level0 = jax.random.split(key_itis)
+    key_cascade = jax.random.fold_in(key_level0, _CASCADE_KEY_TAG)
+
+    it = iter(chunks)
+    first = None
+    for item in it:
+        first = _normalize_chunk(item, driver)
+        break
+    if first is None:
+        raise ValueError(f"{driver}: the chunk stream is empty")
+    chunk_n = plan.chunk_n
+    if not chunk_n:
+        chunk_n = first[0].shape[0]
+        if chunk_n == 0:
+            raise ValueError(
+                f"{driver}: cannot infer chunk_n from an empty first "
+                f"chunk; pass chunk_n= or configure runtime chunk_n")
+    d = first[0].shape[1] if first[0].ndim == 2 else None
+    if d is None:
+        raise ValueError(f"{driver}: chunks must be 2-D (rows, d)")
+    validate_reduction_params(t, m, n=chunk_n, min_m=1, driver=driver)
+
+    placement = placement_cls(plan, d)
+    mult = placement.mult
+    chunk_buf_n = round_up(chunk_n, mult)
+    chunk_out = round_up(max(chunk_buf_n // t, 1), mult)
+    # raw-fold slab for chunks too small to reduce (the in-memory early-stop
+    # rule, applied per chunk): their valid prefix is copied verbatim.
+    # Raw slabs enter the fold replicated, so they need no shard padding.
+    raw_len = min(chunk_n, floor)
+    reservoir_n = plan.reservoir_n
+    if not reservoir_n:
+        # large enough for the feasibility bound below by construction,
+        # including the compaction degradation case
+        reservoir_n = max(4 * chunk_out, 2 * raw_len,
+                          floor - 1 + max(chunk_out, raw_len))
+    reservoir_n = round_up(reservoir_n, mult)
+    cascade_out = round_up(max(reservoir_n // t, 1), mult)
+    # feasibility up front, before any of the stream is consumed: an
+    # overflow frees down to cascade_out (reduction) or, degraded, to at
+    # most floor - 1 valid rows (compaction — too few valid prototypes to
+    # reduce); the next slab may be a full chunk reduce (chunk_out rows) or
+    # a raw tail (raw_len)
+    post_overflow = max(cascade_out, floor - 1)
+    if reservoir_n - post_overflow < max(chunk_out, raw_len):
+        raise ValueError(
+            f"{driver}: reservoir_n={reservoir_n} cannot absorb a "
+            f"{max(chunk_out, raw_len)}-row slab right after an overflow "
+            f"(which frees down to at most {post_overflow} occupied "
+            f"slots); need reservoir_n - max(reservoir_n//t, {floor - 1}) "
+            f">= max(chunk_n//t, {raw_len})")
+
+    res = placement.reservoir(reservoir_n)
+    frontier = 0          # host-tracked write position (no device sync)
+    n_cascades = 0
+
+    chunk_assign: List[np.ndarray] = []
+    chunk_offset: List[int] = []
+    chunk_epoch: List[int] = []
+    chunk_counts: List[int] = []
+    maps: List[np.ndarray] = []
+
+    def cascade():
+        nonlocal res, frontier, n_cascades
+        occ_valid = int(jnp.sum(res[2]))
+        if occ_valid < floor:
+            # the frontier is exhausted but the slots are mostly masked
+            # holes (slabs whose chunks produced very few clusters): too
+            # few valid prototypes for a reduction level, so squeeze the
+            # holes out instead — an identity level that frees the space
+            # without collapsing anything
+            res, assignment = placement.compact(res)
+            maps.append(np.array(assignment))  # true host copy
+            frontier = occ_valid
+            return
+        ck = jax.random.fold_in(key_cascade, n_cascades)
+        out = placement.level_step(*res, key=ck, n_out=cascade_out)
+        maps.append(np.array(out.assignment))  # true host copy, not a view
+        res = placement.pad_protos(out, reservoir_n)
+        frontier = cascade_out
+        n_cascades += 1
+
+    def fold(px, pm, pv, slab: int) -> int:
+        nonlocal res, frontier
+        if frontier + slab > reservoir_n:
+            cascade()
+        if frontier + slab > reservoir_n:
+            raise ValueError(
+                f"{driver}: a {slab}-row slab does not fit the "
+                f"reservoir even after a cascade (frontier={frontier}, "
+                f"reservoir_n={reservoir_n}); increase reservoir_n")
+        offset = frontier
+        res = placement.fold(res, px, pm, pv, offset)
+        frontier += slab
+        return offset
+
+    def consume(arr: np.ndarray, n_valid: int, chunk_idx: int) -> None:
+        if arr.shape[0] > chunk_n:
+            raise ValueError(
+                f"{driver}: chunk {chunk_idx} has {arr.shape[0]} rows "
+                f"> chunk_n={chunk_n}; re-chunk the stream or raise chunk_n")
+        if arr.ndim != 2 or arr.shape[1] != d:
+            raise ValueError(
+                f"{driver}: chunk {chunk_idx} has shape {arr.shape}, "
+                f"expected (<= {chunk_n}, {d})")
+        if n_valid == 0:  # nothing to cluster; keep chunk indexing aligned
+            chunk_assign.append(np.full((chunk_buf_n,), -1, np.int32))
+            chunk_offset.append(0)
+            chunk_epoch.append(len(maps))
+            chunk_counts.append(0)
+            return
+        buf = np.zeros((chunk_buf_n, d), np.float32)
+        buf[: arr.shape[0]] = arr
+        if n_valid < floor:
+            # too small to reduce (the itis early-stop rule): fold the valid
+            # prefix raw, with an identity assignment map
+            pv = np.arange(raw_len) < n_valid
+            px, pm, pv = placement.place_slab(
+                buf[:raw_len], pv.astype(np.float32), pv)
+            off = fold(px, pm, pv, raw_len)
+            # epoch AFTER the fold: a cascade the fold itself triggered
+            # must not apply to the slots it just wrote
+            epoch = len(maps)
+            ident = np.arange(chunk_buf_n, dtype=np.int32)
+            chunk_assign.append(
+                np.where(ident < n_valid, ident, -1).astype(np.int32))
+            chunk_offset.append(off)
+            chunk_epoch.append(epoch)
+            chunk_counts.append(n_valid)
+            return
+        xj, mj, vj = placement.place_chunk(buf, n_valid)
+        sub = key_level0 if chunk_idx == 0 else jax.random.fold_in(
+            key_level0, chunk_idx)
+        out = placement.level_step(xj, mj, vj, key=sub, n_out=chunk_out)
+        off = fold(out.protos, out.mass, out.valid, chunk_out)
+        epoch = len(maps)  # after the fold — see the raw path above
+        chunk_assign.append(np.array(out.assignment))  # true host copy
+        chunk_offset.append(off)
+        chunk_epoch.append(epoch)
+        chunk_counts.append(n_valid)
+
+    consume(*first, 0)
+    for chunk_idx, item in enumerate(it, start=1):
+        consume(*_normalize_chunk(item, driver), chunk_idx)
+    if frontier == 0:
+        raise ValueError(
+            f"{driver}: the stream contained no valid rows (every "
+            f"chunk was empty or fully masked) — nothing to cluster")
+
+    # ---- finalize: levels 1..m-1 on the occupied reservoir prefix --------
+    size0 = round_up(frontier, mult)
+    sizes = level_sizes(size0, t, m - 1, multiple=mult) if m > 1 else [size0]
+    buf_x, buf_m, buf_v = placement.prefix(res, frontier, size0)
+    for level in range(m - 1):
+        n_valid = int(jnp.sum(buf_v))
+        if n_valid < floor:
+            break
+        key_chain, sub = jax.random.split(key_chain)
+        out = placement.level_step(buf_x, buf_m, buf_v, key=sub,
+                                   n_out=sizes[level + 1])
+        maps.append(np.array(out.assignment))  # true host copy, not a view
+        buf_x, buf_m, buf_v = out.protos, out.mass, out.valid
+
+    spill = LabelSpill(
+        chunk_n=chunk_n, chunk_assign=chunk_assign,
+        chunk_offset=chunk_offset, chunk_epoch=chunk_epoch,
+        chunk_counts=chunk_counts, maps=maps, n_cascades=n_cascades,
+    )
+    return Reduction(
+        protos=buf_x, mass=buf_m, valid=buf_v,
+        n_prototypes=jnp.sum(buf_v).astype(jnp.int32), assignments=[],
+        n0=spill.n_total, spill=spill,
+    )
+
+
+@register_executor("streaming")
+def _execute_streaming(plan: FitPlan, chunks) -> Reduction:
+    return _run_stream(plan, chunks, _DevicePlacement)
+
+
+@register_executor("streaming_sharded")
+def _execute_streaming_sharded(plan: FitPlan, chunks) -> Reduction:
+    return _run_stream(plan, chunks, _MeshPlacement)
+
+
 def ihtc_streaming(
-    chunks: Iterable,
+    chunks,
     t: int,
     m: int,
     backend: Union[str, BackendFn] = "kmeans",
@@ -218,8 +508,12 @@ def ihtc_streaming(
     n_blocks: Optional[int] = None,
     min_points: int = 4,
     **backend_kwargs,
-) -> StreamingIHTCResult:
-    """Fit IHTC over a chunk stream in O(chunk + reservoir) device memory.
+) -> FitResult:
+    """Fit IHTC over a chunk stream in O(chunk + reservoir) device memory
+    (deprecated alias of ``repro.fit(..., executor="streaming")`` — the
+    planner entry point also unlocks the composed ``streaming_sharded``
+    executor when a mesh is configured; this alias stays pinned to the
+    single-device executor for backward compatibility).
 
     ``chunks`` is any iterator of host chunks — bare (c, d) arrays (e.g.
     :func:`repro.data.pipeline.point_chunks`) or ``(chunk, n_valid)`` pairs
@@ -233,209 +527,15 @@ def ihtc_streaming(
     required: with m = 0 no reduction ever happens and the backend would
     need all n points at once — exactly what streaming exists to avoid.
 
-    Returns a :class:`StreamingIHTCResult`; ``labels_for(i)`` /
-    ``iter_labels()`` stream the final labels back out, ``to_index()``
-    (or :meth:`repro.core.index.ClusterIndex.fit_streaming`) freezes the
-    servable artifact. See the module docstring for the parity contract
-    with the in-memory driver.
+    Returns the canonical :class:`repro.core.plan.FitResult`;
+    ``labels_for(i)`` / ``iter_labels()`` stream the final labels back out,
+    ``to_index()`` freezes the servable artifact. See the module docstring
+    for the parity contract with the in-memory executor.
     """
-    cfg = runtime.active()
-    impl = cfg.impl if impl is None else impl
-    knn_block = cfg.knn_block if knn_block is None else knn_block
-    n_blocks = cfg.n_blocks if n_blocks is None else n_blocks
-    chunk_n = cfg.chunk_n if chunk_n is None else chunk_n
-    reservoir_n = cfg.reservoir_n if reservoir_n is None else reservoir_n
-    validate_reduction_params(t, m, min_m=1, driver="ihtc_streaming")
-    if key is None:
-        key = jax.random.PRNGKey(0)
-    key_itis, key_backend = jax.random.split(key)
-    # the in-memory driver's key schedule: one split per level, level 0 first
-    key_chain, key_level0 = jax.random.split(key_itis)
-    key_cascade = jax.random.fold_in(key_level0, _CASCADE_KEY_TAG)
-
-    it = iter(chunks)
-    first = None
-    for item in it:
-        first = _normalize_chunk(item)
-        break
-    if first is None:
-        raise ValueError("ihtc_streaming: the chunk stream is empty")
-    if not chunk_n:
-        chunk_n = first[0].shape[0]
-        if chunk_n == 0:
-            raise ValueError(
-                "ihtc_streaming: cannot infer chunk_n from an empty first "
-                "chunk; pass chunk_n= or configure runtime chunk_n")
-    d = first[0].shape[1] if first[0].ndim == 2 else None
-    if d is None:
-        raise ValueError("ihtc_streaming: chunks must be 2-D (rows, d)")
-    validate_reduction_params(t, m, n=chunk_n, min_m=1,
-                              driver="ihtc_streaming")
-
-    chunk_out = max(chunk_n // t, 1)
-    # raw-fold slab for chunks too small to reduce (the in-memory early-stop
-    # rule, applied per chunk): their valid prefix is copied verbatim
-    raw_len = min(chunk_n, max(min_points, 2 * t))
-    if not reservoir_n:
-        # large enough for the feasibility bound below by construction,
-        # including the compaction degradation case
-        reservoir_n = max(4 * chunk_out, 2 * raw_len,
-                          max(min_points, 2 * t) - 1 + max(chunk_out, raw_len))
-    cascade_out = max(reservoir_n // t, 1)
-    # feasibility up front, before any of the stream is consumed: an
-    # overflow frees down to cascade_out (reduction) or, degraded, to at
-    # most max(min_points, 2t) - 1 valid rows (compaction — too few valid
-    # prototypes to reduce); the next slab may be a full chunk reduce
-    # (chunk_out rows) or a raw tail (raw_len)
-    post_overflow = max(cascade_out, max(min_points, 2 * t) - 1)
-    if reservoir_n - post_overflow < max(chunk_out, raw_len):
-        raise ValueError(
-            f"ihtc_streaming: reservoir_n={reservoir_n} cannot absorb a "
-            f"{max(chunk_out, raw_len)}-row slab right after an overflow "
-            f"(which frees down to at most {post_overflow} occupied "
-            f"slots); need reservoir_n - max(reservoir_n//t, "
-            f"{max(min_points, 2 * t) - 1}) >= max(chunk_n//t, {raw_len})")
-
-    res_x = jnp.zeros((reservoir_n, d), jnp.float32)
-    res_m = jnp.zeros((reservoir_n,), jnp.float32)
-    res_v = jnp.zeros((reservoir_n,), bool)
-    frontier = 0          # host-tracked write position (no device sync)
-    n_cascades = 0
-
-    chunk_assign: List[np.ndarray] = []
-    chunk_offset: List[int] = []
-    chunk_epoch: List[int] = []
-    chunk_counts: List[int] = []
-    maps: List[np.ndarray] = []
-
-    def cascade():
-        nonlocal res_x, res_m, res_v, frontier, n_cascades
-        occ_valid = int(jnp.sum(res_v))
-        if occ_valid < max(min_points, 2 * t):
-            # the frontier is exhausted but the slots are mostly masked
-            # holes (slabs whose chunks produced very few clusters): too
-            # few valid prototypes for a reduction level, so squeeze the
-            # holes out instead — an identity level that frees the space
-            # without collapsing anything
-            res_x, res_m, res_v, assignment = _compact(res_x, res_m, res_v)
-            maps.append(np.array(assignment))  # true host copy
-            frontier = occ_valid
-            return
-        ck = jax.random.fold_in(key_cascade, n_cascades)
-        out = itis_step(
-            res_x, res_m, res_v, t, key=ck, weighted=weighted, impl=impl,
-            knn_block=knn_block, n_out=cascade_out, n_blocks=n_blocks)
-        maps.append(np.array(out.assignment))  # true host copy, not a zero-copy view
-        pad = reservoir_n - cascade_out
-        res_x = jnp.pad(out.protos, ((0, pad), (0, 0)))
-        res_m = jnp.pad(out.mass, (0, pad))
-        res_v = jnp.pad(out.valid, (0, pad))
-        frontier = cascade_out
-        n_cascades += 1
-
-    def fold(px, pm, pv, slab: int):
-        nonlocal res_x, res_m, res_v, frontier
-        if frontier + slab > reservoir_n:
-            cascade()
-        if frontier + slab > reservoir_n:
-            raise ValueError(
-                f"ihtc_streaming: a {slab}-row slab does not fit the "
-                f"reservoir even after a cascade (frontier={frontier}, "
-                f"reservoir_n={reservoir_n}); increase reservoir_n")
-        offset = frontier
-        res_x, res_m, res_v = _fold(
-            res_x, res_m, res_v, px, pm, pv, jnp.int32(offset),
-            _dispatch=cfg.dispatch_key())
-        frontier += slab
-        return offset
-
-    def consume(arr: np.ndarray, n_valid: int, chunk_idx: int) -> None:
-        if arr.shape[0] > chunk_n:
-            raise ValueError(
-                f"ihtc_streaming: chunk {chunk_idx} has {arr.shape[0]} rows "
-                f"> chunk_n={chunk_n}; re-chunk the stream or raise chunk_n")
-        if arr.ndim != 2 or arr.shape[1] != d:
-            raise ValueError(
-                f"ihtc_streaming: chunk {chunk_idx} has shape {arr.shape}, "
-                f"expected (<= {chunk_n}, {d})")
-        if n_valid == 0:  # nothing to cluster; keep chunk indexing aligned
-            chunk_assign.append(np.full((chunk_n,), -1, np.int32))
-            chunk_offset.append(0)
-            chunk_epoch.append(len(maps))
-            chunk_counts.append(0)
-            return
-        buf = np.zeros((chunk_n, d), np.float32)
-        buf[: arr.shape[0]] = arr
-        xj = jnp.asarray(buf)
-        vj = jnp.arange(chunk_n) < n_valid
-        mj = vj.astype(jnp.float32)
-        if n_valid < max(min_points, 2 * t):
-            # too small to reduce (the itis early-stop rule): fold the valid
-            # prefix raw, with an identity assignment map
-            off = fold(xj[:raw_len], mj[:raw_len], vj[:raw_len], raw_len)
-            # epoch AFTER the fold: a cascade the fold itself triggered
-            # must not apply to the slots it just wrote
-            epoch = len(maps)
-            ident = np.arange(chunk_n, dtype=np.int32)
-            chunk_assign.append(
-                np.where(ident < n_valid, ident, -1).astype(np.int32))
-            chunk_offset.append(off)
-            chunk_epoch.append(epoch)
-            chunk_counts.append(n_valid)
-            return
-        sub = key_level0 if chunk_idx == 0 else jax.random.fold_in(
-            key_level0, chunk_idx)
-        out = itis_step(
-            xj, mj, vj, t, key=sub, weighted=weighted, impl=impl,
-            knn_block=knn_block, n_out=chunk_out, n_blocks=n_blocks)
-        off = fold(out.protos, out.mass, out.valid, chunk_out)
-        epoch = len(maps)  # after the fold — see the raw path above
-        chunk_assign.append(np.array(out.assignment))  # true host copy
-        chunk_offset.append(off)
-        chunk_epoch.append(epoch)
-        chunk_counts.append(n_valid)
-
-    consume(*first, 0)
-    for chunk_idx, item in enumerate(it, start=1):
-        consume(*_normalize_chunk(item), chunk_idx)
-    if frontier == 0:
-        raise ValueError(
-            "ihtc_streaming: the stream contained no valid rows (every "
-            "chunk was empty or fully masked) — nothing to cluster")
-
-    # ---- finalize: levels 1..m-1 on the occupied reservoir prefix --------
-    buf_x = res_x[:frontier]
-    buf_m = res_m[:frontier]
-    buf_v = res_v[:frontier]
-    sizes = level_sizes(frontier, t, m - 1) if m > 1 else [frontier]
-    for level in range(m - 1):
-        n_valid = int(jnp.sum(buf_v))
-        if n_valid < max(min_points, 2 * t):
-            break
-        key_chain, sub = jax.random.split(key_chain)
-        out = itis_step(
-            buf_x, buf_m, buf_v, t, key=sub, weighted=weighted, impl=impl,
-            knn_block=knn_block, n_out=sizes[level + 1], n_blocks=n_blocks)
-        maps.append(np.array(out.assignment))  # true host copy, not a zero-copy view
-        buf_x, buf_m, buf_v = out.protos, out.mass, out.valid
-
-    fn = resolve_backend(backend)
-    w = buf_m if use_mass_in_backend else None
-    proto_labels = fn(buf_x, valid=buf_v, weights=w, key=key_backend,
-                      impl=impl, **backend_kwargs)
-    proto_labels = jnp.where(buf_v, proto_labels, -1).astype(jnp.int32)
-
-    return StreamingIHTCResult(
-        protos=buf_x,
-        proto_mass=buf_m,
-        proto_valid=buf_v,
-        proto_labels=proto_labels,
-        n_prototypes=jnp.sum(buf_v).astype(jnp.int32),
-        chunk_n=chunk_n,
-        chunk_assign=chunk_assign,
-        chunk_offset=chunk_offset,
-        chunk_epoch=chunk_epoch,
-        chunk_counts=chunk_counts,
-        maps=maps,
-        n_cascades=n_cascades,
+    return fit(
+        chunks, t, m, backend, executor="streaming",
+        chunk_n=chunk_n, reservoir_n=reservoir_n, weighted=weighted,
+        use_mass_in_backend=use_mass_in_backend, key=key, impl=impl,
+        knn_block=knn_block, n_blocks=n_blocks, min_points=min_points,
+        driver="ihtc_streaming", **backend_kwargs,
     )

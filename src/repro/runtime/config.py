@@ -32,6 +32,11 @@ from typing import Any, Iterator, Mapping, Optional
 
 _IMPLS = ("auto", "pallas", "ref")
 
+# "auto" + the names of the built-in fit executors (repro.core.plan keeps
+# the authoritative registry; this tuple only gates the config field so a
+# typo'd REPRO_EXECUTOR fails at import, not mid-fit)
+_EXECUTORS = ("auto", "memory", "sharded", "streaming", "streaming_sharded")
+
 
 @dataclasses.dataclass(frozen=True)
 class RuntimeConfig:
@@ -62,6 +67,12 @@ class RuntimeConfig:
         fit; 0 = auto (at least 4x the per-chunk prototype budget
         ``chunk_n // t``, raised to cover the feasibility bound of
         DESIGN.md §12).
+      executor: fit execution strategy for :func:`repro.fit`
+        (:mod:`repro.core.plan`) — "auto" picks from the input type and the
+        mesh ("memory" | "sharded" for resident arrays, "streaming" |
+        "streaming_sharded" for chunk iterators; a mesh selects the sharded
+        flavour); naming one pins every planned fit to that executor
+        (DESIGN.md §13).
     """
 
     impl: str = "auto"
@@ -75,6 +86,7 @@ class RuntimeConfig:
     axis_name: str = "data"
     chunk_n: int = 0
     reservoir_n: int = 0
+    executor: str = "auto"
 
     def __post_init__(self) -> None:
         if self.impl not in _IMPLS:
@@ -88,6 +100,9 @@ class RuntimeConfig:
         if self.precision not in ("float32", "bfloat16"):
             raise ValueError(f"precision must be 'float32' or 'bfloat16', "
                              f"got {self.precision!r}")
+        if self.executor not in _EXECUTORS:
+            raise ValueError(
+                f"executor must be one of {_EXECUTORS}, got {self.executor!r}")
 
     def replace(self, **overrides: Any) -> "RuntimeConfig":
         return dataclasses.replace(self, **overrides)
@@ -100,13 +115,17 @@ class RuntimeConfig:
         no-stale-cache contract, extended to fields the outer jit does not
         itself resolve (``interpret``, Pallas tile sizes, ...). ``chunk_n``
         and ``reservoir_n`` participate because the streaming drivers derive
-        static buffer shapes from them. ``mesh`` / ``axis_name`` /
-        ``precision`` are excluded: they are only consulted at the
-        host-driver level and resolved into explicit statics, so including
-        them would just force spurious recompiles.
+        static buffer shapes from them, and ``executor`` because the fit
+        planner (:mod:`repro.core.plan`) derives buffer placement and level
+        shapes from the chosen executor — a plan change must retrace, never
+        hit a program compiled for another executor's buffers. ``mesh`` /
+        ``axis_name`` / ``precision`` are excluded: they are only consulted
+        at the host-driver level and resolved into explicit statics, so
+        including them would just force spurious recompiles.
         """
         return (self.impl, self.interpret, self.knn_block, self.block_q,
-                self.block_k, self.n_blocks, self.chunk_n, self.reservoir_n)
+                self.block_k, self.n_blocks, self.chunk_n, self.reservoir_n,
+                self.executor)
 
 
 def _parse_bool(s: str) -> bool:
@@ -125,6 +144,7 @@ _ENV_FIELDS = {
     "REPRO_AXIS_NAME": ("axis_name", str),
     "REPRO_CHUNK_N": ("chunk_n", int),
     "REPRO_RESERVOIR_N": ("reservoir_n", int),
+    "REPRO_EXECUTOR": ("executor", str),
 }
 
 

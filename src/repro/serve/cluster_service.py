@@ -52,6 +52,14 @@ class ClusterService:
             **{f"bucket_{b}": 0 for b in self.buckets},
         }
 
+    @classmethod
+    def from_fit(cls, result, **service_kwargs) -> "ClusterService":
+        """Stand a service up straight from any fitted
+        :class:`repro.core.plan.FitResult` — every executor (in-memory,
+        sharded, streaming, composed) returns the same canonical artifact,
+        so the serving path is one line from any fit."""
+        return cls(result.to_index(), **service_kwargs)
+
     def _bucket_for(self, n: int) -> int:
         for b in self.buckets:
             if n <= b:

@@ -260,3 +260,101 @@ assert lab[v].min() >= 0 and (lab[~v] == -1).all()
 print("STREAM-INGEST-OK")
 """)
     assert "STREAM-INGEST-OK" in out
+
+
+def test_fit_executor_matrix_bit_identical():
+    """The planner's equivalence contract (DESIGN.md §13): on an aligned
+    config — one chunk-aligned level-0 buffer, a non-overflowing reservoir,
+    every level size dividing the 8-way shard multiple — all four executors
+    (memory / sharded / streaming / streaming_sharded) produce bit-identical
+    labels, prototypes and masses through one repro.fit() entry point."""
+    out = _run("""
+import repro
+from repro.core import make_data_mesh
+
+rng = np.random.default_rng(0)
+mus = np.array([[1, 2], [7, 8], [3, 5]], float)
+sds = np.array([[1, 0.5], [2, 1], [3, 4]], float) ** 0.5
+comp = rng.choice(3, size=512, p=[0.5, 0.3, 0.2])
+x_np = (mus[comp] + rng.normal(size=(512, 2)) * sds[comp]).astype(np.float32)
+x = jnp.asarray(x_np)
+mesh = make_data_mesh()
+key = jax.random.PRNGKey(7)
+
+r_mem = repro.fit(x, 2, 2, "kmeans", k=3, key=key, executor="memory")
+r_sh = repro.fit(x, 2, 2, "kmeans", k=3, key=key, executor="sharded",
+                 mesh=mesh)
+r_st = repro.fit(iter([x_np]), 2, 2, "kmeans", k=3, key=key,
+                 executor="streaming", chunk_n=512, reservoir_n=1024)
+r_co = repro.fit(iter([x_np]), 2, 2, "kmeans", k=3, key=key,
+                 executor="streaming_sharded", chunk_n=512,
+                 reservoir_n=1024, mesh=mesh)
+assert [r.executor for r in (r_mem, r_sh, r_st, r_co)] == [
+    "memory", "sharded", "streaming", "streaming_sharded"]
+
+want = np.asarray(r_mem.labels)
+assert want.min() >= 0
+assert np.array_equal(want, np.asarray(r_sh.labels))
+assert np.array_equal(want, r_st.labels_for(0))
+assert np.array_equal(want, r_co.labels_for(0))
+pm = np.asarray(r_mem.protos).view(np.uint32)
+mm = np.asarray(r_mem.proto_mass).view(np.uint32)
+for r in (r_sh, r_st, r_co):
+    assert np.array_equal(pm, np.asarray(r.protos).view(np.uint32))
+    assert np.array_equal(mm, np.asarray(r.proto_mass).view(np.uint32))
+    assert int(r.n_prototypes) == int(r_mem.n_prototypes)
+
+# the frozen artifact serves identically from every executor's result
+q = x[:100]
+want_q = np.asarray(r_mem.to_index().assign(q))
+for r in (r_sh, r_st, r_co):
+    assert np.array_equal(want_q, np.asarray(r.to_index().assign(q)))
+print("FIT-MATRIX-OK")
+""")
+    assert "FIT-MATRIX-OK" in out
+
+
+def test_composed_executor_multichunk_invariants():
+    """The composed streaming+sharded path under real cascade pressure:
+    host chunks reduced by sharded level steps into a bounded mesh-sharded
+    reservoir must hold coverage, mass conservation, the (t*)^m size
+    guarantee and GMM accuracy — and a configured mesh must select it
+    automatically for chunk-stream inputs."""
+    out = _run("""
+import repro
+from repro import runtime
+from repro.core import make_data_mesh
+from repro.cluster.metrics import clustering_accuracy
+
+rng = np.random.default_rng(0)
+mus = np.array([[1, 2], [7, 8], [3, 5]], float)
+sds = np.array([[1, 0.5], [2, 1], [3, 4]], float) ** 0.5
+n, chunk, t, m = 4096, 512, 2, 2
+comp = rng.choice(3, size=n, p=[0.5, 0.3, 0.2])
+x = (mus[comp] + rng.normal(size=(n, 2)) * sds[comp]).astype(np.float32)
+chunks = [x[lo:lo + chunk] for lo in range(0, n, chunk)]
+
+with runtime.configure(mesh=make_data_mesh()):
+    res = repro.fit(iter(chunks), t, m, "kmeans", k=3, chunk_n=chunk,
+                    reservoir_n=640, key=jax.random.PRNGKey(0))
+assert res.executor == "streaming_sharded"
+assert res.n_chunks == n // chunk
+assert res.n_cascades >= 1  # the bounded reservoir actually cascaded
+lab = res.labels()
+assert lab.shape == (n,)
+assert lab.min() >= 0
+mass = np.asarray(res.proto_mass)[np.asarray(res.proto_valid)]
+assert abs(mass.sum() - n) < 1e-2
+sizes = np.bincount(lab)
+assert sizes[sizes > 0].min() >= t ** m
+assert clustering_accuracy(comp, lab, 3) > 0.85
+# ragged tail + (chunk, n_valid) pair + empty chunk through the same path
+pairs = [(x[:256], 256), x[256:512], np.zeros((0, 2), np.float32),
+         x[512:700]]
+res2 = repro.fit(iter(pairs), 2, 2, "kmeans", k=3, chunk_n=256,
+                 mesh=make_data_mesh(), key=jax.random.PRNGKey(2))
+assert [len(l) for l in res2.iter_labels()] == [256, 256, 0, 188]
+assert res2.labels().min() >= 0
+print("COMPOSED-INVARIANTS-OK")
+""")
+    assert "COMPOSED-INVARIANTS-OK" in out

@@ -1,0 +1,244 @@
+"""The fit planner/executor architecture (DESIGN.md §13): repro.fit
+dispatch, the canonical FitResult, the executor registry, deprecation
+aliases, and the knn_block sharded-dispatch regression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import gmm_sample
+import repro
+from repro import runtime
+from repro.core import ClusterIndex, ihtc, ihtc_streaming, make_data_mesh
+from repro.core.ihtc import IHTCResult
+from repro.core.plan import (
+    FitResult,
+    available_executors,
+    plan_fit,
+    register_executor,
+)
+from repro.core.streaming import StreamingIHTCResult
+from repro.serve.cluster_service import ClusterService
+
+
+# ----------------------------------------------------------- entry point
+
+
+def test_fit_memory_matches_ihtc_bitwise(rng):
+    """repro.fit on a resident array is the old ihtc() exactly."""
+    x = jnp.asarray(gmm_sample(512, rng)[0])
+    key = jax.random.PRNGKey(7)
+    want = ihtc(x, 2, 2, "kmeans", k=3, key=key)
+    got = repro.fit(x, 2, 2, "kmeans", k=3, key=key)
+    assert got.executor == "memory"
+    np.testing.assert_array_equal(np.asarray(want.labels),
+                                  np.asarray(got.labels))
+    np.testing.assert_array_equal(
+        np.asarray(want.protos).view(np.uint32),
+        np.asarray(got.protos).view(np.uint32))
+
+
+def test_fit_streaming_matches_ihtc_streaming_bitwise(rng):
+    """repro.fit on a chunk stream is the old ihtc_streaming() exactly —
+    and, on the aligned single-buffer config, the memory executor too."""
+    x, _ = gmm_sample(512, rng)
+    key = jax.random.PRNGKey(7)
+    mem = repro.fit(jnp.asarray(x), 2, 2, "kmeans", k=3, key=key)
+    old = ihtc_streaming(iter([x]), 2, 2, "kmeans", k=3, key=key,
+                         chunk_n=512, reservoir_n=1024)
+    new = repro.fit(iter([x]), 2, 2, "kmeans", k=3, key=key,
+                    chunk_n=512, reservoir_n=1024)
+    assert new.executor == "streaming"
+    np.testing.assert_array_equal(old.labels_for(0), new.labels_for(0))
+    np.testing.assert_array_equal(new.labels_for(0),
+                                  np.asarray(mem.labels))
+    np.testing.assert_array_equal(
+        np.asarray(new.protos).view(np.uint32),
+        np.asarray(mem.protos).view(np.uint32))
+
+
+def test_executor_auto_selection(rng):
+    """Planner rule: chunk stream → streaming, mesh → sharded, both → the
+    composed path; explicit executor= and the config both pin."""
+    x, _ = gmm_sample(64, rng)
+    xj = jnp.asarray(x)
+    mesh = make_data_mesh()
+    assert plan_fit(xj, 2, 1).executor == "memory"
+    assert plan_fit(iter([x]), 2, 1).executor == "streaming"
+    assert plan_fit(xj, 2, 1, mesh=mesh).executor == "sharded"
+    assert plan_fit(iter([x]), 2, 1, mesh=mesh).executor == "streaming_sharded"
+    with runtime.configure(mesh=mesh):
+        assert plan_fit(xj, 2, 1).executor == "sharded"
+        assert plan_fit(iter([x]), 2, 1).executor == "streaming_sharded"
+    with runtime.configure(executor="memory"):
+        assert plan_fit(xj, 2, 1, mesh=mesh).executor == "memory"
+    assert plan_fit(xj, 2, 1, mesh=mesh,
+                    executor="memory").executor == "memory"
+
+
+def test_executor_input_type_mismatch_rejected(rng):
+    x, _ = gmm_sample(64, rng)
+    with pytest.raises(ValueError, match="iterable of host chunks"):
+        repro.fit(jnp.asarray(x), 2, 1, executor="streaming")
+    with pytest.raises(ValueError, match="chunk stream"):
+        repro.fit(iter([x]), 2, 1, executor="memory")
+
+
+def test_unknown_executor_rejected(rng):
+    x, _ = gmm_sample(64, rng)
+    with pytest.raises(ValueError, match="unknown executor"):
+        repro.fit(jnp.asarray(x), 2, 1, executor="warp_drive")
+    with pytest.raises(ValueError, match="executor must be"):
+        runtime.RuntimeConfig(executor="warp_drive")
+
+
+def test_register_executor_duplicate_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+        register_executor("memory")(lambda plan, data: None)
+    assert set(available_executors()) >= {
+        "memory", "sharded", "streaming", "streaming_sharded"}
+
+
+# ------------------------------------------------- knn_block regression
+
+
+def test_knn_block_rejected_on_sharded_dispatch(rng):
+    """Regression: ihtc() used to silently DROP an explicit knn_block when
+    a mesh dispatched it to the sharded path (ring_knn has no blocked
+    scan). The planner now rejects it loudly, on every sharded executor."""
+    x, _ = gmm_sample(64, rng)
+    xj = jnp.asarray(x)
+    mesh = make_data_mesh()
+    with pytest.raises(ValueError, match="knn_block"):
+        ihtc(xj, 2, 1, "kmeans", k=2, mesh=mesh, knn_block=256)
+    with pytest.raises(ValueError, match="knn_block"):
+        plan_fit(xj, 2, 1, executor="sharded", mesh=mesh, knn_block=128)
+    with pytest.raises(ValueError, match="knn_block"):
+        plan_fit(iter([x]), 2, 1, executor="streaming_sharded", mesh=mesh,
+                 knn_block=128)
+    # explicit 0 ("auto") and a *configured* knn_block are not errors — the
+    # config value simply does not apply to the ring path
+    assert plan_fit(xj, 2, 1, executor="sharded", mesh=mesh,
+                    knn_block=0).executor == "sharded"
+    with runtime.configure(knn_block=64):
+        res = ihtc(xj, 2, 1, "kmeans", k=2, mesh=mesh,
+                   key=jax.random.PRNGKey(0))
+    assert np.asarray(res.labels).shape == (64,)
+    # ...and the memory executor still honours it (no behaviour change)
+    want = ihtc(xj, 2, 1, "kmeans", k=2, key=jax.random.PRNGKey(0),
+                knn_block=16)
+    assert np.asarray(want.labels).shape == (64,)
+
+
+def test_weights_and_valid_rejected_where_unsupported(rng):
+    """Silently dropping a weight vector or validity mask would corrupt
+    the fit; executors that cannot honour them must reject loudly."""
+    x, _ = gmm_sample(64, rng)
+    xj = jnp.asarray(x)
+    w = jnp.full((64,), 5.0)
+    mask = jnp.arange(64) < 32
+    with pytest.raises(ValueError, match="weights"):
+        repro.fit(iter([x]), 2, 1, weights=w)
+    with pytest.raises(ValueError, match="valid"):
+        repro.fit(xj, 2, 1, valid=mask)  # memory executor: itis has no mask
+    with pytest.raises(ValueError, match="valid"):
+        repro.fit(iter([x]), 2, 1, valid=mask)
+    # the executors that do support them still accept them
+    res = repro.fit(xj, 2, 1, "kmeans", k=2, weights=w,
+                    key=jax.random.PRNGKey(0))
+    mass = np.asarray(res.proto_mass)[np.asarray(res.proto_valid)]
+    assert abs(mass.sum() - 64 * 5.0) < 1e-2
+    mesh = make_data_mesh()
+    res = repro.fit(xj, 2, 1, "kmeans", k=2, valid=mask, mesh=mesh,
+                    key=jax.random.PRNGKey(0))
+    lab = np.asarray(res.labels)
+    assert (lab[32:] == -1).all() and lab[:32].min() >= 0
+
+
+# ------------------------------------------------- canonical result type
+
+
+def test_result_deprecation_aliases():
+    assert IHTCResult is FitResult
+    assert StreamingIHTCResult is FitResult
+
+
+def test_fit_result_uniform_api(rng):
+    """One artifact shape for both families: chunk iteration works on
+    in-memory results, array conversion works on streamed results."""
+    x, _ = gmm_sample(300, rng)
+    key = jax.random.PRNGKey(1)
+    mem = repro.fit(jnp.asarray(x), 2, 2, "kmeans", k=3, key=key)
+    stream = repro.fit(iter([x[:150], x[150:]]), 2, 2, "kmeans", k=3,
+                       key=key, chunk_n=150)
+    # in-memory result exposes the stream API degenerately
+    assert mem.n_chunks == 1 and mem.n_total == 300 and mem.n_cascades == 0
+    np.testing.assert_array_equal(mem.labels_for(0), np.asarray(mem.labels))
+    np.testing.assert_array_equal(np.concatenate(list(mem.iter_labels())),
+                                  np.asarray(mem.labels))
+    with pytest.raises(IndexError):
+        mem.labels_for(1)
+    # streamed result exposes the array API lazily
+    assert stream.n_chunks == 2 and stream.n_total == 300
+    np.testing.assert_array_equal(np.asarray(stream.labels),
+                                  stream.labels())
+    np.testing.assert_array_equal(
+        stream.labels(), np.concatenate(list(stream.iter_labels())))
+    # both freeze into the same servable index type
+    q = jnp.asarray(gmm_sample(32, rng)[0])
+    assert mem.to_index().assign(q).shape == (32,)
+    assert stream.to_index().assign(q).shape == (32,)
+
+
+def test_cluster_service_from_fit(rng):
+    """ClusterService consumes any FitResult uniformly."""
+    x, _ = gmm_sample(256, rng)
+    key = jax.random.PRNGKey(2)
+    mem = repro.fit(jnp.asarray(x), 2, 2, "kmeans", k=3, key=key)
+    stream = repro.fit(iter([x]), 2, 2, "kmeans", k=3, key=key,
+                       chunk_n=256, reservoir_n=512)
+    svc_m = ClusterService.from_fit(mem, buckets=(32, 128))
+    svc_s = ClusterService.from_fit(stream, buckets=(32, 128))
+    q = jnp.asarray(gmm_sample(100, rng)[0])
+    np.testing.assert_array_equal(np.asarray(svc_m.assign(q)),
+                                  np.asarray(svc_s.assign(q)))
+    assert svc_m.stats["requests"] == 1
+
+
+def test_cluster_index_fit_takes_chunk_streams(rng):
+    """ClusterIndex.fit now routes through the planner: a chunk iterable
+    streams instead of erroring, and matches fit_streaming."""
+    x, _ = gmm_sample(256, rng)
+    key = jax.random.PRNGKey(3)
+    via_fit = ClusterIndex.fit(iter([x]), 2, 2, "kmeans", k=3, key=key,
+                               chunk_n=256, reservoir_n=512)
+    via_streaming = ClusterIndex.fit_streaming(
+        iter([x]), 2, 2, "kmeans", k=3, key=key, chunk_n=256,
+        reservoir_n=512)
+    np.testing.assert_array_equal(
+        np.asarray(via_fit.protos).view(np.uint32),
+        np.asarray(via_streaming.protos).view(np.uint32))
+    np.testing.assert_array_equal(np.asarray(via_fit.proto_labels),
+                                  np.asarray(via_streaming.proto_labels))
+
+
+# ------------------------------------------------------------- dispatch
+
+
+def test_dispatch_key_contains_executor():
+    """Plan changes must retrace instead of hitting stale jit caches."""
+    base = runtime.RuntimeConfig()
+    pinned = runtime.RuntimeConfig(executor="streaming")
+    assert base.dispatch_key() != pinned.dispatch_key()
+    cfg = runtime.config_from_env({"REPRO_EXECUTOR": "sharded"})
+    assert cfg.executor == "sharded"
+
+
+def test_backend_kwargs_flow_through_fit(rng):
+    """Unknown fit() keywords reach the backend clusterer."""
+    x = jnp.asarray(gmm_sample(200, rng)[0])
+    res = repro.fit(x, 2, 1, "hac", k=3, linkage="ward",
+                    key=jax.random.PRNGKey(0))
+    lab = np.asarray(res.labels)
+    assert lab.shape == (200,) and lab.min() >= 0
+    assert len(np.unique(lab)) <= 3
