@@ -1,0 +1,377 @@
+"""Noise-aware perf-regression gate over the committed ``BENCH_*.json``
+baselines.
+
+The benchmark trajectories used to be write-only: a PR could halve a
+kernel's throughput and nothing would fail. This gate closes the loop —
+it re-runs any harness from ``run.py``'s registry, compares the fresh
+artifact row-by-row against the committed baseline, and exits nonzero on
+a regression beyond per-metric tolerance.
+
+Noise treatment (docs/BENCHMARKS.md "The perf gate"):
+
+  * rows are matched on their identity fields (``n``, ``executor``,
+    ``devices``, ``batch``, ``dataset``, ``t``, ``m``), never on position,
+    so reordered or added sweep points don't misalign;
+  * every metric has a direction and a *relative* tolerance
+    (``METRIC_RULES``): time/memory regress upward, throughput regresses
+    downward. ``--tol metric=x`` / ``--default-tol`` override;
+  * baselines below a per-family absolute noise floor are skipped —
+    a 3 ms cell doubling to 6 ms on a shared CI runner is scheduler
+    noise, not a regression;
+  * ``--repeats R`` runs the harness R times and gates on the per-cell
+    **median**, the same discipline ``repro.tune`` applies.
+
+Modes:
+
+  ``--bench a[,b]``       run registered harness(es), gate, restore the
+                          baseline file (working tree left clean)
+  ``--update-baselines``  accept the fresh (median) artifact as the new
+                          committed baseline instead of gating
+  ``--baseline X --fresh Y``  compare two recorded artifacts, no run
+  ``--self-test``         verify the gate machinery catches an injected
+                          2x slowdown (and passes on identical artifacts)
+  ``--keep-fresh DIR``    also write the fresh artifacts to DIR (CI
+                          uploads them as workflow artifacts)
+
+``run.py --bench <names> --gate`` forwards here, so one command runs a
+registered bench and gates it.
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import os
+import statistics
+import sys
+from typing import Dict, List, Optional, Tuple
+
+# direct-run support: repo root for the benchmarks package, src/ for repro
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_REPO, os.path.join(_REPO, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+RESULTS = os.path.join(os.path.dirname(os.path.abspath(__file__)), "results")
+
+#: row-identity fields (whichever exist in a row form its match key)
+KEY_FIELDS = ("n", "executor", "devices", "batch", "dataset", "t", "m")
+
+#: metric -> (direction, default relative tolerance, absolute noise floor)
+#: direction "lower": fresh > base*(1+tol) regresses; "higher": fresh <
+#: base/(1+tol) regresses. Baselines under the floor are skipped outright.
+METRIC_RULES: Dict[str, Tuple[str, float, float]] = {
+    "seconds": ("lower", 0.5, 0.05),
+    "stream_seconds": ("lower", 0.5, 0.05),
+    "inmem_seconds": ("lower", 0.5, 0.05),
+    "ingest_seconds": ("lower", 0.5, 0.05),
+    "ms": ("lower", 0.5, 5.0),
+    "points_per_sec": ("higher", 0.5, 0.0),
+    "stream_points_per_sec": ("higher", 0.5, 0.0),
+    "peak_mb": ("lower", 0.25, 0.01),
+    "stream_peak_mb": ("lower", 0.25, 0.01),
+    "inmem_peak_mb": ("lower", 0.25, 0.01),
+}
+
+
+def row_key(row: dict) -> tuple:
+    return tuple((f, row[f]) for f in KEY_FIELDS if f in row)
+
+
+def _fmt_key(key: tuple) -> str:
+    return " ".join(f"{f}={v}" for f, v in key) or "<single row>"
+
+
+def median_artifact(artifacts: List[dict]) -> dict:
+    """Merge repeated runs of one harness: per-cell per-metric median of
+    every numeric gated metric (non-gated fields come from the last run,
+    which also defines the row set)."""
+    if len(artifacts) == 1:
+        return artifacts[0]
+    out = copy.deepcopy(artifacts[-1])
+    by_key = [{row_key(r): r for r in a.get("rows", [])} for a in artifacts]
+    for row in out.get("rows", []):
+        key = row_key(row)
+        for metric in METRIC_RULES:
+            vals = [m[key][metric] for m in by_key
+                    if key in m and isinstance(m[key].get(metric),
+                                               (int, float))]
+            if vals:
+                row[metric] = statistics.median(vals)
+    return out
+
+
+def compare(
+    baseline: dict,
+    fresh: dict,
+    *,
+    tols: Optional[Dict[str, float]] = None,
+    default_tol: Optional[float] = None,
+) -> dict:
+    """Gate one fresh artifact against its baseline.
+
+    Returns ``{"regressions": [...], "improvements": [...], "checked": N,
+    "unmatched": [...]}``; each finding is a printable dict. The caller
+    decides the exit code.
+    """
+    tols = tols or {}
+    base_rows = {row_key(r): r for r in baseline.get("rows", [])}
+    regressions, improvements, unmatched = [], [], []
+    checked = 0
+    for row in fresh.get("rows", []):
+        key = row_key(row)
+        base = base_rows.get(key)
+        if base is None:
+            unmatched.append(key)
+            continue
+        for metric, (direction, rule_tol, floor) in METRIC_RULES.items():
+            b, f = base.get(metric), row.get(metric)
+            if not isinstance(b, (int, float)) or not isinstance(f,
+                                                                 (int, float)):
+                continue
+            if b <= floor:
+                continue  # below the noise floor: not gateable
+            tol = tols.get(metric, default_tol if default_tol is not None
+                           else rule_tol)
+            checked += 1
+            ratio = f / b
+            finding = {
+                "name": fresh.get("name", baseline.get("name", "?")),
+                "key": key, "metric": metric, "baseline": b, "fresh": f,
+                "ratio": ratio, "tol": tol, "direction": direction,
+            }
+            if direction == "lower":
+                if ratio > 1.0 + tol:
+                    regressions.append(finding)
+                elif ratio < 1.0 / (1.0 + tol):
+                    improvements.append(finding)
+            else:
+                if ratio < 1.0 / (1.0 + tol):
+                    regressions.append(finding)
+                elif ratio > 1.0 + tol:
+                    improvements.append(finding)
+    fresh_keys = {row_key(r) for r in fresh.get("rows", [])}
+    missing = [k for k in base_rows if k not in fresh_keys]
+    return {"regressions": regressions, "improvements": improvements,
+            "checked": checked, "unmatched": unmatched, "missing": missing}
+
+
+def print_report(report: dict, *, verbose_improvements: bool = True) -> None:
+    for f in report["regressions"]:
+        print(f"REGRESSION {f['name']} [{_fmt_key(f['key'])}] {f['metric']}: "
+              f"{f['baseline']:g} -> {f['fresh']:g} "
+              f"({f['ratio']:.2f}x, tol {1 + f['tol']:.2f}x "
+              f"{'slower' if f['direction'] == 'lower' else 'lower'})")
+    if verbose_improvements:
+        for f in report["improvements"]:
+            print(f"# improvement {f['name']} [{_fmt_key(f['key'])}] "
+                  f"{f['metric']}: {f['baseline']:g} -> {f['fresh']:g} "
+                  f"({f['ratio']:.2f}x)")
+    for key in report["unmatched"]:
+        print(f"# note: fresh row [{_fmt_key(key)}] has no baseline row "
+              f"(new sweep point?)")
+    for key in report.get("missing", []):
+        print(f"# note: baseline row [{_fmt_key(key)}] missing from the "
+              f"fresh run (fewer devices / executors here?) — not gated")
+    print(f"# gate: {report['checked']} metric cells checked, "
+          f"{len(report['regressions'])} regressions, "
+          f"{len(report['improvements'])} improvements")
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def gate_bench(
+    name: str,
+    *,
+    full: bool = False,
+    max_n: int = 1_000_000,
+    repeats: int = 1,
+    tols: Optional[Dict[str, float]] = None,
+    default_tol: Optional[float] = None,
+    update_baselines: bool = False,
+    keep_fresh: Optional[str] = None,
+    baseline_path: Optional[str] = None,
+) -> int:
+    """Run one registered harness ``repeats`` times, gate the per-cell
+    median against the committed baseline, restore the baseline file
+    (unless ``--update-baselines``). Returns the exit code."""
+    import importlib
+
+    from benchmarks.run import discover_benches
+
+    specs = discover_benches()
+    if name not in specs:
+        print(f"unknown bench {name!r}; have {sorted(specs)}",
+              file=sys.stderr)
+        return 2
+    spec = specs[name]
+    if not spec.get("artifact"):
+        print(f"bench {name!r} records no artifact; nothing to gate",
+              file=sys.stderr)
+        return 2
+    artifact_path = os.path.join(RESULTS, spec["artifact"])
+    baseline_file = baseline_path or artifact_path
+    if not os.path.exists(baseline_file):
+        print(f"no baseline at {baseline_file}; run the bench and commit "
+              f"its artifact first (or pass --update-baselines)",
+              file=sys.stderr)
+        if not update_baselines:
+            return 2
+    baseline_bytes = (open(baseline_file, "rb").read()
+                      if os.path.exists(baseline_file) else None)
+    # snapshot of the artifact file itself for the restore — distinct from
+    # baseline_bytes when --baseline points at a different file
+    artifact_bytes = (open(artifact_path, "rb").read()
+                      if os.path.exists(artifact_path) else None)
+
+    mod = importlib.import_module(spec["module_name"])
+    bench = getattr(mod, "BENCH", {})
+    kwargs = bench.get("full") if full else bench.get("quick", {})
+    if callable(kwargs):
+        kwargs = kwargs(max_n)
+    kwargs = kwargs or {}  # a bench may register only one of quick/full
+    runs = []
+    try:
+        for r in range(max(repeats, 1)):
+            print(f"# gate run {r + 1}/{repeats}: {spec['module_name']}"
+                  f".run({', '.join(f'{k}={v!r}' for k, v in kwargs.items())})")
+            mod.run(**(kwargs or {}))
+            runs.append(_load(artifact_path))
+        fresh = median_artifact(runs)
+        if keep_fresh:
+            os.makedirs(keep_fresh, exist_ok=True)
+            with open(os.path.join(keep_fresh, spec["artifact"]), "w") as f:
+                json.dump(fresh, f, indent=1)
+        if update_baselines:
+            with open(artifact_path, "w") as f:
+                json.dump(fresh, f, indent=1)
+            print(f"# baseline updated: {os.path.relpath(artifact_path, _REPO)}")
+            return 0
+        report = compare(json.loads(baseline_bytes), fresh, tols=tols,
+                         default_tol=default_tol)
+        print_report(report)
+        return 1 if report["regressions"] else 0
+    finally:
+        # leave the working tree exactly as committed unless updating
+        if artifact_bytes is not None and not update_baselines:
+            with open(artifact_path, "wb") as f:
+                f.write(artifact_bytes)
+
+
+def self_test() -> int:
+    """Prove the gate machinery works: identical artifacts must pass, an
+    injected 2x slowdown (+ halved throughput) must be flagged."""
+    candidates = sorted(
+        p for p in (os.path.join(RESULTS, f) for f in os.listdir(RESULTS)
+                    if f.startswith("BENCH_") and f.endswith(".json"))
+        if os.path.isfile(p)) if os.path.isdir(RESULTS) else []
+    if not candidates:
+        print("self-test: no BENCH_*.json artifacts to test against",
+              file=sys.stderr)
+        return 2
+    failures = 0
+    for path in candidates:
+        baseline = _load(path)
+        clean = compare(baseline, baseline)
+        slowed = inject_slowdown(baseline, factor=2.0)
+        flagged = compare(baseline, slowed)
+        gated_cells = clean["checked"]
+        ok = (not clean["regressions"]
+              and (gated_cells == 0 or flagged["regressions"]))
+        status = "ok" if ok else "FAIL"
+        print(f"# self-test {os.path.basename(path)}: identical -> "
+              f"{len(clean['regressions'])} regressions, 2x-slowed -> "
+              f"{len(flagged['regressions'])} regressions "
+              f"({gated_cells} cells) {status}")
+        failures += 0 if ok else 1
+    return 1 if failures else 0
+
+
+def inject_slowdown(artifact: dict, factor: float = 2.0) -> dict:
+    """Copy of ``artifact`` with every gated metric degraded by
+    ``factor`` (times/memory multiplied, throughput divided) — the
+    synthetic regression the self-test feeds the comparator."""
+    out = copy.deepcopy(artifact)
+    for row in out.get("rows", []):
+        for metric, (direction, _, _) in METRIC_RULES.items():
+            v = row.get(metric)
+            if isinstance(v, (int, float)):
+                row[metric] = v * factor if direction == "lower" else v / factor
+    return out
+
+
+def _parse_tols(pairs: List[str]) -> Dict[str, float]:
+    tols = {}
+    for p in pairs:
+        if "=" not in p:
+            raise SystemExit(f"--tol wants metric=value, got {p!r}")
+        k, v = p.split("=", 1)
+        if k not in METRIC_RULES:
+            raise SystemExit(
+                f"--tol: unknown metric {k!r}; gated metrics: "
+                f"{sorted(METRIC_RULES)}")
+        tols[k] = float(v)
+    return tols
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="perf-regression gate over committed BENCH_*.json "
+                    "baselines (see docs/BENCHMARKS.md)")
+    ap.add_argument("--bench", default="",
+                    help="comma list of registered harnesses to run + gate")
+    ap.add_argument("--full", action="store_true",
+                    help="gate the full-mode sweep (default: quick)")
+    ap.add_argument("--max-n", type=int, default=1_000_000)
+    ap.add_argument("--repeats", type=int, default=1,
+                    help="runs per harness; the gate sees per-cell medians")
+    ap.add_argument("--tol", action="append", default=[],
+                    metavar="METRIC=X",
+                    help="per-metric relative tolerance override")
+    ap.add_argument("--default-tol", type=float, default=None,
+                    help="one tolerance for every metric (e.g. 1.0 = only "
+                         ">2x fails — the CI quick-mode setting)")
+    ap.add_argument("--update-baselines", action="store_true",
+                    help="accept the fresh run as the new baseline")
+    ap.add_argument("--keep-fresh", default="",
+                    help="also write fresh artifacts to this directory")
+    ap.add_argument("--baseline", default="",
+                    help="baseline artifact file (with --fresh: compare "
+                         "two files, run nothing)")
+    ap.add_argument("--fresh", default="",
+                    help="fresh artifact file to compare against --baseline")
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the gate catches an injected 2x slowdown")
+    args = ap.parse_args(argv)
+    tols = _parse_tols(args.tol)
+
+    if args.self_test:
+        return self_test()
+
+    if args.fresh or (args.baseline and not args.bench):
+        if not (args.baseline and args.fresh):
+            ap.error("file-compare mode needs both --baseline and --fresh")
+        report = compare(_load(args.baseline), _load(args.fresh), tols=tols,
+                         default_tol=args.default_tol)
+        print_report(report)
+        return 1 if report["regressions"] else 0
+
+    if not args.bench:
+        ap.error("nothing to do: pass --bench, --baseline/--fresh, "
+                 "or --self-test")
+    rc = 0
+    for name in [n.strip() for n in args.bench.split(",") if n.strip()]:
+        rc = max(rc, gate_bench(
+            name, full=args.full, max_n=args.max_n, repeats=args.repeats,
+            tols=tols, default_tol=args.default_tol,
+            update_baselines=args.update_baselines,
+            keep_fresh=args.keep_fresh or None,
+            baseline_path=args.baseline or None))
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,7 +15,9 @@ dict joins the registry with zero edits here::
 
 ``--bench a,b`` runs the named harnesses after the core table suite;
 ``--bench all`` runs every discovered one; ``--list-benches`` prints the
-registry. (This replaces the old hand-added ``--serve`` / ``--streaming``
+registry; ``--bench a,b --gate`` runs them through the perf-regression
+gate (benchmarks/gate.py) against the committed ``BENCH_*.json``
+baselines instead — one command to run a registered bench and gate it. (This replaces the old hand-added ``--serve`` / ``--streaming``
 / ``--distributed`` flags — new executors get benchmarked by dropping in a
 module, not by touching this driver.)
 
@@ -193,6 +195,17 @@ def main() -> None:
     ap.add_argument("--bench", type=str, default="",
                     help="comma list of registered harnesses to run after "
                          "the core suite (or 'all'); see --list-benches")
+    ap.add_argument("--gate", action="store_true",
+                    help="run the named --bench harness(es) through the "
+                         "perf-regression gate (benchmarks/gate.py) instead "
+                         "of a plain run; skips the core table suite and "
+                         "exits nonzero on a regression vs the committed "
+                         "BENCH_*.json baselines")
+    ap.add_argument("--gate-repeats", type=int, default=1,
+                    help="with --gate: runs per harness (per-cell medians)")
+    ap.add_argument("--gate-default-tol", type=float, default=None,
+                    help="with --gate: one relative tolerance for every "
+                         "metric (gate.py --default-tol)")
     ap.add_argument("--list-benches", action="store_true",
                     help="print the discovered bench registry and exit")
     ap.add_argument("--summary-only", action="store_true",
@@ -210,6 +223,22 @@ def main() -> None:
     if args.summary_only:
         _bench_json_summary(specs)
         return
+    if args.gate:
+        if not args.bench:
+            ap.error("--gate needs --bench (which registered harnesses "
+                     "to run and gate)")
+        from benchmarks import gate
+
+        names = (sorted(s for s in specs if specs[s].get("artifact"))
+                 if args.bench.strip() == "all"
+                 else [n.strip() for n in args.bench.split(",") if n.strip()])
+        rc = 0
+        for name in names:
+            rc = max(rc, gate.gate_bench(
+                name, full=args.full, max_n=args.max_n or 1_000_000,
+                repeats=args.gate_repeats,
+                default_tol=args.gate_default_tol))
+        sys.exit(rc)
 
     from benchmarks import (bench_table1_kmeans, bench_table2_hac,
                             bench_table4_datasets, bench_table7_threshold,

@@ -24,8 +24,32 @@ from repro.kernels import ops
 
 # what knn_block == 0 ("auto") means for every blocked-kNN entry point:
 # one-shot below this row count, blocks of this size above (the O(n²) HBM
-# threshold of the one-shot path)
+# threshold of the one-shot path). With the tuning policy active
+# (RuntimeConfig.tune, DESIGN.md §14) the measured winner for this
+# hardware + shape bucket replaces the constant — see resolve_auto_block.
 AUTO_KNN_BLOCK = 8192
+
+
+def resolve_auto_block(n: int, d: int = 0, k: int = 0,
+                       dtype: str = "float32") -> int:
+    """What ``knn_block == 0`` ("auto") resolves to for an (n, d) problem:
+    the tuning cache's measured winner when the policy is active and has
+    one for this bucket, else the hand-picked ``AUTO_KNN_BLOCK``.
+
+    ``dtype`` must be the data's element type so this lookup and
+    ``plan_fit``'s (which freezes the same cell into the FitPlan) key the
+    cache identically — a mismatch would make execution dispatch diverge
+    from the plan. Safe at trace time: callers are jitted drivers whose
+    static ``_dispatch`` key carries the tune mode + cache epoch, so a
+    changed winner always retraces (§10/§14).
+    """
+    if runtime.active().tune != "off":
+        from repro import tune  # lazy: no import cycle through core
+
+        tuned = tune.tuned_params("knn_block", dtype=dtype, n=n, d=d, k=k)
+        if tuned.get("knn_block"):
+            return int(tuned["knn_block"])
+    return AUTO_KNN_BLOCK
 
 
 def _pvary(x: jax.Array, axis_name: str) -> jax.Array:
@@ -93,13 +117,14 @@ def knn_graph_blocked(
 
     Streams key blocks against each query block and keeps a (block, k)
     running best list, so peak memory is O(block² + n·k). ``block`` defaults
-    to the runtime config's ``knn_block`` (``AUTO_KNN_BLOCK`` when that is
-    0 = auto — the same resolution threshold_clustering uses).
+    to the runtime config's ``knn_block`` (``resolve_auto_block`` when that
+    is 0 = auto — the same resolution threshold_clustering uses).
     """
     cfg = runtime.active()
     impl = cfg.impl if impl is None else impl
     if block is None:
-        block = cfg.knn_block or AUTO_KNN_BLOCK
+        block = cfg.knn_block or resolve_auto_block(
+            x.shape[0], x.shape[1], k, dtype=str(x.dtype))
     return _knn_graph_blocked(x, k, valid=valid, block=block, impl=impl,
                               _dispatch=cfg.dispatch_key())
 

@@ -347,6 +347,8 @@ class FitPlan:
     use_mass_in_backend: bool = True
     impl: str = "auto"
     knn_block: int = 0
+    block_q: int = 256
+    block_k: int = 512
     n_blocks: int = 8
     chunk_n: int = 0
     reservoir_n: int = 0
@@ -411,6 +413,8 @@ def plan_fit(
     key: Optional[jax.Array] = None,
     impl: Optional[str] = None,
     knn_block: Optional[int] = None,
+    block_q: Optional[int] = None,
+    block_k: Optional[int] = None,
     n_blocks: Optional[int] = None,
     chunk_n: Optional[int] = None,
     reservoir_n: Optional[int] = None,
@@ -436,8 +440,12 @@ def plan_fit(
     """
     cfg = runtime.active()
     explicit_knn_block = knn_block is not None
+    auto_block_q = block_q is None
+    auto_block_k = block_k is None
     impl = cfg.impl if impl is None else impl
     knn_block = cfg.knn_block if knn_block is None else knn_block
+    block_q = cfg.block_q if block_q is None else block_q
+    block_k = cfg.block_k if block_k is None else block_k
     n_blocks = cfg.n_blocks if n_blocks is None else n_blocks
     chunk_n = cfg.chunk_n if chunk_n is None else chunk_n
     reservoir_n = cfg.reservoir_n if reservoir_n is None else reservoir_n
@@ -497,6 +505,38 @@ def plan_fit(
             f"{executor!r}); slice the array instead, or mask stream "
             f"chunks with (chunk, n_valid) pairs")
 
+    # tuned-dispatch resolution (DESIGN.md §14): with the tuning policy
+    # active, auto knobs resolve through the measured winners for this
+    # hardware + shape bucket and the results are FROZEN into the plan, so
+    # executor dispatch stays deterministic for the plan's lifetime even if
+    # the cache mutates mid-fit. Explicit kwargs and non-auto configured
+    # values still win; tune="off" leaves every constant bit-for-bit.
+    if cfg.tune != "off":
+        from repro import tune  # lazy: no cycle through core
+
+        if streaming_input:
+            if chunk_n == 0:
+                ts = tune.tuned_params("stream")
+                if ts.get("chunk_n"):
+                    chunk_n = int(ts["chunk_n"])
+                if reservoir_n == 0 and ts.get("reservoir_n"):
+                    reservoir_n = int(ts["reservoir_n"])
+        else:
+            n0, d0 = int(data.shape[0]), int(data.shape[1])
+            dt = str(data.dtype) if hasattr(data, "dtype") else "float32"
+            tk = tune.tuned_params("knn", dtype=dt, n=n0, d=d0,
+                                   k=max(t - 1, 1))
+            if auto_block_q and tk.get("block_q"):
+                block_q = int(tk["block_q"])
+            if auto_block_k and tk.get("block_k"):
+                block_k = int(tk["block_k"])
+            if (knn_block == 0 and not explicit_knn_block
+                    and executor not in SHARDED_EXECUTORS):
+                tb = tune.tuned_params("knn_block", dtype=dt, n=n0, d=d0,
+                                       k=max(t - 1, 1))
+                if tb.get("knn_block"):
+                    knn_block = int(tb["knn_block"])
+
     if streaming_input:
         validate_reduction_params(t, m, min_m=1, driver=driver)
         if chunk_n:
@@ -507,7 +547,8 @@ def plan_fit(
     return FitPlan(
         t=int(t), m=int(m), backend=backend, executor=executor, key=key,
         weighted=weighted, use_mass_in_backend=use_mass_in_backend,
-        impl=impl, knn_block=knn_block, n_blocks=n_blocks, chunk_n=chunk_n,
+        impl=impl, knn_block=knn_block, block_q=block_q, block_k=block_k,
+        n_blocks=n_blocks, chunk_n=chunk_n,
         reservoir_n=reservoir_n, mesh=mesh, axis_name=axis_name,
         min_points=min_points, weights=weights, valid=valid, driver=driver,
         backend_kwargs=dict(backend_kwargs),
@@ -553,9 +594,24 @@ def _finalize_backend(plan: FitPlan, red: Reduction) -> jax.Array:
 
 
 def execute_plan(plan: FitPlan, data: Any) -> FitResult:
-    """Run the plan's executor, then the shared epilogue."""
-    red = resolve_executor(plan.executor)(plan, data)
-    proto_labels = _finalize_backend(plan, red)
+    """Run the plan's executor, then the shared epilogue.
+
+    The executor (and the backend epilogue) run under a config scope
+    pinning the plan's resolved ``block_q``/``block_k``, so trace-time
+    kernel-tile reads default to what :func:`plan_fit` froze rather than
+    whatever the ambient config says by the time data starts moving. The
+    tune policy is also clamped to a non-measuring mode (``onthefly`` →
+    ``cached``): the planner may measure, execution never does. Note the
+    precise contract (§14): the plan's own knobs are frozen, while the
+    per-shape ops-level lookups stay live against the cache — epoch-keyed,
+    so deeper ITIS levels keep their finer-grained winners and any cache
+    mutation retraces correctly. With tuning off both pins are no-ops.
+    """
+    exec_tune = "off" if runtime.active().tune == "off" else "cached"
+    with runtime.configure(block_q=plan.block_q, block_k=plan.block_k,
+                           tune=exec_tune):
+        red = resolve_executor(plan.executor)(plan, data)
+        proto_labels = _finalize_backend(plan, red)
     if red.spill is not None:
         return FitResult(
             executor=plan.executor, protos=red.protos, proto_mass=red.mass,

@@ -36,7 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import runtime
-from repro.core.knn import AUTO_KNN_BLOCK, knn_graph, knn_graph_blocked
+from repro.core.knn import knn_graph, knn_graph_blocked, resolve_auto_block
 
 _NEG = jnp.int32(-1)  # priorities are ranks in [0, n); -1 == "-inf"
 
@@ -183,7 +183,10 @@ def _threshold_clustering(
         return TCResult(labels, seed_of, valid, jnp.sum(valid).astype(jnp.int32))
 
     k = t - 1
-    block = knn_block or AUTO_KNN_BLOCK  # auto: avoid O(n²) HBM at scale
+    # auto: avoid O(n²) HBM at scale (tuned winner when the policy is on;
+    # trace-time read, pinned by the _dispatch static above)
+    block = knn_block or resolve_auto_block(n, x.shape[1], k,
+                                            dtype=str(x.dtype))
     if n > block:
         _, idx = knn_graph_blocked(x, k, valid=valid, block=block, impl=impl)
     else:

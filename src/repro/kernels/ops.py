@@ -31,11 +31,26 @@ from . import ref
 from . import segment_sum as _ss
 
 
-def _resolve(impl: Optional[str] = None) -> str:
+from repro.runtime.config import _IMPLS as IMPLS  # single impl registry
+
+
+def _resolve(impl: Optional[str] = None, *, tuned: Optional[str] = None) -> str:
+    """Dispatch policy → concrete impl name, rejecting unknown strings.
+
+    ``tuned`` is the measured winner from the tuning cache (if any): it
+    only decides the ``"auto"`` case — an explicit ``impl=`` kwarg or a
+    configured non-auto policy always wins over the autotuner.
+    """
     if impl is None:
         impl = runtime.active().impl
     if impl == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "ref"
+        impl = tuned or ("pallas" if jax.default_backend() == "tpu"
+                         else "ref")
+    if impl not in ("pallas", "ref"):
+        # an unknown string used to fall through silently to the XLA path —
+        # a typo'd impl="palas" would quietly benchmark the wrong kernel
+        raise ValueError(
+            f"unknown impl {impl!r}; registered impls: {list(IMPLS)}")
     return impl
 
 
@@ -46,6 +61,22 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _tuned(kernel: str, dtype, **dims: int) -> dict:
+    """Measured winners for this call's shape bucket (``{}`` unless the
+    tuning policy is active and has/measures an entry — DESIGN.md §14).
+
+    Called at trace time from inside jitted drivers; sound because every
+    inner jit takes ``dispatch_key()`` as a static argument and the key
+    carries the cache epoch whenever tuning is on, so changed winners
+    always retrace.
+    """
+    if runtime.active().tune == "off":
+        return {}
+    from repro import tune  # lazy: keeps kernels importable without tune
+
+    return tune.tuned_params(kernel, dtype=str(dtype), **dims)
+
+
 def pairwise_sq_l2(
     x: jax.Array,
     y: jax.Array,
@@ -53,8 +84,11 @@ def pairwise_sq_l2(
     y_valid: Optional[jax.Array] = None,
     impl: Optional[str] = None,
 ) -> jax.Array:
-    if _resolve(impl) == "pallas":
-        return _pw.pairwise_sq_l2(x, y, y_valid, interpret=_interpret())
+    tp = _tuned("pairwise_sq_l2", x.dtype,
+                n=x.shape[0], m=y.shape[0], d=x.shape[1])
+    if _resolve(impl, tuned=tp.get("impl")) == "pallas":
+        kw = {a: tp[a] for a in ("block_q", "block_k") if a in tp}
+        return _pw.pairwise_sq_l2(x, y, y_valid, interpret=_interpret(), **kw)
     return ref.pairwise_sq_l2(x, y, y_valid=y_valid)
 
 
@@ -66,9 +100,11 @@ def knn(
     exclude_self: bool = True,
     impl: Optional[str] = None,
 ) -> Tuple[jax.Array, jax.Array]:
-    if _resolve(impl) == "pallas":
+    tp = _tuned("knn", x.dtype, n=x.shape[0], d=x.shape[1], k=k)
+    if _resolve(impl, tuned=tp.get("impl")) == "pallas":
         return _knn.knn_topk(
-            x, k, valid, exclude_self=exclude_self, interpret=_interpret()
+            x, k, valid, exclude_self=exclude_self, interpret=_interpret(),
+            block_q=tp.get("block_q"), block_k=tp.get("block_k"),
         )
     return ref.knn(x, k, valid=valid, exclude_self=exclude_self)
 
@@ -81,9 +117,13 @@ def segment_sum(
     weights: Optional[jax.Array] = None,
     impl: Optional[str] = None,
 ) -> Tuple[jax.Array, jax.Array]:
-    if _resolve(impl) == "pallas":
+    tp = _tuned("segment_sum", x.dtype,
+                n=x.shape[0], d=x.shape[1], s=num_segments)
+    if _resolve(impl, tuned=tp.get("impl")) == "pallas":
+        kw = {a: tp[a] for a in ("block_s", "block_n") if a in tp}
         return _ss.segment_sum(
-            x, segment_ids, num_segments, weights, interpret=_interpret()
+            x, segment_ids, num_segments, weights, interpret=_interpret(),
+            **kw
         )
     return ref.segment_sum(x, segment_ids, num_segments, weights=weights)
 

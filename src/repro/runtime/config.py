@@ -32,6 +32,8 @@ from typing import Any, Iterator, Mapping, Optional
 
 _IMPLS = ("auto", "pallas", "ref")
 
+_TUNE_MODES = ("off", "cached", "onthefly")
+
 # "auto" + the names of the built-in fit executors (repro.core.plan keeps
 # the authoritative registry; this tuple only gates the config field so a
 # typo'd REPRO_EXECUTOR fails at import, not mid-fit)
@@ -73,6 +75,10 @@ class RuntimeConfig:
         "streaming_sharded" for chunk iterators; a mesh selects the sharded
         flavour); naming one pins every planned fit to that executor
         (DESIGN.md §13).
+      tune: empirical-autotuning policy (:mod:`repro.tune`, DESIGN.md §14)
+        — "off" (default: every dispatch constant exactly as hand-picked),
+        "cached" (consult the persistent tuning cache, fall back to the
+        constants on a miss), "onthefly" (measure + persist on a miss).
     """
 
     impl: str = "auto"
@@ -87,6 +93,7 @@ class RuntimeConfig:
     chunk_n: int = 0
     reservoir_n: int = 0
     executor: str = "auto"
+    tune: str = "off"
 
     def __post_init__(self) -> None:
         if self.impl not in _IMPLS:
@@ -103,6 +110,9 @@ class RuntimeConfig:
         if self.executor not in _EXECUTORS:
             raise ValueError(
                 f"executor must be one of {_EXECUTORS}, got {self.executor!r}")
+        if self.tune not in _TUNE_MODES:
+            raise ValueError(
+                f"tune must be one of {_TUNE_MODES}, got {self.tune!r}")
 
     def replace(self, **overrides: Any) -> "RuntimeConfig":
         return dataclasses.replace(self, **overrides)
@@ -122,10 +132,24 @@ class RuntimeConfig:
         ``axis_name`` / ``precision`` are excluded: they are only consulted
         at the host-driver level and resolved into explicit statics, so
         including them would just force spurious recompiles.
+
+        When the tuning policy is active the key also carries the tuning
+        cache's mutation epoch (:func:`repro.tune.cache.cache_epoch`):
+        tuned winners are read at trace time, so a cache update — a
+        ``populate`` run, a prune, swapping the cache file — must retrace
+        rather than hit programs compiled under the previous winners
+        (DESIGN.md §14). With ``tune="off"`` the epoch is excluded, so
+        cache churn costs untuned callers nothing.
         """
+        if self.tune == "off":
+            tune_state: object = "off"
+        else:
+            from repro.tune.cache import cache_epoch  # lazy; stdlib-only
+
+            tune_state = (self.tune, cache_epoch())
         return (self.impl, self.interpret, self.knn_block, self.block_q,
                 self.block_k, self.n_blocks, self.chunk_n, self.reservoir_n,
-                self.executor)
+                self.executor, tune_state)
 
 
 def _parse_bool(s: str) -> bool:
@@ -145,6 +169,7 @@ _ENV_FIELDS = {
     "REPRO_CHUNK_N": ("chunk_n", int),
     "REPRO_RESERVOIR_N": ("reservoir_n", int),
     "REPRO_EXECUTOR": ("executor", str),
+    "REPRO_TUNE": ("tune", str),
 }
 
 

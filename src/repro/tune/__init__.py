@@ -1,0 +1,79 @@
+"""repro.tune — empirical kernel autotuning with a persistent cache.
+
+The hot-path dispatch knobs (Pallas tile sizes, the pallas-vs-XLA impl
+choice, the blocked-kNN row block, the streaming chunk budget) default to
+hand-picked constants. This package measures candidates per hardware and
+shape bucket and persists the winners, so dispatch can tune itself to the
+machine instead of to the author's laptop.
+
+Policy (``RuntimeConfig.tune`` / ``REPRO_TUNE``):
+
+  * ``"off"``      — default; every constant exactly as hand-picked.
+  * ``"cached"``   — consult the cache, fall back to the constants on a
+    miss; never measures (production mode: deterministic given the file).
+  * ``"onthefly"`` — consult the cache and **measure on a miss**, persisting
+    the winner (warmup mode — first call per new bucket pays the sweep).
+
+:func:`tuned_params` is the one policy gate every consumer goes through
+(``ops._resolve``/the ops entry points, ``core.knn.resolve_auto_block``,
+``plan_fit``); with the policy off it returns ``{}`` without touching the
+cache, so the off path costs one config read. Cache mutations bump
+:func:`repro.tune.cache.cache_epoch`, which ``dispatch_key()`` folds in
+whenever tuning is active — tuned values read at trace time can never be
+served from a jit program compiled under older winners (DESIGN.md §14).
+
+CLI: ``python -m repro.tune populate|show|prune|clear`` manages the cache.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+from repro import runtime
+from repro.tune.cache import (  # noqa: F401  (re-exported API)
+    CACHE_ENV,
+    TuningCache,
+    cache_epoch,
+    default_cache_path,
+    get_cache,
+    pow2_bucket,
+    set_cache,
+    shape_bucket,
+)
+
+__all__ = [
+    "CACHE_ENV", "TuningCache", "autotune_cell", "cache_epoch",
+    "default_cache_path", "get_cache", "pow2_bucket", "set_cache",
+    "shape_bucket", "tuned_params",
+]
+
+
+def tuned_params(kernel: str, *, dtype: str = "float32",
+                 **dims: int) -> Dict[str, Any]:
+    """Winning params for ``kernel`` at the bucket of ``dims``, or ``{}``.
+
+    Honours the active tune policy: ``off`` never looks, ``cached`` looks
+    but never measures, ``onthefly`` measures (and persists) on a miss.
+    Callers treat a missing key in the result as "use the constant", so a
+    partial dict — e.g. ``{"impl": "ref"}`` with no tile sizes — is valid.
+    """
+    mode = runtime.active().tune
+    if mode == "off":
+        return {}
+    from repro.tune.autotune import current_device_kind  # lazy: jax
+
+    bucket = shape_bucket(**dims)
+    cache = get_cache()
+    params = cache.lookup(current_device_kind(), kernel, bucket, dtype)
+    if params is None and mode == "onthefly":
+        from repro.tune.autotune import autotune_cell
+
+        params, _ = autotune_cell(kernel, dims, dtype=dtype, cache=cache)
+    return dict(params or {})
+
+
+def autotune_cell(*args, **kwargs):
+    """Measure one cell now — see :func:`repro.tune.autotune.autotune_cell`
+    (lazy re-export so ``import repro.tune`` never pulls jax)."""
+    from repro.tune import autotune
+
+    return autotune.autotune_cell(*args, **kwargs)

@@ -1,0 +1,239 @@
+"""Empirical measurement of dispatch candidates — the autotuner proper.
+
+Each registered cell name maps to (a) a candidate generator and (b) a
+runner that times one candidate on synthetic inputs **at the bucket edge**
+(dims rounded up by :func:`repro.tune.cache.pow2_bucket`), so the recorded
+winner is measured at the worst case of the bucket it will serve.
+
+Cells and what they tune (DESIGN.md §14):
+
+  * ``"knn"`` / ``"pairwise_sq_l2"`` / ``"segment_sum"`` — the kernel
+    entry points in :mod:`repro.kernels.ops`: the impl choice
+    (pallas vs the jnp reference) and, for the Pallas winner, its tile
+    sizes (``block_q``/``block_k``, ``block_s``/``block_n``). Pallas
+    candidates only join the sweep on a real TPU (or with
+    ``include_pallas=True``): interpret mode is orders slower and would
+    never win, so measuring it is wasted time.
+  * ``"knn_block"`` — the executor-level blocked-kNN row block that
+    ``knn_block=0`` ("auto") resolves to (today's hand-picked constant is
+    ``repro.core.knn.AUTO_KNN_BLOCK``).
+  * ``"stream"`` — the streaming-fit chunk budget ``chunk_n`` (shape-free
+    cell: one winner per device kind, bucket ``"any"``).
+
+Deliberately **not** tuned: ``n_blocks``, the canonical fixed-reduction
+width. It pins the summation order that makes single-device, sharded and
+streaming executors bit-comparable (DESIGN.md §4.3); tuning it would trade
+the parity contract for a constant factor.
+
+Timing discipline: first call discarded (compile), then the median of
+``repeats`` synced runs — the same noise treatment the perf gate applies
+(benchmarks/gate.py).
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro import runtime
+from repro.tune.cache import (
+    TuningCache,
+    get_cache,
+    pow2_bucket,
+    shape_bucket,
+)
+
+#: cells the autotuner knows how to measure (CLI ``populate`` default set)
+KERNELS = ("knn", "pairwise_sq_l2", "segment_sum", "knn_block", "stream")
+
+# hardware-aligned Pallas tile candidates (sublane/lane multiples only —
+# misaligned tiles are a known Mosaic footgun, see the Pallas guide)
+_QK_TILES = [(bq, bk) for bq in (128, 256, 512) for bk in (256, 512, 1024)]
+_SEG_TILES = [(bs, bn) for bs in (256, 512, 1024) for bn in (512, 1024, 2048)]
+_KNN_BLOCKS = (2048, 4096, 8192, 16384)
+_CHUNKS = (1024, 2048, 4096)
+
+#: synthetic dims a cell is measured at when the caller gives none
+DEFAULT_DIMS: Dict[str, Dict[str, int]] = {
+    "knn": {"n": 8192, "d": 8, "k": 3},
+    "pairwise_sq_l2": {"n": 4096, "m": 4096, "d": 8},
+    "segment_sum": {"n": 8192, "d": 8, "s": 1024},
+    "knn_block": {"n": 16384, "d": 8, "k": 3},
+    "stream": {},
+}
+
+
+def current_device_kind() -> str:
+    import jax
+
+    return jax.devices()[0].device_kind
+
+
+def _include_pallas_default() -> bool:
+    import jax
+
+    return jax.default_backend() == "tpu"
+
+
+def candidates_for(kernel: str, dims: Dict[str, int],
+                   include_pallas: bool) -> List[Dict[str, Any]]:
+    """The candidate parameter dicts swept for one cell."""
+    if kernel in ("knn", "pairwise_sq_l2"):
+        cands: List[Dict[str, Any]] = [{"impl": "ref"}]
+        if include_pallas:
+            cands += [{"impl": "pallas", "block_q": bq, "block_k": bk}
+                      for bq, bk in _QK_TILES]
+        return cands
+    if kernel == "segment_sum":
+        cands = [{"impl": "ref"}]
+        if include_pallas:
+            cands += [{"impl": "pallas", "block_s": bs, "block_n": bn}
+                      for bs, bn in _SEG_TILES]
+        return cands
+    if kernel == "knn_block":
+        ceiling = pow2_bucket(dims.get("n", _KNN_BLOCKS[-1]))
+        blocks = [b for b in _KNN_BLOCKS if b <= ceiling] or [ceiling]
+        return [{"knn_block": b} for b in blocks]
+    if kernel == "stream":
+        return [{"chunk_n": c} for c in _CHUNKS]
+    raise ValueError(f"unknown tunable kernel {kernel!r}; have {KERNELS}")
+
+
+def _median_seconds(fn, repeats: int) -> float:
+    import jax
+
+    out = fn()  # compile + warm caches; excluded from the median
+    jax.block_until_ready(jax.tree_util.tree_leaves(out))
+    times = []
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(jax.tree_util.tree_leaves(out))
+        times.append(time.perf_counter() - t0)
+    return statistics.median(times)
+
+
+def _runner(kernel: str, dims: Dict[str, int], dtype: str):
+    """Build synthetic bucket-edge inputs once; return fn(params) that
+    runs one candidate end to end."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ops
+    from repro.kernels import knn_topk as _knn
+    from repro.kernels import pairwise_l2 as _pw
+    from repro.kernels import segment_sum as _ss
+
+    rng = np.random.default_rng(0)
+    jdt = jnp.dtype(dtype)
+
+    if kernel == "knn":
+        n, d, k = (pow2_bucket(dims[a]) for a in ("n", "d", "k"))
+        x = jnp.asarray(rng.normal(size=(n, d)), jdt)
+
+        def run(params):
+            if params.get("impl") == "pallas":
+                return _knn.knn_topk(
+                    x, k, block_q=params["block_q"],
+                    block_k=params["block_k"], interpret=ops._interpret())
+            return ops.knn(x, k, impl="ref")
+
+        return run
+
+    if kernel == "pairwise_sq_l2":
+        n, m, d = (pow2_bucket(dims[a]) for a in ("n", "m", "d"))
+        x = jnp.asarray(rng.normal(size=(n, d)), jdt)
+        y = jnp.asarray(rng.normal(size=(m, d)), jdt)
+
+        def run(params):
+            if params.get("impl") == "pallas":
+                return _pw.pairwise_sq_l2(
+                    x, y, None, block_q=params["block_q"],
+                    block_k=params["block_k"], interpret=ops._interpret())
+            return ops.pairwise_sq_l2(x, y, impl="ref")
+
+        return run
+
+    if kernel == "segment_sum":
+        n, d, s = (pow2_bucket(dims[a]) for a in ("n", "d", "s"))
+        x = jnp.asarray(rng.normal(size=(n, d)), jdt)
+        ids = jnp.asarray(rng.integers(0, s, size=n), jnp.int32)
+
+        def run(params):
+            if params.get("impl") == "pallas":
+                return _ss.segment_sum(
+                    x, ids, s, None, block_s=params["block_s"],
+                    block_n=params["block_n"], interpret=ops._interpret())
+            return ops.segment_sum(x, ids, s, impl="ref")
+
+        return run
+
+    if kernel == "knn_block":
+        from repro.core.knn import knn_graph_blocked
+
+        n, d, k = (pow2_bucket(dims[a]) for a in ("n", "d", "k"))
+        x = jnp.asarray(rng.normal(size=(n, d)), jdt)
+
+        def run(params):
+            return knn_graph_blocked(x, k, block=params["knn_block"])
+
+        return run
+
+    if kernel == "stream":
+        import repro
+
+        d = pow2_bucket(dims.get("d", 8))
+        n = 4 * max(_CHUNKS)
+        x = rng.normal(size=(n, d)).astype(dtype)
+
+        def run(params):
+            c = params["chunk_n"]
+            chunks = (x[i:i + c] for i in range(0, n, c))
+            res = repro.fit(chunks, 2, 1, "kmeans", k=3,
+                            executor="streaming", chunk_n=c)
+            return res.proto_labels
+
+        return run
+
+    raise ValueError(f"unknown tunable kernel {kernel!r}; have {KERNELS}")
+
+
+def autotune_cell(
+    kernel: str,
+    dims: Optional[Dict[str, int]] = None,
+    *,
+    dtype: str = "float32",
+    cache: Optional[TuningCache] = None,
+    repeats: int = 3,
+    include_pallas: Optional[bool] = None,
+    save: bool = True,
+    verbose: bool = False,
+) -> Tuple[Dict[str, Any], float]:
+    """Measure every candidate of one cell; record + return the winner.
+
+    Runs under a ``tune="off"`` scope so the kernels being measured never
+    recursively consult the cache being populated. Returns
+    ``(winning params, median seconds)``.
+    """
+    dims = dict(DEFAULT_DIMS[kernel] if dims is None else dims)
+    if include_pallas is None:
+        include_pallas = _include_pallas_default()
+    cache = get_cache() if cache is None else cache
+    cands = candidates_for(kernel, dims, include_pallas)
+
+    best: Optional[Dict[str, Any]] = None
+    best_sec = float("inf")
+    with runtime.configure(tune="off"):
+        run = _runner(kernel, dims, dtype)
+        for params in cands:
+            sec = _median_seconds(lambda: run(params), repeats)
+            if verbose:
+                print(f"#   {kernel} {params} -> {sec * 1e3:.3f} ms")
+            if sec < best_sec:
+                best, best_sec = params, sec
+    assert best is not None
+    bucket = shape_bucket(**dims)
+    cache.record(current_device_kind(), kernel, bucket, best, dtype=dtype,
+                 seconds=round(best_sec, 6), candidates=len(cands),
+                 save=save)
+    return best, best_sec

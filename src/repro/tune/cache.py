@@ -1,0 +1,246 @@
+"""Persistent tuning cache: measured dispatch winners, keyed by hardware.
+
+One JSON file maps ``device_kind / kernel / shape_bucket / dtype`` to the
+winning parameter dict the autotuner measured for that cell (plus the
+measurement metadata needed to judge staleness). The file is the *only*
+state the tuning subsystem owns — deleting it restores the hand-picked
+constants everywhere, and committing it pins a machine's tuned dispatch
+for reproducibility.
+
+Key layout (DESIGN.md §14):
+
+  * ``device_kind`` — ``jax.devices()[0].device_kind`` ("cpu",
+    "TPU v4", ...): tuned winners never leak across hardware;
+  * ``kernel``      — the registered entry-point name ("knn",
+    "pairwise_sq_l2", "segment_sum", "knn_block", "stream");
+  * ``shape_bucket`` — every shape dimension rounded **up** to a power of
+    two (:func:`shape_bucket`), so one measurement covers a bucket of
+    nearby problem sizes instead of an unbounded key space;
+  * ``dtype``       — the input element type name.
+
+This module is deliberately stdlib-only (no jax import): the runtime
+config's ``dispatch_key()`` pulls :func:`cache_epoch` from here on every
+public entry-point call, and the CLI's inspect/prune paths must work on a
+machine where jax is broken or absent.
+
+Epoch contract: :func:`cache_epoch` returns a process-wide counter bumped
+on every mutation or (re)load of the active cache. ``RuntimeConfig.
+dispatch_key()`` folds it in whenever the tune policy is active, so a
+cache update can never be masked by a jit program traced under the
+previous winners (the §10 no-stale-cache contract, extended to tuning).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Any, Dict, Iterator, Optional, Tuple
+
+SCHEMA_VERSION = 1
+
+#: env var naming the cache file (the CLI's --cache flag wins over it)
+CACHE_ENV = "REPRO_TUNE_CACHE"
+
+_KEY_SEP = "|"
+
+
+def default_cache_path() -> str:
+    """``$REPRO_TUNE_CACHE`` or ``~/.cache/repro/tune_cache.json``."""
+    env = os.environ.get(CACHE_ENV, "")
+    if env:
+        return env
+    base = os.environ.get("XDG_CACHE_HOME",
+                          os.path.join(os.path.expanduser("~"), ".cache"))
+    return os.path.join(base, "repro", "tune_cache.json")
+
+
+def make_key(device_kind: str, kernel: str, shape_bucket: str,
+             dtype: str) -> str:
+    for part in (device_kind, kernel, shape_bucket, dtype):
+        if _KEY_SEP in part:
+            raise ValueError(f"cache key part {part!r} contains {_KEY_SEP!r}")
+    return _KEY_SEP.join((device_kind, kernel, shape_bucket, dtype))
+
+
+def split_key(key: str) -> Tuple[str, str, str, str]:
+    device_kind, kernel, shape_bucket, dtype = key.split(_KEY_SEP)
+    return device_kind, kernel, shape_bucket, dtype
+
+
+def pow2_bucket(v: int) -> int:
+    """Smallest power of two >= max(v, 1) — the bucket edge a dimension
+    rounds up to, so a winner measured at the edge covers the bucket."""
+    v = max(int(v), 1)
+    return 1 << (v - 1).bit_length()
+
+
+def shape_bucket(**dims: int) -> str:
+    """Canonical bucket string: dims sorted by name, each pow2-rounded.
+
+    ``shape_bucket(n=3000, d=5)`` → ``"d8,n4096"``; no dims → ``"any"``
+    (used by shape-free cells like the streaming chunk budget).
+    """
+    if not dims:
+        return "any"
+    return ",".join(f"{k}{pow2_bucket(v)}" for k, v in sorted(dims.items()))
+
+
+# --------------------------------------------------------------------------
+# the cache object + the process-global active instance
+# --------------------------------------------------------------------------
+
+
+class TuningCache:
+    """On-disk JSON map of measured winners. Load-lazily, save-eagerly:
+    every :meth:`record` persists (atomic rename), so a crashed tuning run
+    keeps everything measured so far."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = default_cache_path() if path is None else path
+        self._entries: Optional[Dict[str, dict]] = None
+
+    # ---- persistence ------------------------------------------------------
+
+    def _load(self) -> Dict[str, dict]:
+        if self._entries is None:
+            try:
+                with open(self.path) as f:
+                    blob = json.load(f)
+                if blob.get("version") != SCHEMA_VERSION:
+                    self._entries = {}
+                else:
+                    self._entries = dict(blob.get("entries", {}))
+            except (OSError, ValueError):
+                self._entries = {}
+        return self._entries
+
+    def save(self) -> None:
+        entries = self._load()
+        d = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(d, exist_ok=True)
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"version": SCHEMA_VERSION, "entries": entries},
+                      f, indent=1, sort_keys=True)
+        os.replace(tmp, self.path)
+
+    def reload(self) -> None:
+        """Drop the in-memory view and re-read the file on next access."""
+        self._entries = None
+        bump_epoch()
+
+    # ---- lookup / record --------------------------------------------------
+
+    def lookup(self, device_kind: str, kernel: str, shape_bucket: str,
+               dtype: str = "float32") -> Optional[Dict[str, Any]]:
+        """The winning params dict for one cell, or None on a miss."""
+        rec = self._load().get(make_key(device_kind, kernel, shape_bucket,
+                                        dtype))
+        return dict(rec["params"]) if rec else None
+
+    def record(self, device_kind: str, kernel: str, shape_bucket: str,
+               params: Dict[str, Any], *, dtype: str = "float32",
+               seconds: Optional[float] = None, candidates: int = 0,
+               save: bool = True) -> None:
+        """Store one measured winner (and persist unless ``save=False``)."""
+        entries = self._load()
+        entries[make_key(device_kind, kernel, shape_bucket, dtype)] = {
+            "params": dict(params),
+            "seconds": seconds,
+            "candidates": int(candidates),
+            "recorded_unix": round(time.time(), 1),
+        }
+        bump_epoch()
+        if save:
+            self.save()
+
+    # ---- maintenance ------------------------------------------------------
+
+    def entries(self) -> Iterator[Tuple[Tuple[str, str, str, str], dict]]:
+        """((device_kind, kernel, shape_bucket, dtype), record) pairs."""
+        for key, rec in sorted(self._load().items()):
+            yield split_key(key), rec
+
+    def __len__(self) -> int:
+        return len(self._load())
+
+    def prune(self, *, max_age_days: Optional[float] = None,
+              device_kind: Optional[str] = None,
+              kernel: Optional[str] = None, save: bool = True) -> int:
+        """Drop entries older than ``max_age_days`` and/or matching the
+        given device kind / kernel filters; returns the dropped count."""
+        entries = self._load()
+        cutoff = (time.time() - max_age_days * 86400.0
+                  if max_age_days is not None else None)
+        drop = []
+        for key, rec in entries.items():
+            dk, kn, _, _ = split_key(key)
+            if cutoff is not None and rec.get("recorded_unix", 0) >= cutoff:
+                continue
+            if cutoff is None:
+                # pure filter mode: only drop what the filters name
+                if device_kind is None and kernel is None:
+                    continue
+            if device_kind is not None and dk != device_kind:
+                continue
+            if kernel is not None and kn != kernel:
+                continue
+            drop.append(key)
+        for key in drop:
+            del entries[key]
+        if drop:
+            bump_epoch()
+            if save:
+                self.save()
+        return len(drop)
+
+    def clear(self, save: bool = True) -> int:
+        entries = self._load()
+        n = len(entries)
+        entries.clear()
+        bump_epoch()
+        if save:
+            self.save()
+        return n
+
+
+# process-global active cache + the epoch counter dispatch_key() reads
+_lock = threading.Lock()
+_active: Optional[TuningCache] = None
+_epoch = 0
+
+
+def bump_epoch() -> int:
+    global _epoch
+    with _lock:
+        _epoch += 1
+        return _epoch
+
+
+def cache_epoch() -> int:
+    """Monotonic fingerprint of the active cache's mutation history —
+    folded into ``RuntimeConfig.dispatch_key()`` when tuning is active."""
+    return _epoch
+
+
+def get_cache() -> TuningCache:
+    """The process-global cache every tuned lookup consults."""
+    global _active
+    with _lock:
+        if _active is None:
+            _active = TuningCache()
+        return _active
+
+
+def set_cache(cache_or_path) -> TuningCache:
+    """Swap the active cache (a TuningCache or a path); returns it.
+    Bumps the epoch so compiled programs traced under the old cache
+    retrace."""
+    global _active
+    cache = (cache_or_path if isinstance(cache_or_path, TuningCache)
+             else TuningCache(cache_or_path))
+    with _lock:
+        _active = cache
+    bump_epoch()
+    return cache

@@ -1,0 +1,160 @@
+"""Interpret-mode Pallas-vs-reference parity sweep (hypothesis).
+
+The hand-picked parametrizations in test_kernels.py cover a few known-bad
+shapes; this sweep drives the three clustering kernels across randomly
+drawn *awkward* cases — n not divisible by the block, k near the valid
+count, d=1, out-of-range segment ids — with deliberately tiny tile sizes
+so multi-block grids (and their padding paths) execute even at test n.
+Runs on CPU (interpret=True), so CI exercises the kernel code paths that
+only a TPU would otherwise reach.
+
+Shapes are drawn from fixed buckets (the test_tc_properties idiom) to
+bound the number of distinct jit compilations.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.knn_topk import knn_topk
+from repro.kernels.pairwise_l2 import pairwise_sq_l2
+from repro.kernels.segment_sum import segment_sum
+
+# the random sweep needs hypothesis (requirements-dev.txt; CI installs
+# it); the pinned edge cases at the bottom run either way
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - exercised in bare containers
+    given = None
+
+# awkward-by-construction buckets: primes and off-by-one around the tiny
+# tile sizes below, so blocks never divide the row count evenly
+NS = (7, 9, 16, 17, 31, 33)
+DS = (1, 2, 5, 8)
+TILES = (8, 16, 32)
+
+if given is None:  # no hypothesis: stub the sweep out as skips
+    SWEEP = pytest.mark.skip(
+        reason="parity sweep needs hypothesis "
+               "(pip install -r requirements-dev.txt)")
+
+    def given(**kw):  # noqa: F811
+        return lambda fn: fn
+
+    class _St:
+        def composite(self, fn):
+            return lambda: None
+
+        def __getattr__(self, name):
+            return lambda *a, **kw: None
+
+    st = _St()
+else:
+    SWEEP = settings(max_examples=25, deadline=None)
+
+
+@st.composite
+def knn_cases(draw):
+    n = draw(st.sampled_from(NS))
+    d = draw(st.sampled_from(DS))
+    seed = draw(st.integers(0, 2**16))
+    masked = draw(st.booleans())
+    # k spans the full legal range [1, n] — including k >= n_valid, where
+    # unfillable slots must come back (inf, -1)
+    k = draw(st.integers(1, n))
+    bq = draw(st.sampled_from(TILES))
+    bk = draw(st.sampled_from(TILES))
+    return n, d, k, bq, bk, seed, masked
+
+
+@SWEEP
+@given(case=knn_cases())
+def test_knn_topk_parity(case):
+    n, d, k, bq, bk, seed, masked = case
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    valid = (jnp.asarray(rng.random(n) > 0.3) if masked else None)
+    gd, gi = knn_topk(x, k, valid, block_q=bq, block_k=bk, interpret=True)
+    wd, wi = ref.knn(x, k, valid=valid)
+    np.testing.assert_allclose(gd, wd, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(gi, wi)
+
+
+@st.composite
+def pairwise_cases(draw):
+    n = draw(st.sampled_from(NS))
+    m = draw(st.sampled_from(NS))
+    d = draw(st.sampled_from(DS))
+    seed = draw(st.integers(0, 2**16))
+    masked = draw(st.booleans())
+    bq = draw(st.sampled_from(TILES))
+    bk = draw(st.sampled_from(TILES))
+    return n, m, d, bq, bk, seed, masked
+
+
+@SWEEP
+@given(case=pairwise_cases())
+def test_pairwise_sq_l2_parity(case):
+    n, m, d, bq, bk, seed, masked = case
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    yv = (jnp.asarray(rng.random(m) > 0.3) if masked else None)
+    got = pairwise_sq_l2(x, y, yv, block_q=bq, block_k=bk, interpret=True)
+    want = ref.pairwise_sq_l2(x, y, y_valid=yv)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@st.composite
+def segsum_cases(draw):
+    n = draw(st.sampled_from(NS))
+    d = draw(st.sampled_from(DS))
+    s = draw(st.sampled_from((1, 2, 5, 9, 17)))
+    seed = draw(st.integers(0, 2**16))
+    weighted = draw(st.booleans())
+    bs = draw(st.sampled_from(TILES))
+    bn = draw(st.sampled_from(TILES))
+    return n, d, s, bs, bn, seed, weighted
+
+
+@SWEEP
+@given(case=segsum_cases())
+def test_segment_sum_parity(case):
+    n, d, s, bs, bn, seed, weighted = case
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    # ids straddle the legal range: -1 and s are out of range -> dropped
+    ids = jnp.asarray(rng.integers(-1, s + 1, size=n), jnp.int32)
+    w = jnp.asarray(rng.random(n), jnp.float32) if weighted else None
+    gs, gm = segment_sum(x, ids, s, w, block_s=bs, block_n=bn,
+                         interpret=True)
+    ws, wm = ref.segment_sum(x, ids, s, weights=w)
+    np.testing.assert_allclose(gs, ws, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gm, wm, rtol=1e-4, atol=1e-4)
+
+
+# pinned worst cases the random sweep might skip in a given run: d=1
+# columns, k exactly at the valid count, and a mask denser than k
+@pytest.mark.parametrize("n,d,k,bq,bk", [
+    (33, 1, 32, 8, 16),   # k = n-1 at d=1, blocks don't divide n
+    (17, 1, 17, 16, 8),   # k = n: every slot needs the full candidate set
+    (9, 5, 8, 8, 8),      # n just over one tile
+])
+def test_knn_topk_pinned_edges(rng, n, d, k, bq, bk):
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    gd, gi = knn_topk(x, k, block_q=bq, block_k=bk, interpret=True)
+    wd, wi = ref.knn(x, k)
+    np.testing.assert_allclose(gd, wd, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(gi, wi)
+
+
+def test_knn_topk_k_exceeds_valid_count(rng):
+    """k near/above n_valid: the 4 invalid rows force (inf, -1) slots."""
+    x = jnp.asarray(rng.normal(size=(12, 3)), jnp.float32)
+    valid = jnp.asarray([True] * 8 + [False] * 4)
+    gd, gi = knn_topk(x, 9, valid, block_q=8, block_k=8, interpret=True)
+    wd, wi = ref.knn(x, 9, valid=valid)
+    np.testing.assert_allclose(gd, wd, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(gi, wi)
+    assert np.isinf(np.asarray(gd)[:, -1]).all()  # only 7 valid others
+    assert (np.asarray(gi)[:, -1] == -1).all()

@@ -73,6 +73,26 @@ def test_knn_topk_ragged_blocks(rng, n, bq, bk):
     np.testing.assert_array_equal(gi, wi)
 
 
+def test_unknown_impl_rejected_loudly(rng):
+    """Regression: an unknown impl string used to fall through silently to
+    the XLA reference path — a typo'd impl= would quietly benchmark (or
+    ship) the wrong kernel. Every ops entry point must reject it with the
+    registered list."""
+    x = jnp.asarray(rng.normal(size=(8, 3)), jnp.float32)
+    ids = jnp.zeros((8,), jnp.int32)
+    with pytest.raises(ValueError, match=r"registered impls.*pallas"):
+        ops.knn(x, 2, impl="palas")  # the typo that motivated this
+    with pytest.raises(ValueError, match="unknown impl 'xla'"):
+        ops.pairwise_sq_l2(x, x, impl="xla")
+    with pytest.raises(ValueError, match="unknown impl"):
+        ops.segment_sum(x, ids, 2, impl="cuda")
+    with pytest.raises(ValueError, match="unknown impl"):
+        ops.blocked_segment_sum(x, ids, 2, n_blocks=2, impl="bogus")
+    # the valid spellings still resolve (auto included)
+    for impl in ("auto", "ref"):
+        ops.knn(x, 2, impl=impl)
+
+
 @pytest.mark.parametrize("n,d,s", [(10, 3, 4), (100, 7, 13), (257, 2, 64)])
 def test_segment_sum(rng, n, d, s):
     x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)

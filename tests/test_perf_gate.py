@@ -1,0 +1,119 @@
+"""benchmarks/gate.py: the noise-aware perf-regression gate. The
+load-bearing self-test — an injected synthetic 2x slowdown on a copied
+artifact must make the gate exit nonzero, while the committed baselines
+gate clean against themselves."""
+import copy
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import gate  # noqa: E402
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                       "results")
+FIT_MATRIX = os.path.join(RESULTS, "BENCH_fit_matrix.json")
+
+
+@pytest.fixture
+def baseline():
+    with open(FIT_MATRIX) as f:
+        return json.load(f)
+
+
+def test_identical_artifacts_pass(baseline):
+    report = gate.compare(baseline, baseline)
+    assert report["regressions"] == []
+    assert report["checked"] > 0
+    assert report["missing"] == [] and report["unmatched"] == []
+
+
+def test_injected_slowdown_is_flagged(baseline):
+    slowed = gate.inject_slowdown(baseline, factor=2.0)
+    report = gate.compare(baseline, slowed)
+    assert report["regressions"]
+    metrics = {f["metric"] for f in report["regressions"]}
+    # both directions trip: times/memory up AND throughput down
+    assert "seconds" in metrics and "points_per_sec" in metrics
+    # ...and the injected values really are 2x / 0.5x
+    for f in report["regressions"]:
+        want = 2.0 if f["direction"] == "lower" else 0.5
+        assert f["fresh"] == pytest.approx(f["baseline"] * want)
+
+
+def test_cli_exits_nonzero_on_injected_regression(baseline, tmp_path):
+    """The satellite contract: copied artifact + synthetic 2x slowdown →
+    gate exits nonzero; the untouched copy → exit 0."""
+    slow = tmp_path / "slow.json"
+    slow.write_text(json.dumps(gate.inject_slowdown(baseline, 2.0)))
+    same = tmp_path / "same.json"
+    same.write_text(json.dumps(baseline))
+    assert gate.main(["--baseline", FIT_MATRIX, "--fresh", str(slow)]) == 1
+    assert gate.main(["--baseline", FIT_MATRIX, "--fresh", str(same)]) == 0
+
+
+def test_self_test_mode():
+    assert gate.main(["--self-test"]) == 0
+
+
+def test_generous_ci_tolerance(baseline):
+    """--default-tol 1.0 (the CI quick-mode setting) only fails on >2x:
+    exactly 2x squeaks by, 2.5x does not."""
+    at_2x = gate.compare(baseline, gate.inject_slowdown(baseline, 2.0),
+                         default_tol=1.0)
+    assert at_2x["regressions"] == []
+    past_2x = gate.compare(baseline, gate.inject_slowdown(baseline, 2.5),
+                           default_tol=1.0)
+    assert past_2x["regressions"]
+
+
+def test_per_metric_tolerance_override(baseline):
+    mild = copy.deepcopy(baseline)
+    for row in mild["rows"]:
+        row["seconds"] = row["seconds"] * 1.4  # within the 0.5 default
+    assert gate.compare(baseline, mild)["regressions"] == []
+    tight = gate.compare(baseline, mild, tols={"seconds": 0.2})
+    assert tight["regressions"]
+    assert all(f["metric"] == "seconds" for f in tight["regressions"])
+
+
+def test_noise_floor_skips_tiny_baselines():
+    base = {"name": "x", "rows": [{"n": 1, "seconds": 0.01,
+                                   "peak_mb": 0.005}]}
+    fresh = {"name": "x", "rows": [{"n": 1, "seconds": 0.05,
+                                    "peak_mb": 0.025}]}
+    report = gate.compare(base, fresh)
+    assert report["checked"] == 0 and report["regressions"] == []
+
+
+def test_row_matching_not_positional(baseline):
+    """Reordered rows and new sweep points must not misalign the gate."""
+    shuffled = copy.deepcopy(baseline)
+    shuffled["rows"] = list(reversed(shuffled["rows"]))
+    shuffled["rows"].append({"n": 999_999, "executor": "memory",
+                             "devices": 8, "seconds": 1e9})
+    report = gate.compare(baseline, shuffled)
+    assert report["regressions"] == []
+    assert len(report["unmatched"]) == 1
+    dropped = copy.deepcopy(baseline)
+    dropped["rows"] = dropped["rows"][1:]
+    assert len(gate.compare(baseline, dropped)["missing"]) == 1
+
+
+def test_median_artifact_merges_repeats(baseline):
+    runs = [copy.deepcopy(baseline) for _ in range(3)]
+    key0 = gate.row_key(baseline["rows"][0])
+    # one noisy outlier run: the median must shrug it off
+    for factor, run in zip((1.0, 10.0, 1.1), runs):
+        for row in run["rows"]:
+            if gate.row_key(row) == key0:
+                row["seconds"] = row["seconds"] * factor
+    merged = gate.median_artifact(runs)
+    merged_row = next(r for r in merged["rows"]
+                      if gate.row_key(r) == key0)
+    assert merged_row["seconds"] == pytest.approx(
+        baseline["rows"][0]["seconds"] * 1.1)
+    assert gate.compare(baseline, merged)["regressions"] == []

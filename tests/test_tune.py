@@ -1,0 +1,226 @@
+"""The empirical autotuner (DESIGN.md §14): cache round-trips, the tune
+policy in RuntimeConfig/dispatch_key, plan_fit + ops consulting measured
+winners, onthefly population, and the management CLI."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+import repro.tune as tune
+from repro import runtime
+from repro.core.knn import AUTO_KNN_BLOCK, resolve_auto_block
+from repro.core.plan import plan_fit
+from repro.kernels import ops, ref
+from repro.runtime.config import RuntimeConfig, config_from_env
+from repro.tune.autotune import current_device_kind
+from repro.tune.cache import TuningCache, make_key, split_key
+
+
+@pytest.fixture
+def cache(tmp_path):
+    """Point the process-global cache at a throwaway file; restore after."""
+    prev = tune.get_cache()
+    c = tune.set_cache(str(tmp_path / "tune_cache.json"))
+    yield c
+    tune.set_cache(prev)
+
+
+DK = current_device_kind()
+
+
+# ----------------------------------------------------------- cache layer
+
+
+def test_pow2_bucket_and_shape_bucket():
+    assert [tune.pow2_bucket(v) for v in (1, 2, 3, 1000, 1024, 1025)] == \
+        [1, 2, 4, 1024, 1024, 2048]
+    assert tune.shape_bucket(n=3000, d=5) == "d8,n4096"
+    assert tune.shape_bucket(n=4096, d=8) == "d8,n4096"  # same bucket
+    assert tune.shape_bucket() == "any"  # shape-free cells (stream)
+
+
+def test_cache_roundtrip_and_key_layout(tmp_path):
+    path = str(tmp_path / "c.json")
+    c = TuningCache(path)
+    assert c.lookup(DK, "knn", "d8,n4096") is None
+    c.record(DK, "knn", "d8,n4096", {"impl": "ref", "block_q": 128},
+             seconds=0.002, candidates=9)
+    assert c.lookup(DK, "knn", "d8,n4096") == {"impl": "ref", "block_q": 128}
+    # a different device kind / bucket / dtype never aliases
+    assert c.lookup("TPU v4", "knn", "d8,n4096") is None
+    assert c.lookup(DK, "knn", "d8,n8192") is None
+    assert c.lookup(DK, "knn", "d8,n4096", dtype="bfloat16") is None
+    # persisted eagerly: a fresh instance reads the same winner from disk
+    assert TuningCache(path).lookup(DK, "knn", "d8,n4096")["block_q"] == 128
+    blob = json.load(open(path))
+    assert blob["version"] == 1
+    key = next(iter(blob["entries"]))
+    assert split_key(key) == (DK, "knn", "d8,n4096", "float32")
+    assert make_key(DK, "knn", "d8,n4096", "float32") == key
+
+
+def test_cache_prune_clear_and_entries(tmp_path):
+    c = TuningCache(str(tmp_path / "c.json"))
+    c.record(DK, "knn", "d8,n4096", {"impl": "ref"})
+    c.record(DK, "segment_sum", "d8,n4096,s512", {"impl": "ref"})
+    c.record("TPU v4", "knn", "d8,n4096", {"block_q": 512})
+    assert len(c) == 3
+    assert [k[1] for k, _ in c.entries()].count("knn") == 2
+    assert c.prune(kernel="segment_sum") == 1
+    assert c.prune(device_kind="TPU v4") == 1
+    # age-based prune: backdate the survivor, then drop it
+    key = make_key(DK, "knn", "d8,n4096", "float32")
+    c._load()[key]["recorded_unix"] = 0.0
+    assert c.prune(max_age_days=1.0) == 1
+    c.record(DK, "knn", "d8,n4096", {"impl": "ref"})
+    assert c.clear() == 1 and len(c) == 0
+
+
+# ------------------------------------------------- config + dispatch_key
+
+
+def test_tune_policy_validation_and_env():
+    assert RuntimeConfig().tune == "off"
+    assert RuntimeConfig(tune="cached").tune == "cached"
+    with pytest.raises(ValueError, match="tune must be one of"):
+        RuntimeConfig(tune="always")
+    assert config_from_env({"REPRO_TUNE": "onthefly"}).tune == "onthefly"
+    assert config_from_env({"REPRO_TUNE": "off"}) == RuntimeConfig()
+
+
+def test_dispatch_key_carries_cache_epoch(cache):
+    off = runtime.dispatch_key()
+    cache.record(DK, "knn", "d8,n4096", {"impl": "ref"}, save=False)
+    assert runtime.dispatch_key() == off  # tune off: cache churn is free
+    with runtime.configure(tune="cached"):
+        k1 = runtime.dispatch_key()
+        assert k1 != off
+        cache.record(DK, "knn", "d8,n8192", {"impl": "ref"}, save=False)
+        k2 = runtime.dispatch_key()
+    assert k2 != k1  # a mutated cache must retrace tuned programs
+
+
+# --------------------------------------------------- plan_fit resolution
+
+
+def test_plan_fit_consults_cache(rng, cache):
+    """The acceptance contract: a populated cache changes the resolved
+    block_q/knn_block frozen into the FitPlan; tune=off restores today's
+    constants bit-for-bit."""
+    x = jnp.asarray(rng.normal(size=(512, 4)), jnp.float32)
+    cache.record(DK, "knn", tune.shape_bucket(n=512, d=4, k=1),
+                 {"impl": "ref", "block_q": 128, "block_k": 1024})
+    cache.record(DK, "knn_block", tune.shape_bucket(n=512, d=4, k=1),
+                 {"knn_block": 4096})
+    with runtime.configure(tune="cached"):
+        tuned = plan_fit(x, 2, 1)
+        assert (tuned.block_q, tuned.block_k) == (128, 1024)
+        assert tuned.knn_block == 4096
+        # explicit kwargs still beat the tuner
+        pinned = plan_fit(x, 2, 1, block_q=64, knn_block=256)
+        assert (pinned.block_q, pinned.knn_block) == (64, 256)
+    with runtime.configure(tune="off"):
+        off = plan_fit(x, 2, 1)
+    default = plan_fit(x, 2, 1)  # process default: tune is off
+    for plan in (off, default):
+        assert (plan.block_q, plan.block_k) == (256, 512)
+        assert plan.knn_block == 0
+
+
+def test_fit_with_tuned_plan_matches_untuned_labels(rng, cache):
+    """Tuned dispatch values change *where* work happens, never the
+    result: a cached-tuned fit reproduces the untuned labels."""
+    x = jnp.asarray(rng.normal(size=(256, 4)), jnp.float32)
+    cache.record(DK, "knn", tune.shape_bucket(n=256, d=4, k=1),
+                 {"impl": "ref", "block_q": 128, "block_k": 256})
+    cache.record(DK, "knn_block", tune.shape_bucket(n=256, d=4, k=1),
+                 {"knn_block": 2048})
+    key = jax.random.PRNGKey(3)
+    want = repro.fit(x, 2, 1, "kmeans", k=3, key=key)
+    with runtime.configure(tune="cached"):
+        got = repro.fit(x, 2, 1, "kmeans", k=3, key=key)
+    np.testing.assert_array_equal(np.asarray(want.labels),
+                                  np.asarray(got.labels))
+
+
+def test_plan_fit_streaming_consults_stream_cell(rng, cache):
+    x = rng.normal(size=(64, 3)).astype(np.float32)
+    cache.record(DK, "stream", "any", {"chunk_n": 2048, "reservoir_n": 8192})
+    with runtime.configure(tune="cached"):
+        plan = plan_fit(iter([x]), 2, 1)
+        assert (plan.chunk_n, plan.reservoir_n) == (2048, 8192)
+        # explicit values beat the tuned budget
+        assert plan_fit(iter([x]), 2, 1, chunk_n=64).chunk_n == 64
+    assert plan_fit(iter([x]), 2, 1).chunk_n == 0  # off: auto stays auto
+
+
+def test_resolve_auto_block(cache):
+    assert resolve_auto_block(100_000, 8, 3) == AUTO_KNN_BLOCK
+    cache.record(DK, "knn_block",
+                 tune.shape_bucket(n=100_000, d=8, k=3), {"knn_block": 4096})
+    with runtime.configure(tune="cached"):
+        assert resolve_auto_block(100_000, 8, 3) == 4096
+        assert resolve_auto_block(50, 8, 3) == AUTO_KNN_BLOCK  # other bucket
+    assert resolve_auto_block(100_000, 8, 3) == AUTO_KNN_BLOCK  # off
+
+
+# ------------------------------------------------------ ops consultation
+
+
+def test_ops_uses_tuned_impl_and_tiles(rng, cache):
+    """A cached pallas winner (with tile sizes) flows through ops.knn and
+    still matches the oracle — tuning redirects dispatch, not results."""
+    x = jnp.asarray(rng.normal(size=(24, 3)), jnp.float32)
+    cache.record(DK, "knn", tune.shape_bucket(n=24, d=3, k=2),
+                 {"impl": "pallas", "block_q": 8, "block_k": 8})
+    wd, wi = ref.knn(x, 2)
+    with runtime.configure(tune="cached"):
+        gd, gi = ops.knn(x, 2)  # impl="auto" -> tuned winner "pallas"
+    np.testing.assert_allclose(gd, wd, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(gi, wi)
+    # an explicit impl= kwarg overrides the tuned winner
+    with runtime.configure(tune="cached"):
+        gd2, _ = ops.knn(x, 2, impl="ref")
+    np.testing.assert_array_equal(np.asarray(gd2), np.asarray(wd))
+
+
+def test_onthefly_measures_and_persists(rng, cache):
+    x = jnp.asarray(rng.normal(size=(32, 3)), jnp.float32)
+    assert len(cache) == 0
+    with runtime.configure(tune="onthefly"):
+        ops.knn(x, 2)
+    params = cache.lookup(DK, "knn", tune.shape_bucket(n=32, d=3, k=2))
+    assert params is not None and params["impl"] in ("pallas", "ref")
+    # the winner survives a process restart (fresh instance, same file)
+    assert TuningCache(cache.path).lookup(
+        DK, "knn", tune.shape_bucket(n=32, d=3, k=2)) == params
+
+
+def test_autotune_cell_records_winner(cache):
+    params, sec = tune.autotune_cell(
+        "knn", {"n": 32, "d": 3, "k": 2}, cache=cache, repeats=1)
+    assert params == {"impl": "ref"}  # CPU: the reference always wins
+    assert sec > 0
+    rec = dict(cache.entries())[(DK, "knn", "d4,k2,n32", "float32")]
+    assert rec["candidates"] == 1 and rec["params"] == params
+
+
+# ----------------------------------------------------------------- CLI
+
+
+def test_tune_cli_roundtrip(tmp_path, capsys):
+    from repro.tune.__main__ import main
+
+    path = str(tmp_path / "cli_cache.json")
+    assert main(["--cache", path, "populate", "--kernels", "knn",
+                 "--shapes", "32x3x2", "--repeats", "1"]) == 0
+    assert main(["--cache", path, "show"]) == 0
+    out = capsys.readouterr().out
+    assert "knn" in out and "d4,k2,n32" in out
+    assert main(["--cache", path, "prune", "--kernel", "knn"]) == 0
+    assert main(["--cache", path, "clear"]) == 0
+    assert main(["--cache", path, "populate", "--kernels", "bogus"]) == 2
+    assert len(TuningCache(path)) == 0
