@@ -1,0 +1,187 @@
+"""Open-loop load generator over the async continuous-batching front-end.
+
+``bench_serve.py`` measures the per-bucket assign path in isolation; this
+harness measures what a *user population* sees: requests of mixed sizes
+arrive at a fixed offered rate (open loop — arrivals never wait for
+completions, exactly how overload reaches a real service), flow through
+:class:`repro.serve.AsyncClusterService` under real asyncio, and each
+records its own admission→labels-materialized latency. Per offered-QPS
+level we report p50/p99 latency, sustained request + point throughput,
+and batch-fill telemetry into ``benchmarks/results/BENCH_serve_async.json``
+— gated by ``benchmarks/gate.py`` (METRIC_RULES) so a serving-latency or
+throughput regression fails CI.
+
+The deterministic twin of this workload — same scheduler, virtual clock —
+lives in ``tests/serve_sim.py`` / ``tests/test_async_service.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import os
+import sys
+
+# direct-run support: repo root for the benchmarks package, src/ for repro
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_REPO, os.path.join(_REPO, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import gmm_sample, print_csv
+from repro.cluster.registry import available_backends
+from repro.core.index import ClusterIndex
+from repro.serve.async_service import AsyncClusterService, QueueFullError
+
+RESULTS = os.path.join(os.path.dirname(os.path.abspath(__file__)), "results")
+
+# benchmark-registry entry (benchmarks/run.py --bench serve_async)
+BENCH = {
+    "name": "serve_async",
+    "artifact": "BENCH_serve_async.json",
+    "summary": ("offered_qps", "p99_ms"),
+    "quick": dict(n=8_000, duration=1.5, qps_levels=(100, 400),
+                  mode="quick"),
+    "full": lambda mx: dict(n=min(mx, 500_000), m=3, duration=10.0,
+                            qps_levels=(200, 1_000, 4_000),
+                            buckets=(32, 128, 512, 2048), mode="full"),
+}
+
+#: request-size mix cycled by the generator (mean ≈ 21 points/request)
+SIZES = (1, 4, 16, 64)
+
+
+async def _open_loop(service, pool, *, qps: float, duration: float,
+                     seed: int):
+    """Fire requests at the offered rate for ``duration`` seconds, then
+    drain. Returns (per-request records, rejected count, t0, t_end)."""
+    loop = asyncio.get_running_loop()
+    rng = np.random.default_rng(seed)
+    records, rejected = [], 0
+    t0 = loop.time()
+    next_t, i = 0.0, 0
+    while next_t < duration:
+        gap = t0 + next_t - loop.time()
+        if gap > 0:
+            await asyncio.sleep(gap)
+        size = SIZES[i % len(SIZES)]
+        lo = int(rng.integers(0, pool.shape[0] - size))
+        record = {"n": size, "t_submit": loop.time(), "t_done": None}
+        try:
+            fut = service.submit(pool[lo:lo + size])
+        except QueueFullError:
+            rejected += 1
+        else:
+            fut.add_done_callback(
+                lambda _f, record=record: record.__setitem__(
+                    "t_done", loop.time()))
+            records.append(record)
+        i += 1
+        next_t += 1.0 / qps  # open loop: the schedule never backs off
+    await service.drain()
+    return records, rejected, t0, loop.time()
+
+
+def run(
+    n: int = 8_000,
+    t: int = 2,
+    m: int = 2,
+    backend: str = "kmeans",
+    buckets=(32, 128, 512),
+    duration: float = 1.5,
+    qps_levels=(100, 400),
+    max_wait_ms: float = 2.0,
+    max_inflight: int = 4,
+    queue_depth: int = 100_000,
+    block: int = 0,
+    seed: int = 0,
+    mode: str = "quick",
+):
+    x, _ = gmm_sample(n, seed)
+    index = ClusterIndex.fit(jnp.asarray(x), t, m, backend, k=3,
+                             key=jax.random.PRNGKey(seed))
+    pool = gmm_sample(4096, seed + 1)[0]
+
+    rows = []
+    for qps in qps_levels:
+        fills = []
+        service = AsyncClusterService(
+            index, buckets=buckets, block=block,
+            max_wait=max_wait_ms / 1e3, max_inflight=max_inflight,
+            queue_depth=queue_depth,
+            observer=lambda rec: fills.append(rec.total / rec.bucket))
+        records, rejected, t0, t_end = asyncio.run(
+            _open_loop(service, pool, qps=qps, duration=duration,
+                       seed=seed + 2))
+        done = [r for r in records if r["t_done"] is not None]
+        lat_ms = np.array([(r["t_done"] - r["t_submit"]) * 1e3
+                           for r in done])
+        span = max(t_end - t0, 1e-9)
+        stats = service.stats
+        rows.append({
+            "offered_qps": int(qps),
+            "p50_ms": round(float(np.percentile(lat_ms, 50)), 3),
+            "p99_ms": round(float(np.percentile(lat_ms, 99)), 3),
+            "qps": round(len(done) / span, 1),
+            "points_per_sec": round(sum(r["n"] for r in done) / span),
+            "batches": stats["batches"],
+            "rejected": rejected,
+            "mean_batch_fill": round(float(np.mean(fills)), 3) if fills
+            else 0.0,
+        })
+
+    print_csv(
+        "serve_async",
+        [(r["offered_qps"], r["p50_ms"], r["p99_ms"], r["qps"],
+          r["points_per_sec"], r["batches"], r["mean_batch_fill"],
+          r["rejected"]) for r in rows],
+        "offered_qps,p50_ms,p99_ms,qps,points_per_sec,batches,"
+        "mean_batch_fill,rejected")
+
+    os.makedirs(RESULTS, exist_ok=True)
+    art = {
+        "name": "serve_async",
+        "mode": mode,
+        "fit": {"n": n, "t": t, "m": m, "backend": backend,
+                "n_prototypes": int(index.n_prototypes)},
+        "config": {"buckets": list(buckets), "duration": duration,
+                   "max_wait_ms": max_wait_ms, "max_inflight": max_inflight,
+                   "queue_depth": queue_depth, "sizes": list(SIZES)},
+        "rows": rows,
+    }
+    with open(os.path.join(RESULTS, "BENCH_serve_async.json"), "w") as f:
+        json.dump(art, f, indent=1)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=8_000)
+    ap.add_argument("--t", type=int, default=2)
+    ap.add_argument("--m", type=int, default=2)
+    ap.add_argument("--backend", choices=available_backends(),
+                    default="kmeans")
+    ap.add_argument("--duration", type=float, default=1.5,
+                    help="seconds of offered load per QPS level")
+    ap.add_argument("--qps", type=int, nargs="+", default=[100, 400],
+                    help="offered request rates to sweep")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--max-inflight", type=int, default=4)
+    ap.add_argument("--quick", action="store_true",
+                    help="run the registered quick-mode sweep")
+    args = ap.parse_args()
+    if args.quick:
+        run(**BENCH["quick"])
+    else:
+        run(n=args.n, t=args.t, m=args.m, backend=args.backend,
+            duration=args.duration, qps_levels=tuple(args.qps),
+            max_wait_ms=args.max_wait_ms, max_inflight=args.max_inflight,
+            mode="cli")
+
+
+if __name__ == "__main__":
+    main()

@@ -55,7 +55,8 @@ for _p in (_REPO, os.path.join(_REPO, "src")):
 RESULTS = os.path.join(os.path.dirname(os.path.abspath(__file__)), "results")
 
 #: row-identity fields (whichever exist in a row form its match key)
-KEY_FIELDS = ("n", "executor", "devices", "batch", "dataset", "t", "m")
+KEY_FIELDS = ("n", "executor", "devices", "batch", "dataset", "t", "m",
+              "offered_qps")
 
 #: metric -> (direction, default relative tolerance, absolute noise floor)
 #: direction "lower": fresh > base*(1+tol) regresses; "higher": fresh <
@@ -68,6 +69,12 @@ METRIC_RULES: Dict[str, Tuple[str, float, float]] = {
     "ms": ("lower", 0.5, 5.0),
     "points_per_sec": ("higher", 0.5, 0.0),
     "stream_points_per_sec": ("higher", 0.5, 0.0),
+    # async-serving latency percentiles (bench_serve_async): tails on a
+    # shared runner are noisy, so the defaults are loose but still < 1.0
+    # so the self-test's 2x injection trips the strict ratio > 1+tol check
+    "p50_ms": ("lower", 0.75, 1.0),
+    "p99_ms": ("lower", 0.9, 2.0),
+    "qps": ("higher", 0.5, 0.0),
     "peak_mb": ("lower", 0.25, 0.01),
     "stream_peak_mb": ("lower", 0.25, 0.01),
     "inmem_peak_mb": ("lower", 0.25, 0.01),
@@ -261,9 +268,15 @@ def gate_bench(
                 f.write(artifact_bytes)
 
 
+LATENCY_METRICS = ("p50_ms", "p99_ms")
+
+
 def self_test() -> int:
     """Prove the gate machinery works: identical artifacts must pass, an
-    injected 2x slowdown (+ halved throughput) must be flagged."""
+    injected 2x slowdown (+ halved throughput) must be flagged. Artifacts
+    carrying serving-latency percentiles get a second, latency-only
+    injection — a tail-latency regression must be caught even when
+    throughput is unchanged."""
     candidates = sorted(
         p for p in (os.path.join(RESULTS, f) for f in os.listdir(RESULTS)
                     if f.startswith("BENCH_") and f.endswith(".json"))
@@ -287,16 +300,34 @@ def self_test() -> int:
               f"{len(flagged['regressions'])} regressions "
               f"({gated_cells} cells) {status}")
         failures += 0 if ok else 1
+        has_latency = any(
+            isinstance(r.get(m), (int, float))
+            for r in baseline.get("rows", []) for m in LATENCY_METRICS)
+        if has_latency:
+            tail = compare(baseline, inject_slowdown(
+                baseline, factor=3.0, metrics=list(LATENCY_METRICS)))
+            lat_ok = any(f["metric"] in LATENCY_METRICS
+                         for f in tail["regressions"])
+            lat_status = "ok" if lat_ok else "FAIL"
+            print(f"# self-test {os.path.basename(path)}: latency-only "
+                  f"3x tail injection -> "
+                  f"{len(tail['regressions'])} regressions {lat_status}")
+            failures += 0 if lat_ok else 1
     return 1 if failures else 0
 
 
-def inject_slowdown(artifact: dict, factor: float = 2.0) -> dict:
-    """Copy of ``artifact`` with every gated metric degraded by
-    ``factor`` (times/memory multiplied, throughput divided) — the
-    synthetic regression the self-test feeds the comparator."""
+def inject_slowdown(artifact: dict, factor: float = 2.0,
+                    metrics: Optional[List[str]] = None) -> dict:
+    """Copy of ``artifact`` with gated metrics degraded by ``factor``
+    (times/memory multiplied, throughput divided) — the synthetic
+    regression the self-test feeds the comparator. ``metrics`` restricts
+    the injection to a subset (e.g. latency-only), leaving the rest
+    untouched."""
     out = copy.deepcopy(artifact)
     for row in out.get("rows", []):
         for metric, (direction, _, _) in METRIC_RULES.items():
+            if metrics is not None and metric not in metrics:
+                continue
             v = row.get(metric)
             if isinstance(v, (int, float)):
                 row[metric] = v * factor if direction == "lower" else v / factor

@@ -101,6 +101,50 @@ class ClusterIndex(NamedTuple):
     def dim(self) -> int:
         return self.protos.shape[1]
 
+    @property
+    def n_valid(self) -> int:
+        """Count of real (non-padding) prototypes. Forces a device sync —
+        a host-side inspection helper, not for use inside traced code."""
+        return int(jnp.sum(self.proto_valid))
+
+    def check_servable(self, expect_dim: Optional[int] = None
+                       ) -> "ClusterIndex":
+        """Validate the artifact's internal consistency before serving.
+
+        The serve front-ends install indexes atomically (DESIGN.md §15):
+        a hot-swap must never expose a half-installed artifact, so this
+        runs *before* the swap and raises ``ValueError`` on any
+        structural inconsistency — mismatched array lengths, a
+        non-2D prototype buffer, an out-of-range valid count, or (when
+        ``expect_dim`` is given, e.g. the dim the tenant's live traffic
+        already uses) a feature-dimension change. Returns ``self`` so
+        installs can chain. A zero-valid index is structurally fine
+        (assign labels everything -1, exercised in tier-1) — that is a
+        policy decision for the installer, not a broken artifact.
+        """
+        if self.protos.ndim != 2:
+            raise ValueError(
+                f"servable index needs (n_max, d) prototypes, got shape "
+                f"{tuple(self.protos.shape)}")
+        n_max = self.protos.shape[0]
+        for name in ("proto_mass", "proto_valid", "proto_labels"):
+            arr = getattr(self, name)
+            if arr.ndim != 1 or arr.shape[0] != n_max:
+                raise ValueError(
+                    f"servable index is inconsistent: {name} has shape "
+                    f"{tuple(arr.shape)}, want ({n_max},) to match protos")
+        n = int(self.n_prototypes)
+        if not 0 <= n <= n_max:
+            raise ValueError(
+                f"servable index is inconsistent: n_prototypes={n} outside "
+                f"[0, {n_max}]")
+        if expect_dim is not None and self.dim != expect_dim:
+            raise ValueError(
+                f"index dim {self.dim} != expected dim {expect_dim} "
+                f"(a tenant's feature dimension cannot change across "
+                f"hot-swapped versions)")
+        return self
+
     def replicate(self, mesh) -> "ClusterIndex":
         """A copy of the index replicated across every device of ``mesh``
         (axis-independent — the index is small). Placing it once up front,

@@ -79,6 +79,19 @@ class RuntimeConfig:
         — "off" (default: every dispatch constant exactly as hand-picked),
         "cached" (consult the persistent tuning cache, fall back to the
         constants on a miss), "onthefly" (measure + persist on a miss).
+      serve_queue_depth: admission-control bound for the async serve
+        front-end (:class:`repro.serve.AsyncClusterService`, DESIGN.md
+        §15): maximum admitted-but-undispatched *points* across all
+        tenants; a submit that would exceed it is rejected with
+        ``QueueFullError`` instead of queueing unboundedly.
+      serve_max_inflight: maximum concurrently dispatched (not yet
+        completed) batches of the async serve front-end.
+      serve_max_wait_ms: continuous-batching flush deadline — no admitted
+        request sits undispatched longer than this many milliseconds
+        waiting for its batch to fill (loop-time units; the simulated
+        harness interprets it as virtual ms).
+      serve_default_tenant: tenant a request routes to when the caller
+        names none; also the tenant a bare single-index service hosts.
     """
 
     impl: str = "auto"
@@ -94,6 +107,10 @@ class RuntimeConfig:
     reservoir_n: int = 0
     executor: str = "auto"
     tune: str = "off"
+    serve_queue_depth: int = 8192
+    serve_max_inflight: int = 4
+    serve_max_wait_ms: float = 5.0
+    serve_default_tenant: str = "default"
 
     def __post_init__(self) -> None:
         if self.impl not in _IMPLS:
@@ -113,6 +130,15 @@ class RuntimeConfig:
         if self.tune not in _TUNE_MODES:
             raise ValueError(
                 f"tune must be one of {_TUNE_MODES}, got {self.tune!r}")
+        for name in ("serve_queue_depth", "serve_max_inflight"):
+            if getattr(self, name) < 1:
+                raise ValueError(
+                    f"{name} must be >= 1, got {getattr(self, name)}")
+        if self.serve_max_wait_ms < 0:
+            raise ValueError(f"serve_max_wait_ms must be >= 0, "
+                             f"got {self.serve_max_wait_ms}")
+        if not self.serve_default_tenant:
+            raise ValueError("serve_default_tenant must be non-empty")
 
     def replace(self, **overrides: Any) -> "RuntimeConfig":
         return dataclasses.replace(self, **overrides)
@@ -140,6 +166,16 @@ class RuntimeConfig:
         rather than hit programs compiled under the previous winners
         (DESIGN.md §14). With ``tune="off"`` the epoch is excluded, so
         cache churn costs untuned callers nothing.
+
+        The ``serve_*`` knobs participate for the same completeness
+        reason as ``executor``: the async serve front-end (DESIGN.md §15)
+        freezes its admission/batch-formation plan from them at
+        construction, and downstream consumers treat ``dispatch_key()``
+        as a fingerprint of *every* behaviour-determining config field —
+        a serving reconfiguration must never alias the previous one.
+        They change only at deployment reconfiguration, so the retrace
+        cost is nil. ``serve_default_tenant`` is excluded (pure host-side
+        routing name, resolved per call like ``mesh``/``axis_name``).
         """
         if self.tune == "off":
             tune_state: object = "off"
@@ -149,7 +185,8 @@ class RuntimeConfig:
             tune_state = (self.tune, cache_epoch())
         return (self.impl, self.interpret, self.knn_block, self.block_q,
                 self.block_k, self.n_blocks, self.chunk_n, self.reservoir_n,
-                self.executor, tune_state)
+                self.executor, tune_state, self.serve_queue_depth,
+                self.serve_max_inflight, self.serve_max_wait_ms)
 
 
 def _parse_bool(s: str) -> bool:
@@ -170,6 +207,10 @@ _ENV_FIELDS = {
     "REPRO_RESERVOIR_N": ("reservoir_n", int),
     "REPRO_EXECUTOR": ("executor", str),
     "REPRO_TUNE": ("tune", str),
+    "REPRO_SERVE_QUEUE_DEPTH": ("serve_queue_depth", int),
+    "REPRO_SERVE_MAX_INFLIGHT": ("serve_max_inflight", int),
+    "REPRO_SERVE_MAX_WAIT_MS": ("serve_max_wait_ms", float),
+    "REPRO_SERVE_DEFAULT_TENANT": ("serve_default_tenant", str),
 }
 
 

@@ -1,4 +1,15 @@
-"""Serving: batched LM engine, IHTC KV-cache prototype compression, and the
-micro-batched online cluster-assignment service."""
+"""Serving: batched LM engine, IHTC KV-cache prototype compression, the
+micro-batched online cluster-assignment service, and the async
+continuous-batching front-end (DESIGN.md §11/§15)."""
+from repro.serve.async_service import (  # noqa: F401
+    AsyncClusterService,
+    AsyncioServeLoop,
+    BatchRecord,
+    InlineExecutor,
+    QueueFullError,
+    ServeError,
+    ServiceClosedError,
+    UnknownTenantError,
+)
 from repro.serve.cluster_service import ClusterService  # noqa: F401
 from repro.serve.engine import ServeConfig, ServeEngine  # noqa: F401

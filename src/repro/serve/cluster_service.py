@@ -60,16 +60,25 @@ class ClusterService:
         so the serving path is one line from any fit."""
         return cls(result.to_index(), **service_kwargs)
 
-    def _bucket_for(self, n: int) -> int:
+    def bucket_for(self, n: int) -> int:
+        """The bucket shape an ``n``-row batch pads to (top bucket if it
+        exceeds the ladder — such batches chunk through it)."""
         for b in self.buckets:
             if n <= b:
                 return b
         return self.buckets[-1]
 
-    def _assign_bucket(self, queries: jax.Array) -> jax.Array:
-        """Pad one ≤-top-bucket batch to its bucket shape and label it."""
+    def assign_bucket(self, queries: jax.Array) -> jax.Array:
+        """Pad one ≤-top-bucket batch to its bucket shape and label it.
+
+        This is the single compiled-program hop both front-ends share:
+        :meth:`assign` chunks oversized requests through it, and the async
+        continuous-batching scheduler (:mod:`repro.serve.async_service`)
+        dispatches its coalesced batches here, so every served shape comes
+        from one warm ladder.
+        """
         n = queries.shape[0]
-        b = self._bucket_for(n)
+        b = self.bucket_for(n)
         padded = jnp.pad(queries, ((0, b - n), (0, 0)))
         labels = self.index.assign(padded, impl=self.impl, block=self.block)
         self._stats[f"bucket_{b}"] += 1
@@ -85,9 +94,9 @@ class ClusterService:
             return jnp.zeros((0,), jnp.int32)
         top = self.buckets[-1]
         if n <= top:
-            return self._assign_bucket(queries)
+            return self.assign_bucket(queries)
         parts = [
-            self._assign_bucket(queries[lo:lo + top])
+            self.assign_bucket(queries[lo:lo + top])
             for lo in range(0, n, top)
         ]
         return jnp.concatenate(parts)
@@ -95,19 +104,32 @@ class ClusterService:
     def warmup(self) -> None:
         """Compile every bucket shape ahead of traffic. With a mesh in the
         runtime config, also replicates the index onto it once, so per-
-        request assigns skip the host→device index transfer."""
+        request assigns skip the host→device index transfer.
+
+        Warmup is not traffic: it calls ``index.assign`` directly (never
+        :meth:`assign_bucket`) and ends by zeroing the counters, so
+        neither the warmup sweeps themselves nor any pre-warmup probe
+        requests (deployment health checks routinely fire a few) pollute
+        the steady-state throughput the stats report.
+        """
         cfg = runtime.active()
         if cfg.mesh is not None and not self.index._is_replicated_on(cfg.mesh):
             self.index = self.index.replicate(cfg.mesh)
         d = self.index.dim
-        # calls index.assign directly (not _assign_bucket), so the traffic
-        # counters are untouched by warmup
         for b in self.buckets:
             jax.block_until_ready(
                 self.index.assign(jnp.zeros((b, d), self.index.protos.dtype),
                                   impl=self.impl, block=self.block))
+        self.reset_stats()
+
+    def reset_stats(self) -> None:
+        """Zero every traffic counter (requests/points/chunks/buckets)."""
+        for k in self._stats:
+            self._stats[k] = 0
 
     @property
     def stats(self) -> Dict[str, int]:
-        """Counters: requests, points, chunks, per-bucket dispatches."""
+        """Counters: requests, points, chunks, per-bucket dispatches
+        (since construction, the last :meth:`warmup`, or the last
+        :meth:`reset_stats`, whichever is most recent)."""
         return dict(self._stats)

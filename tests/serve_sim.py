@@ -1,0 +1,361 @@
+"""Simulated-time harness for the async serve scheduler (DESIGN.md §15).
+
+The scheduler in ``repro.serve.async_service`` only touches time through
+three injected seams (``loop.now`` / ``loop.call_later`` /
+``loop.create_future``) plus an ``executor.submit``. This module provides
+the virtual-time bindings: a deterministic event loop (:class:`SimLoop`)
+whose clock advances exactly to the next scheduled callback, futures with
+asyncio semantics but synchronous callbacks (:class:`SimFuture`), and an
+executor that completes batches after a configurable *virtual* service
+time (:class:`SimExecutor`). Driving the real scheduler through them runs
+hours of traffic in milliseconds of wall time with **zero real sleeps** —
+the tier-1 determinism contract — while the identical scheduler code runs
+under real asyncio in production and in ``benchmarks/bench_serve_async.py``.
+
+Also here: arrival-trace generators (bursty / trickle / adversarial), the
+``run_trace`` driver, and :class:`BatchInvariantChecker`, an observer that
+proves the batch-fill invariants (bounded wait, bounded batch, FIFO within
+tenant, one index version per batch) over any recorded schedule.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import heapq
+import itertools
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+
+class SimFuture:
+    """Future with asyncio's state machine, minus the event loop: done
+    callbacks run synchronously at completion (the sim loop is single-
+    threaded and re-entrancy is prevented by the scheduler's own
+    call_later(0) completion hop, so eager callbacks keep event order
+    deterministic)."""
+
+    _PENDING, _DONE, _CANCELLED = "pending", "done", "cancelled"
+
+    def __init__(self):
+        self._state = self._PENDING
+        self._result = None
+        self._exception = None
+        self._callbacks: List[Callable] = []
+
+    def done(self) -> bool:
+        return self._state != self._PENDING
+
+    def cancelled(self) -> bool:
+        return self._state == self._CANCELLED
+
+    def cancel(self) -> bool:
+        if self.done():
+            return False
+        self._state = self._CANCELLED
+        self._run_callbacks()
+        return True
+
+    def set_result(self, result) -> None:
+        if self.done():
+            raise RuntimeError(f"future already {self._state}")
+        self._result = result
+        self._state = self._DONE
+        self._run_callbacks()
+
+    def set_exception(self, exc: BaseException) -> None:
+        if self.done():
+            raise RuntimeError(f"future already {self._state}")
+        self._exception = exc
+        self._state = self._DONE
+        self._run_callbacks()
+
+    def result(self):
+        if self._state == self._CANCELLED:
+            raise asyncio.CancelledError()
+        if self._state == self._PENDING:
+            raise RuntimeError("result not ready (sim loop not drained?)")
+        if self._exception is not None:
+            raise self._exception
+        return self._result
+
+    def exception(self) -> Optional[BaseException]:
+        if self._state == self._CANCELLED:
+            raise asyncio.CancelledError()
+        if self._state == self._PENDING:
+            raise RuntimeError("result not ready (sim loop not drained?)")
+        return self._exception
+
+    def add_done_callback(self, fn: Callable) -> None:
+        if self.done():
+            fn(self)
+        else:
+            self._callbacks.append(fn)
+
+    def _run_callbacks(self) -> None:
+        callbacks, self._callbacks = self._callbacks, []
+        for fn in callbacks:
+            fn(self)
+
+
+class SimHandle:
+    """What ``call_later`` returns: a cancellable timer handle."""
+
+    __slots__ = ("when", "callback", "cancelled")
+
+    def __init__(self, when: float, callback: Callable[[], None]):
+        self.when = when
+        self.callback = callback
+        self.cancelled = False
+
+    def cancel(self) -> None:
+        self.cancelled = True
+
+
+class SimLoop:
+    """Deterministic virtual-time event loop.
+
+    Time is whatever unit the test says it is (the suite uses "virtual
+    ms"). ``call_later`` pushes onto a (time, seq) heap; :meth:`run`
+    pops in order, advancing :meth:`now` exactly to each callback's
+    scheduled instant — identical inputs replay identical schedules,
+    and nothing ever touches the wall clock.
+    """
+
+    def __init__(self, start: float = 0.0):
+        self._now = float(start)
+        self._seq = itertools.count()
+        self._heap: List[Tuple[float, int, SimHandle]] = []
+
+    def now(self) -> float:
+        return self._now
+
+    def call_later(self, delay: float, callback: Callable[[], None]
+                   ) -> SimHandle:
+        handle = SimHandle(self._now + max(0.0, float(delay)), callback)
+        heapq.heappush(self._heap, (handle.when, next(self._seq), handle))
+        return handle
+
+    def create_future(self) -> SimFuture:
+        return SimFuture()
+
+    def pending(self) -> int:
+        """Live (uncancelled) scheduled callbacks."""
+        return sum(1 for _, _, h in self._heap if not h.cancelled)
+
+    def run(self, until: Optional[float] = None,
+            max_events: int = 1_000_000) -> int:
+        """Run every callback scheduled at time <= ``until`` (all of them
+        when ``until`` is None); returns the number executed. Afterwards
+        ``now`` is the last callback's instant — or exactly ``until``
+        when one was given, so tests can advance the clock into a known
+        quiet gap."""
+        executed = 0
+        while self._heap:
+            when, _, handle = self._heap[0]
+            if until is not None and when > until:
+                break
+            heapq.heappop(self._heap)
+            if handle.cancelled:
+                continue
+            self._now = when
+            handle.callback()
+            executed += 1
+            if executed > max_events:
+                raise RuntimeError(
+                    f"sim loop still busy after {max_events} events — "
+                    f"scheduler livelock?")
+        if until is not None and until > self._now:
+            self._now = float(until)
+        return executed
+
+
+class SimExecutor:
+    """Virtual-time batch executor: ``fn`` runs (and ``on_done`` fires)
+    ``service_time`` after submit, so batches are genuinely *in flight*
+    across virtual time — cancellation, max-inflight saturation and
+    drain-while-busy all become schedulable scenarios. ``fail_when``
+    (predicate over the 0-based batch ordinal) injects execution faults.
+    """
+
+    def __init__(self, loop: SimLoop, service_time: float = 1.0,
+                 fail_when: Optional[Callable[[int], bool]] = None):
+        self.loop = loop
+        self.service_time = service_time
+        self.fail_when = fail_when
+        self.submitted = 0
+        self.inflight = 0
+        self.max_inflight_seen = 0
+
+    def submit(self, fn, on_done) -> None:
+        ordinal = self.submitted
+        self.submitted += 1
+        self.inflight += 1
+        self.max_inflight_seen = max(self.max_inflight_seen, self.inflight)
+
+        def complete():
+            self.inflight -= 1
+            if self.fail_when is not None and self.fail_when(ordinal):
+                on_done(None, RuntimeError(f"injected batch fault "
+                                           f"(ordinal {ordinal})"))
+                return
+            try:
+                result, exc = fn(), None
+            except Exception as e:
+                result, exc = None, e
+            on_done(result, exc)
+
+        self.loop.call_later(self.service_time, complete)
+
+
+# ----------------------------------------------------------------------
+# arrival traces
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """One arrival as the load driver saw it: what was sent, what came
+    back, and when (virtual clock)."""
+
+    t_arrival: float
+    tenant: Optional[str]
+    queries: np.ndarray
+    future: object = None
+    error: Optional[BaseException] = None
+    t_done: Optional[float] = None
+
+
+def run_trace(service, loop: SimLoop, arrivals,
+              run: bool = True) -> List[RequestRecord]:
+    """Submit ``arrivals`` — an iterable of ``(t, tenant, queries)`` in
+    virtual time — through ``service`` and (by default) run the loop dry.
+    Admission rejections land in ``record.error``; completions stamp
+    ``record.t_done`` with the virtual instant the labels materialized."""
+    records = []
+    for t, tenant, queries in arrivals:
+        record = RequestRecord(t_arrival=float(t), tenant=tenant,
+                               queries=np.asarray(queries))
+
+        def fire(record=record):
+            try:
+                fut = service.submit(record.queries, tenant=record.tenant)
+            except Exception as e:
+                record.error = e
+                return
+            record.future = fut
+            fut.add_done_callback(
+                lambda _f, record=record: setattr(record, "t_done",
+                                                  loop.now()))
+
+        loop.call_later(record.t_arrival - loop.now(), fire)
+        records.append(record)
+    if run:
+        loop.run()
+    return records
+
+
+def trickle_trace(n_requests: int, gap: float, size: int,
+                  tenant: Optional[str] = None, start: float = 0.0):
+    """One lonely request per ``gap`` — with gap > max_wait every batch is
+    a deadline flush, never a fill."""
+    return [(start + i * gap, tenant, size) for i in range(n_requests)]
+
+
+def bursty_trace(n_bursts: int, burst_size: int, sizes, gap: float,
+                 tenant: Optional[str] = None, start: float = 0.0):
+    """``n_bursts`` instantaneous bursts of ``burst_size`` arrivals (sizes
+    cycled from ``sizes``), ``gap`` apart — exercises batch fill + the
+    FIFO packing path."""
+    sizes = list(sizes)
+    return [(start + b * gap, tenant, sizes[(b * burst_size + i)
+                                            % len(sizes)])
+            for b in range(n_bursts) for i in range(burst_size)]
+
+
+def adversarial_trace(rng: np.random.Generator, n_requests: int,
+                      capacity: int, max_wait: float, tenants,
+                      t_span: float = 50.0):
+    """Randomized nastiness: sizes that never pack evenly (primes, exact
+    capacity, capacity+1 so requests split into segments, zeros), arrival
+    times clustered right around deadline multiples, tenants interleaved."""
+    tenants = list(tenants)
+    sizes = [1, 2, 3, 5, 7, 11, 13, capacity - 1, capacity, capacity + 1,
+             2 * capacity + 3, 0]
+    out = []
+    for _ in range(n_requests):
+        base = float(rng.uniform(0.0, t_span))
+        # half the arrivals land a hair before/after a deadline boundary
+        if rng.random() < 0.5 and max_wait > 0:
+            k = max(1.0, base // max_wait)
+            base = k * max_wait + float(rng.uniform(-1e-3, 1e-3))
+        out.append((base, tenants[int(rng.integers(len(tenants)))],
+                    int(sizes[int(rng.integers(len(sizes)))])))
+    out.sort(key=lambda a: a[0])
+    return out
+
+
+def materialize(trace, data_fn):
+    """Turn ``(t, tenant, n)`` size traces into ``(t, tenant, queries)``
+    arrivals via ``data_fn(n) -> (n, d) array``."""
+    return [(t, tenant, data_fn(n)) for t, tenant, n in trace]
+
+
+# ----------------------------------------------------------------------
+# invariants
+
+
+class BatchInvariantChecker:
+    """Observer proving the scheduler's batch-fill invariants over a run.
+
+    Install as ``AsyncClusterService(..., observer=checker)``; call
+    :meth:`check` after the loop runs dry. Asserts, per recorded batch:
+
+      * bounded batch — total rows <= capacity and the padded bucket is a
+        ladder member >= total;
+      * bounded wait — no segment dispatched later than ``max_wait``
+        after its request's admission (only sound when the run never
+        saturated ``max_inflight``; pass ``check_wait=False`` for
+        saturation scenarios, where eligibility — not dispatch — is
+        bounded);
+      * FIFO within tenant — request ids never go backwards across a
+        tenant's dispatch sequence;
+      * version purity — every batch serves exactly one installed index
+        version (enforced structurally by BatchRecord, asserted against
+        ``expect_versions`` when given).
+    """
+
+    def __init__(self, buckets, max_wait: float, *, check_wait: bool = True,
+                 expect_versions=None):
+        self.buckets = tuple(sorted(buckets))
+        self.capacity = self.buckets[-1]
+        self.max_wait = max_wait
+        self.check_wait = check_wait
+        self.expect_versions = expect_versions
+        self.records = []
+
+    def __call__(self, record) -> None:
+        self.records.append(record)
+
+    def check(self) -> None:
+        last_rid = {}
+        for rec in self.records:
+            assert rec.total <= self.capacity, (
+                f"batch of {rec.total} rows exceeds capacity "
+                f"{self.capacity}: {rec}")
+            assert rec.bucket in self.buckets and rec.bucket >= rec.total, (
+                f"batch padded to non-ladder bucket: {rec}")
+            assert rec.total == sum(n for _, n, _ in rec.segments)
+            if self.check_wait:
+                for rid, _n, t_admit in rec.segments:
+                    waited = rec.t_dispatch - t_admit
+                    assert waited <= self.max_wait + 1e-9, (
+                        f"request {rid} waited {waited} > max_wait "
+                        f"{self.max_wait} (virtual) before dispatch: {rec}")
+            for rid, _n, _t in rec.segments:
+                assert rid >= last_rid.get(rec.tenant, -1), (
+                    f"FIFO violated for tenant {rec.tenant!r}: request "
+                    f"{rid} dispatched after {last_rid[rec.tenant]}")
+                last_rid[rec.tenant] = rid
+            if self.expect_versions is not None:
+                assert rec.version in self.expect_versions, (
+                    f"batch served unexpected version: {rec}")

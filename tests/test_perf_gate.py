@@ -103,6 +103,59 @@ def test_row_matching_not_positional(baseline):
     assert len(gate.compare(baseline, dropped)["missing"]) == 1
 
 
+SERVE_ASYNC = os.path.join(RESULTS, "BENCH_serve_async.json")
+
+
+@pytest.fixture
+def serve_async_baseline():
+    with open(SERVE_ASYNC) as f:
+        return json.load(f)
+
+
+def test_serve_async_rows_are_gated(serve_async_baseline):
+    """The committed serve_async artifact must expose gateable latency +
+    throughput cells, keyed on offered_qps (not position)."""
+    report = gate.compare(serve_async_baseline, serve_async_baseline)
+    assert report["regressions"] == [] and report["checked"] > 0
+    keys = [gate.row_key(r) for r in serve_async_baseline["rows"]]
+    assert all(("offered_qps", r["offered_qps"]) in k
+               for r, k in zip(serve_async_baseline["rows"], keys))
+    assert len(set(keys)) == len(keys)
+    # floors must sit below the recorded baselines or latency cells
+    # silently drop out of the gate
+    for row in serve_async_baseline["rows"]:
+        for m in ("p50_ms", "p99_ms"):
+            assert row[m] > gate.METRIC_RULES[m][2], (m, row)
+
+
+def test_latency_only_regression_is_flagged(serve_async_baseline):
+    """A pure tail-latency regression — throughput untouched — must trip
+    the gate on the p50/p99 metrics alone."""
+    slowed = gate.inject_slowdown(serve_async_baseline, factor=3.0,
+                                  metrics=["p50_ms", "p99_ms"])
+    for base_row, slow_row in zip(serve_async_baseline["rows"],
+                                  slowed["rows"]):
+        assert slow_row["qps"] == base_row["qps"]  # metrics= filtered
+    report = gate.compare(serve_async_baseline, slowed)
+    metrics = {f["metric"] for f in report["regressions"]}
+    assert metrics and metrics <= {"p50_ms", "p99_ms"}
+
+
+def test_throughput_collapse_is_flagged(serve_async_baseline):
+    dropped = gate.inject_slowdown(serve_async_baseline, factor=2.5,
+                                   metrics=["qps"])
+    report = gate.compare(serve_async_baseline, dropped)
+    assert {f["metric"] for f in report["regressions"]} == {"qps"}
+
+
+def test_self_test_covers_latency_injection(capsys):
+    """--self-test must run (and pass) the latency-only injection leg on
+    the serve_async artifact."""
+    assert gate.main(["--self-test"]) == 0
+    out = capsys.readouterr().out
+    assert "latency-only" in out
+
+
 def test_median_artifact_merges_repeats(baseline):
     runs = [copy.deepcopy(baseline) for _ in range(3)]
     key0 = gate.row_key(baseline["rows"][0])

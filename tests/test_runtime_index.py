@@ -360,3 +360,75 @@ def test_knn_graph_k_exceeding_valid_count(rng):
         assert np.isinf(d[row, 2:]).all()
     with pytest.raises(ValueError, match="exceeds the number of rows"):
         knn_graph(x, 9)
+
+
+# ------------------------------------------------- serve config + warmup
+
+
+def test_serve_config_knobs_env_validation_and_dispatch_key():
+    """The async serve front-end's knobs (DESIGN.md §15) live in the
+    runtime config: REPRO_SERVE_* env overrides parse, invalid values
+    fail at construction, and the numeric knobs participate in
+    dispatch_key() (a serving reconfiguration never aliases the previous
+    one) while the routing name does not."""
+    cfg = runtime.config_from_env(
+        {"REPRO_SERVE_QUEUE_DEPTH": "256", "REPRO_SERVE_MAX_INFLIGHT": "2",
+         "REPRO_SERVE_MAX_WAIT_MS": "12.5",
+         "REPRO_SERVE_DEFAULT_TENANT": "prod"})
+    assert cfg.serve_queue_depth == 256
+    assert cfg.serve_max_inflight == 2
+    assert cfg.serve_max_wait_ms == 12.5
+    assert cfg.serve_default_tenant == "prod"
+    for bad in (dict(serve_queue_depth=0), dict(serve_max_inflight=0),
+                dict(serve_max_wait_ms=-1.0), dict(serve_default_tenant="")):
+        with pytest.raises(ValueError):
+            runtime.RuntimeConfig(**bad)
+    base = runtime.RuntimeConfig()
+    assert base.replace(serve_queue_depth=99).dispatch_key() \
+        != base.dispatch_key()
+    assert base.replace(serve_max_inflight=9).dispatch_key() \
+        != base.dispatch_key()
+    assert base.replace(serve_max_wait_ms=1.0).dispatch_key() \
+        != base.dispatch_key()
+    assert base.replace(serve_default_tenant="x").dispatch_key() \
+        == base.dispatch_key()
+
+
+def test_cluster_service_warmup_excludes_prior_traffic_from_stats(rng):
+    """Regression: warmup() must leave the stats counters at zero even
+    when probe traffic preceded it (deployment health checks routinely
+    fire a few requests before the warmup sweep) — otherwise the
+    warmup-phase traffic pollutes reported steady-state throughput."""
+    x, _ = _blobs(rng, n_per=20)
+    index = ClusterIndex.fit(x, 2, 1, "kmeans", k=3,
+                             key=jax.random.PRNGKey(0))
+    svc = ClusterService(index, buckets=(8, 32))
+    svc.assign(x[:5])   # pre-warmup probe
+    svc.assign(x[:11])
+    assert svc.stats["requests"] == 2
+    svc.warmup()
+    st = svc.stats
+    assert all(v == 0 for v in st.values()), st  # warmup is not traffic
+    svc.assign(x[:3])   # steady state counts from zero
+    st = svc.stats
+    assert (st["requests"], st["points"], st["chunks"]) == (1, 3, 1)
+    svc.reset_stats()
+    assert all(v == 0 for v in svc.stats.values())
+
+
+def test_index_check_servable_and_n_valid(rng):
+    x, _ = _blobs(rng, n_per=20)
+    index = ClusterIndex.fit(x, 2, 1, "kmeans", k=3,
+                             key=jax.random.PRNGKey(1))
+    assert index.check_servable() is index
+    assert index.check_servable(expect_dim=2) is index
+    assert 0 < index.n_valid <= index.protos.shape[0]
+    with pytest.raises(ValueError, match="feature dimension"):
+        index.check_servable(expect_dim=5)
+    torn = index._replace(proto_labels=index.proto_labels[:2])
+    with pytest.raises(ValueError, match="proto_labels"):
+        torn.check_servable()
+    bad_count = index._replace(
+        n_prototypes=jnp.asarray(10**6, jnp.int32))
+    with pytest.raises(ValueError, match="n_prototypes"):
+        bad_count.check_servable()
