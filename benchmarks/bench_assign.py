@@ -1,0 +1,180 @@
+"""Serve-side assign hot path: composed dense vs the fused streaming
+family (DESIGN.md §16).
+
+Sweeps n_protos x n_queries x impl over ``ClusterIndex.assign`` on a
+well-separated synthetic index (so the quantized shortlist+rescore
+variants must agree with the exact path label-for-label) and reports
+
+  * ``p50_ms``          median assign latency (compiles excluded),
+  * ``queries_per_sec`` nq / p50,
+  * ``peak_mb``         the *working set* of the impl's distance stage —
+    code-anchored accounting, not a profiler read: jit temporaries are
+    invisible to ``live_mb()``, while these formulas follow directly from
+    the buffers each path materializes (docs/BENCHMARKS.md):
+
+      ref         p*d*4  + nq*p*4          (prototypes + dense distances)
+      fused       p*d*4  + nq*bk*4         (distance tile never hits HBM)
+      fused_bf16  p*d*2  + nq*bk*4 + nq*r*d*4   (+ f32 rescore gather)
+      fused_int8  p*d*1  + nq*bk*4 + nq*r*d*4
+
+  * ``label_agreement`` fraction of labels matching ``impl="ref"``
+    (1.0 for fused; the quantized rows are the accuracy evidence).
+
+Writes benchmarks/results/BENCH_assign.json; gated by gate.py (rows keyed
+on n_protos/n_queries/impl).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import sys
+import time
+
+# direct-run support: repo root for the benchmarks package, src/ for repro
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_REPO, os.path.join(_REPO, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import print_csv
+from repro import runtime
+from repro.core.index import ClusterIndex
+from repro.kernels.fused_assign import RESCORE_K
+
+RESULTS = os.path.join(os.path.dirname(os.path.abspath(__file__)), "results")
+
+IMPLS = ("ref", "fused", "fused_bf16", "fused_int8")
+
+# benchmark-registry entry (benchmarks/run.py --bench assign)
+BENCH = {
+    "name": "assign",
+    "artifact": "BENCH_assign.json",
+    "summary": ("impl", "queries_per_sec"),
+    # quick keeps an 8k-prototype bucket: the committed baseline must
+    # show fused beating the composed dense path where it matters
+    "quick": dict(protos=(2048, 8192), queries=(256, 2048), iters=5,
+                  mode="quick"),
+    "full": lambda mx: dict(protos=(2048, 8192, 32768), queries=(256, 2048),
+                            iters=10, mode="full"),
+}
+
+
+def _index(p: int, d: int, c: int, seed: int) -> ClusterIndex:
+    """Well-separated c-center index (centers 50 sigma apart, prototype
+    jitter 0.05): the quantized variants' 8-bit shortlist has orders of
+    magnitude more resolution than the inter-center gaps, so any label
+    disagreement vs the exact path is a bug, not noise."""
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(c, d)) * 50.0
+    comp = np.arange(p) % c
+    protos = centers[comp] + rng.normal(size=(p, d)) * 0.05
+    return ClusterIndex(
+        protos=jnp.asarray(protos, jnp.float32),
+        proto_mass=jnp.ones((p,), jnp.float32),
+        proto_valid=jnp.ones((p,), bool),
+        proto_labels=jnp.asarray(comp, jnp.int32),
+        n_prototypes=jnp.asarray(p, jnp.int32),
+    ).with_packed_protos()
+
+
+def _queries(nq: int, d: int, c: int, seed: int) -> jnp.ndarray:
+    rng = np.random.default_rng(seed + 1)
+    centers = np.random.default_rng(seed).normal(size=(c, d)) * 50.0
+    q = centers[rng.integers(0, c, size=nq)] + rng.normal(size=(nq, d)) * 0.05
+    return jnp.asarray(q, jnp.float32)
+
+
+def working_set_mb(impl: str, p: int, nq: int, d: int, bk: int) -> float:
+    """Distance-stage working set of one assign call, in MB (formulas in
+    the module docstring — keyed to the buffers each path materializes)."""
+    r = min(RESCORE_K, p)
+    if impl == "ref":
+        return (p * d * 4 + nq * p * 4) / 1e6
+    if impl == "fused":
+        return (p * d * 4 + nq * bk * 4) / 1e6
+    if impl == "fused_bf16":
+        return (p * d * 2 + nq * bk * 4 + nq * r * d * 4) / 1e6
+    if impl == "fused_int8":
+        return (p * d * 1 + nq * bk * 4 + nq * r * d * 4) / 1e6
+    raise ValueError(impl)
+
+
+def run(
+    protos=(2048, 8192, 32768),
+    queries=(256, 2048),
+    d: int = 8,
+    c: int = 16,
+    iters: int = 10,
+    seed: int = 0,
+    mode: str = "quick",
+):
+    bk = runtime.active().block_k
+    rows = []
+    for p in protos:
+        idx = _index(p, d, c, seed)
+        for nq in queries:
+            q = _queries(nq, d, c, seed)
+            ref_labels = np.asarray(idx.assign(q, impl="ref"))
+            for impl in IMPLS:
+                labels = idx.assign(q, impl=impl)
+                jax.block_until_ready(labels)  # compile excluded
+                times = []
+                for _ in range(iters):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(idx.assign(q, impl=impl))
+                    times.append(time.perf_counter() - t0)
+                p50 = statistics.median(times)
+                agree = float((np.asarray(labels) == ref_labels).mean())
+                rows.append({
+                    "n_protos": p,
+                    "n_queries": nq,
+                    "impl": impl,
+                    "p50_ms": round(p50 * 1e3, 3),
+                    "queries_per_sec": round(nq / p50),
+                    "peak_mb": round(working_set_mb(impl, p, nq, d, bk), 3),
+                    "label_agreement": agree,
+                })
+    print_csv(
+        "assign",
+        [(r["n_protos"], r["n_queries"], r["impl"], r["p50_ms"],
+          r["queries_per_sec"], r["peak_mb"], r["label_agreement"])
+         for r in rows],
+        "n_protos,n_queries,impl,p50_ms,queries_per_sec,peak_mb,"
+        "label_agreement")
+
+    os.makedirs(RESULTS, exist_ok=True)
+    art = {
+        "name": "assign",
+        "mode": mode,
+        "config": {"d": d, "centers": c, "block_k": bk, "iters": iters,
+                   "rescore_k": RESCORE_K,
+                   "backend": jax.default_backend()},
+        "rows": rows,
+    }
+    with open(os.path.join(RESULTS, "BENCH_assign.json"), "w") as f:
+        json.dump(art, f, indent=1)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--protos", default="2048,8192,32768",
+                    help="comma list of prototype counts")
+    ap.add_argument("--queries", default="256,2048",
+                    help="comma list of query-batch sizes")
+    ap.add_argument("--d", type=int, default=8)
+    ap.add_argument("--iters", type=int, default=10)
+    args = ap.parse_args()
+    run(protos=tuple(int(v) for v in args.protos.split(",")),
+        queries=tuple(int(v) for v in args.queries.split(",")),
+        d=args.d, iters=args.iters, mode="cli")
+
+
+if __name__ == "__main__":
+    main()

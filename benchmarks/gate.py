@@ -56,7 +56,7 @@ RESULTS = os.path.join(os.path.dirname(os.path.abspath(__file__)), "results")
 
 #: row-identity fields (whichever exist in a row form its match key)
 KEY_FIELDS = ("n", "executor", "devices", "batch", "dataset", "t", "m",
-              "offered_qps")
+              "offered_qps", "n_protos", "n_queries", "impl")
 
 #: metric -> (direction, default relative tolerance, absolute noise floor)
 #: direction "lower": fresh > base*(1+tol) regresses; "higher": fresh <
@@ -75,6 +75,8 @@ METRIC_RULES: Dict[str, Tuple[str, float, float]] = {
     "p50_ms": ("lower", 0.75, 1.0),
     "p99_ms": ("lower", 0.9, 2.0),
     "qps": ("higher", 0.5, 0.0),
+    # assign-path throughput (bench_assign): single jitted call, low noise
+    "queries_per_sec": ("higher", 0.5, 0.0),
     "peak_mb": ("lower", 0.25, 0.01),
     "stream_peak_mb": ("lower", 0.25, 0.01),
     "inmem_peak_mb": ("lower", 0.25, 0.01),

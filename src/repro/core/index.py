@@ -29,28 +29,62 @@ from repro.core.knn import _merge_topk
 from repro.core.plan import FitResult
 from repro.core.plan import fit as _fit
 from repro.kernels import ops
+from repro.kernels.fused_assign import (
+    RESCORE_K,
+    fused_topk,
+    fused_topk_xla,
+    quantize_keys,
+    rescore_top1,
+)
 
 
 class ClusterIndex(NamedTuple):
     """Frozen artifact of an IHTC fit: everything ``assign`` needs, nothing
-    sized O(n)."""
+    sized O(n).
+
+    The trailing optional fields are the freeze-time low-precision
+    prototype buffers the quantized fused assign variants serve from
+    (DESIGN.md §16): a bf16 copy and a per-feature int8 quantization.
+    They default to ``None`` so hand-built five-field indexes keep
+    working (the quantized impls then pack on the fly inside the jitted
+    assign — correct, but re-done per compiled shape; ``from_result``
+    packs once at freeze time instead)."""
 
     protos: jax.Array        # (n_max, d) final-level prototypes (padded)
     proto_mass: jax.Array    # (n_max,) original-unit mass per prototype
     proto_valid: jax.Array   # (n_max,) bool — real prototype vs padding
     proto_labels: jax.Array  # (n_max,) int32 backend labels (-1 = pad/noise)
     n_prototypes: jax.Array  # () int32 — valid count
+    protos_bf16: Optional[jax.Array] = None  # (n_max, d) bf16 copy
+    protos_q8: Optional[jax.Array] = None    # (n_max, d) int8 quantized
+    q8_scale: Optional[jax.Array] = None     # (d,) f32 per-feature scale
+    q8_zero: Optional[jax.Array] = None      # (d,) f32 per-feature zero pt
 
     @classmethod
     def from_result(cls, result: FitResult) -> "ClusterIndex":
         """Freeze any fitted :class:`repro.core.plan.FitResult` (every
-        executor returns the same canonical artifact)."""
+        executor returns the same canonical artifact), packing the
+        low-precision prototype buffers while we are at it — the
+        prototype set is O(n/(t*)^m), so the one-time cost is noise next
+        to the fit."""
         return cls(
             protos=result.protos,
             proto_mass=result.proto_mass,
             proto_valid=result.proto_valid,
             proto_labels=result.proto_labels,
             n_prototypes=result.n_prototypes,
+        ).with_packed_protos()
+
+    def with_packed_protos(self) -> "ClusterIndex":
+        """Precompute the bf16 copy and the per-feature int8 quantization
+        of the prototype buffer (scale/zero-point over valid rows only).
+        Freeze-time work so per-request assign only touches queries —
+        ``precision="bfloat16"`` and the ``fused_bf16``/``fused_int8``
+        impls serve straight from these buffers."""
+        q8, scale, zero = quantize_keys(self.protos, self.proto_valid)
+        return self._replace(
+            protos_bf16=self.protos.astype(jnp.bfloat16),
+            protos_q8=q8, q8_scale=scale, q8_zero=zero,
         )
 
     @classmethod
@@ -143,6 +177,24 @@ class ClusterIndex(NamedTuple):
                 f"index dim {self.dim} != expected dim {expect_dim} "
                 f"(a tenant's feature dimension cannot change across "
                 f"hot-swapped versions)")
+        # optional packed buffers (None = pack on the fly) must mirror the
+        # f32 buffer's geometry — a stale bf16/int8 copy from a different
+        # prototype set would serve silently-wrong shortlists
+        for name in ("protos_bf16", "protos_q8"):
+            arr = getattr(self, name)
+            if arr is not None and tuple(arr.shape) != tuple(self.protos.shape):
+                raise ValueError(
+                    f"servable index is inconsistent: {name} has shape "
+                    f"{tuple(arr.shape)}, want {tuple(self.protos.shape)} "
+                    f"to mirror protos")
+        if self.protos_q8 is not None:
+            for name in ("q8_scale", "q8_zero"):
+                arr = getattr(self, name)
+                if arr is None or tuple(arr.shape) != (self.dim,):
+                    got = None if arr is None else tuple(arr.shape)
+                    raise ValueError(
+                        f"servable index is inconsistent: protos_q8 needs "
+                        f"{name} of shape ({self.dim},), got {got}")
         return self
 
     def replicate(self, mesh) -> "ClusterIndex":
@@ -167,6 +219,9 @@ class ClusterIndex(NamedTuple):
         *,
         impl: Optional[str] = None,
         block: int = 0,
+        block_q: Optional[int] = None,
+        block_k: Optional[int] = None,
+        rescore_k: int = RESCORE_K,
         mesh=None,
         axis_name: Optional[str] = None,
     ) -> jax.Array:
@@ -176,7 +231,13 @@ class ClusterIndex(NamedTuple):
         prototype; -1 only if the index has no valid prototypes or the
         owning prototype was labelled noise). ``block`` > 0 streams the
         prototype set in blocks of that size (running top-1 — O(nq·block)
-        peak memory); 0 evaluates one (nq, n_max) tile.
+        peak memory); 0 evaluates one (nq, n_max) tile. The fused impl
+        family ignores ``block`` (it always streams) and tiles with
+        ``block_q``/``block_k`` — explicit kwargs win over the tuned
+        ``"assign"`` cell, which wins over the config constants. The
+        quantized impls (``fused_bf16``/``fused_int8``) shortlist
+        ``rescore_k`` candidates over the packed low-precision buffer and
+        rescore the shortlist in exact f32.
 
         ``impl``/``mesh``/``axis_name``/precision come from the runtime
         config unless given: with a mesh, queries are right-padded to a
@@ -202,7 +263,8 @@ class ClusterIndex(NamedTuple):
             if not self._is_replicated_on(mesh):
                 index = self.replicate(mesh)
         labels = _assign(index, queries, impl=impl, block=block,
-                         precision=cfg.precision,
+                         block_q=block_q, block_k=block_k,
+                         rescore_k=rescore_k, precision=cfg.precision,
                          _dispatch=cfg.dispatch_key())
         return labels[:nq]
 
@@ -214,15 +276,29 @@ def nearest_valid_prototype(
     *,
     impl: Optional[str] = None,
     block: int = 0,
+    block_q: Optional[int] = None,
+    block_k: Optional[int] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """(dist, proto_id) of each query's nearest valid prototype (-1 if none).
 
-    The blocked path folds prototype blocks into a running best list with
-    the same merge the blocked/ring kNN drivers use, so serving inherits
-    their memory ceiling: O(nq·block) live distances regardless of n_max.
+    The fused family dispatches to the streaming fused kernel (the
+    distance block never materializes; ``block`` is ignored — the kernel
+    streams unconditionally, tiled by ``block_q``/``block_k``). The
+    composed paths are unchanged: the blocked one folds prototype blocks
+    into a running best list with the same merge the blocked/ring kNN
+    drivers use, so serving inherits their memory ceiling — O(nq·block)
+    live distances regardless of n_max.
     """
     nq = queries.shape[0]
     n_max = protos.shape[0]
+    r, tp = ops.resolve_nearest(impl, dtype=queries.dtype, nq=nq, p=n_max,
+                                d=queries.shape[1], k=1)
+    if r in ops._FUSED_IMPLS:
+        bq = block_q if block_q is not None else tp.get("block_q")
+        bk = block_k if block_k is not None else tp.get("block_k")
+        bd, bi = ops.nearest_topk(queries, protos, 1, key_valid=valid,
+                                  impl="fused", block_q=bq, block_k=bk)
+        return bd[:, 0], bi[:, 0]
     if block and block < n_max:
         pad = (-n_max) % block
         pp = jnp.pad(protos, ((0, pad), (0, 0)))
@@ -251,7 +327,8 @@ def nearest_valid_prototype(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("impl", "block", "precision", "_dispatch")
+    jax.jit, static_argnames=("impl", "block", "block_q", "block_k",
+                              "rescore_k", "precision", "_dispatch")
 )
 def _assign(
     index: ClusterIndex,
@@ -259,13 +336,59 @@ def _assign(
     *,
     impl: str,
     block: int,
-    precision: str,
+    block_q: Optional[int] = None,
+    block_k: Optional[int] = None,
+    rescore_k: int = RESCORE_K,
+    precision: str = "float32",
     _dispatch: tuple = (),  # cache-key pin for trace-time config reads (§10)
 ) -> jax.Array:
-    if precision == "bfloat16":  # serve-side cast; distances still fold in f32
-        queries = queries.astype(jnp.bfloat16)
-        index = index._replace(protos=index.protos.astype(jnp.bfloat16))
-    _, pid = nearest_valid_prototype(
-        queries, index.protos, index.proto_valid, impl=impl, block=block)
+    nq, d = queries.shape
+    n_max = index.protos.shape[0]
+    r, tp = ops.resolve_nearest(impl, dtype=queries.dtype, nq=nq, p=n_max,
+                                d=d, k=1)
+    bq = block_q if block_q is not None else tp.get("block_q")
+    bk = block_k if block_k is not None else tp.get("block_k")
+
+    if r in ("fused_bf16", "fused_int8"):
+        # quantized shortlist over the packed buffer, exact-f32 rescore
+        # (DESIGN.md §16); missing buffers pack on the fly (hand-built
+        # index) — from_result froze them so serving only touches queries
+        kw = {}
+        if r == "fused_int8":
+            if index.protos_q8 is not None:
+                keys = index.protos_q8
+                kw = dict(keys_scale=index.q8_scale,
+                          keys_zero=index.q8_zero)
+            else:
+                keys, scale, zero = quantize_keys(index.protos,
+                                                  index.proto_valid)
+                kw = dict(keys_scale=scale, keys_zero=zero)
+            qq = queries
+        else:
+            keys = (index.protos_bf16 if index.protos_bf16 is not None
+                    else index.protos.astype(jnp.bfloat16))
+            qq = queries.astype(jnp.bfloat16)
+        shortlist = max(1, min(rescore_k, n_max))
+        if ops._use_pallas_fused():
+            _, cand = fused_topk(qq, keys, shortlist, index.proto_valid,
+                                 block_q=bq, block_k=bk,
+                                 interpret=ops._interpret(), **kw)
+        else:
+            _, cand = fused_topk_xla(qq, keys, shortlist, index.proto_valid,
+                                     block_k=bk, **kw)
+        _, pid = rescore_top1(queries, index.protos, index.proto_valid, cand)
+    else:
+        protos = index.protos
+        if precision == "bfloat16":
+            # serve-side cast; distances still fold in f32. The prototype
+            # side comes from the freeze-time packed buffer when present
+            # (bitwise-identical to casting here) so per-request work only
+            # touches the queries.
+            queries = queries.astype(jnp.bfloat16)
+            protos = (index.protos_bf16 if index.protos_bf16 is not None
+                      else index.protos.astype(jnp.bfloat16))
+        _, pid = nearest_valid_prototype(
+            queries, protos, index.proto_valid, impl=r, block=block,
+            block_q=bq, block_k=bk)
     safe = jnp.where(pid >= 0, pid, 0)
     return jnp.where(pid >= 0, index.proto_labels[safe], -1).astype(jnp.int32)

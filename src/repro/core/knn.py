@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro import runtime
 from repro.kernels import ops
+from repro.kernels.ref import merge_topk as _ref_merge_topk
 
 # what knn_block == 0 ("auto") means for every blocked-kNN entry point:
 # one-shot below this row count, blocks of this size above (the O(n²) HBM
@@ -93,16 +94,10 @@ def knn_graph(
     return ops.knn(x, k, valid=valid, exclude_self=True, impl=impl)
 
 
-def _merge_topk(
-    best_d: jax.Array, best_i: jax.Array, d: jax.Array, idx: jax.Array, k: int
-) -> Tuple[jax.Array, jax.Array]:
-    """Fold candidate (d, idx) columns into a running (n, k) best list."""
-    cat_d = jnp.concatenate([best_d, d], axis=1)
-    cat_i = jnp.concatenate([best_i, idx], axis=1)
-    neg, pos = jax.lax.top_k(-cat_d, k)
-    new_i = jnp.take_along_axis(cat_i, pos, axis=1)
-    new_d = -neg
-    return new_d, jnp.where(jnp.isfinite(new_d), new_i, -1)
+# canonical streaming top-k merge — now shared with the fused assign kernel,
+# so its single home is the kernels package (core keeps the old name alive
+# for the blocked/ring drivers and external importers)
+_merge_topk = _ref_merge_topk
 
 
 def knn_graph_blocked(
@@ -155,6 +150,14 @@ def _knn_graph_blocked(
     def per_query_block(qi):
         q = xq[qi]
         q_gidx = qi * block + jnp.arange(block)
+
+        if impl in ops._FUSED_IMPLS:
+            # fused inner loop: the kernel streams key blocks itself and
+            # takes the self-exclusion as a traced global-index array, so
+            # the (block, block) distance tile never exists outside VMEM
+            return ops.nearest_topk(
+                q, xp, k, key_valid=vp, q_gidx=q_gidx.astype(jnp.int32),
+                impl="fused")
 
         def body(kb, carry):
             bd, bi = carry

@@ -536,6 +536,19 @@ def plan_fit(
                                        k=max(t - 1, 1))
                 if tb.get("knn_block"):
                     knn_block = int(tb["knn_block"])
+            # the "assign" cell tunes the fused nearest/top-k family
+            # (DESIGN.md §16): if its measured winner is a fused variant
+            # and the impl policy is auto, freeze the fused streaming path
+            # into the plan — the TC inner loop dispatches through the
+            # same kernel, and ops without a fused path degrade it to
+            # auto, so the frozen choice is safe plan-wide. Quantized
+            # winners freeze as plain "fused": the fit has no frozen
+            # low-precision buffers (those are a serve-time artifact).
+            if impl == "auto" and executor not in SHARDED_EXECUTORS:
+                ta = tune.tuned_params("assign", dtype=dt, nq=n0, p=n0,
+                                       d=d0, k=max(t - 1, 1))
+                if str(ta.get("impl", "")).startswith("fused"):
+                    impl = "fused"
 
     if streaming_input:
         validate_reduction_params(t, m, min_m=1, driver=driver)

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from repro import runtime
 
 from . import flash_attention as _fa
+from . import fused_assign as _fused
 from . import knn_topk as _knn
 from . import pairwise_l2 as _pw
 from . import ref
@@ -33,20 +34,39 @@ from . import segment_sum as _ss
 
 from repro.runtime.config import _IMPLS as IMPLS  # single impl registry
 
+#: the fused nearest/top-k dispatch family (DESIGN.md §16). Ops without a
+#: fused path degrade these to "auto" so a process-wide impl="fused" only
+#: changes the assign/kNN hot path.
+_FUSED_IMPLS = ("fused", "fused_bf16", "fused_int8")
 
-def _resolve(impl: Optional[str] = None, *, tuned: Optional[str] = None) -> str:
+
+def _resolve(impl: Optional[str] = None, *, tuned: Optional[str] = None,
+             fused: bool = False) -> str:
     """Dispatch policy → concrete impl name, rejecting unknown strings.
 
     ``tuned`` is the measured winner from the tuning cache (if any): it
     only decides the ``"auto"`` case — an explicit ``impl=`` kwarg or a
     configured non-auto policy always wins over the autotuner.
+
+    ``fused=True`` marks entry points with a fused streaming path
+    (nearest_topk / knn): they may resolve to the fused family, and their
+    ``"auto"`` prefers it on TPU. Everywhere else the fused family (from a
+    global config or a tuned winner) degrades to the ``"auto"`` resolution
+    instead of raising.
     """
     if impl is None:
         impl = runtime.active().impl
+    if impl in _FUSED_IMPLS and not fused:
+        impl = "auto"
     if impl == "auto":
-        impl = tuned or ("pallas" if jax.default_backend() == "tpu"
-                         else "ref")
-    if impl not in ("pallas", "ref"):
+        tpu = jax.default_backend() == "tpu"
+        impl = tuned or (("fused" if fused else "pallas") if tpu else "ref")
+        if impl in _FUSED_IMPLS:
+            # a tuned fused winner leaking into a non-fused op degrades the
+            # same way a configured one does
+            impl = impl if fused else ("pallas" if tpu else "ref")
+    allowed = ("pallas", "ref") + (_FUSED_IMPLS if fused else ())
+    if impl not in allowed:
         # an unknown string used to fall through silently to the XLA path —
         # a typo'd impl="palas" would quietly benchmark the wrong kernel
         raise ValueError(
@@ -101,12 +121,90 @@ def knn(
     impl: Optional[str] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     tp = _tuned("knn", x.dtype, n=x.shape[0], d=x.shape[1], k=k)
-    if _resolve(impl, tuned=tp.get("impl")) == "pallas":
+    r = _resolve(impl, tuned=tp.get("impl"), fused=True)
+    if r in _FUSED_IMPLS:
+        # the self-kNN Pallas kernel (knn_topk) IS the fused kernel for the
+        # x-vs-x case; off-TPU the fused path is the XLA streaming fold
+        # (never materializes (n, n)) — quantized variants have no frozen
+        # buffer here, so they degrade to the f32 fused path
+        if _use_pallas_fused():
+            r = "pallas"
+        else:
+            gidx = (jnp.arange(x.shape[0], dtype=jnp.int32)
+                    if exclude_self else None)
+            return _fused.fused_topk_xla(x, x, k, valid, q_gidx=gidx,
+                                         block_k=tp.get("block_k"))
+    if r == "pallas":
         return _knn.knn_topk(
             x, k, valid, exclude_self=exclude_self, interpret=_interpret(),
             block_q=tp.get("block_q"), block_k=tp.get("block_k"),
         )
     return ref.knn(x, k, valid=valid, exclude_self=exclude_self)
+
+
+def _use_pallas_fused() -> bool:
+    """Whether the fused family dispatches to the Pallas kernel (real TPU,
+    or interpret explicitly pinned on — what the parity tests do) rather
+    than the XLA streaming fold (the off-TPU production fused path)."""
+    return (jax.default_backend() == "tpu"
+            or runtime.active().interpret is True)
+
+
+def resolve_nearest(impl: Optional[str], *, dtype, nq: int, p: int, d: int,
+                    k: int = 1) -> Tuple[str, dict]:
+    """Resolve the nearest/top-k dispatch family through the ``"assign"``
+    tuning cell. Returns ``(resolved impl, tuned params)`` — the tuned tile
+    sizes apply only when the caller passed none explicitly."""
+    tp = _tuned("assign", dtype, nq=nq, p=p, d=d, k=k)
+    return _resolve(impl, tuned=tp.get("impl"), fused=True), tp
+
+
+def nearest_topk(
+    q: jax.Array,
+    keys: jax.Array,
+    k: int,
+    *,
+    key_valid: Optional[jax.Array] = None,
+    q_gidx: Optional[jax.Array] = None,
+    impl: Optional[str] = None,
+    block_q: Optional[int] = None,
+    block_k: Optional[int] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """k nearest valid keys of each query row (dists ascending, idx; -1 for
+    unfillable slots) — the assign/TC hot-path entry point (DESIGN.md §16).
+
+    The fused family streams key blocks against a running best list
+    (Pallas kernel on TPU, XLA fold elsewhere; the distance block is never
+    materialized); ``"pallas"``/``"ref"`` compose a dense distance matrix
+    with the same merge, bit-identical by the shared tie semantics of
+    :func:`repro.kernels.ref.merge_topk`. The quantized variants degrade
+    to ``"fused"`` here — frozen low-precision buffers live on
+    :class:`repro.core.index.ClusterIndex`, not at this stateless layer.
+    """
+    r, tp = resolve_nearest(impl, dtype=q.dtype, nq=q.shape[0],
+                            p=keys.shape[0], d=q.shape[1], k=k)
+    bq = block_q if block_q is not None else tp.get("block_q")
+    bk = block_k if block_k is not None else tp.get("block_k")
+    if r in _FUSED_IMPLS:
+        if _use_pallas_fused():
+            return _fused.fused_topk(
+                q, keys, k, key_valid, q_gidx=q_gidx,
+                block_q=bq, block_k=bk, interpret=_interpret())
+        return _fused.fused_topk_xla(q, keys, k, key_valid, q_gidx=q_gidx,
+                                     block_k=bk)
+    if r == "pallas":
+        d = _pw.pairwise_sq_l2(q, keys, key_valid, interpret=_interpret())
+    else:
+        d = ref.pairwise_sq_l2(q, keys, y_valid=key_valid)
+    if q_gidx is not None:
+        kcols = jnp.arange(keys.shape[0], dtype=jnp.int32)
+        d = jnp.where(q_gidx[:, None] == kcols[None, :], jnp.inf, d)
+    nq = q.shape[0]
+    init_d = jnp.full((nq, k), jnp.inf, jnp.float32)
+    init_i = jnp.full((nq, k), -1, jnp.int32)
+    gidx = jnp.arange(keys.shape[0], dtype=jnp.int32)
+    return ref.merge_topk(init_d, init_i, d, jnp.broadcast_to(gidx, d.shape),
+                          k)
 
 
 def segment_sum(

@@ -77,6 +77,27 @@ def knn(
     return dists, idx
 
 
+def merge_topk(
+    best_d: jax.Array, best_i: jax.Array, d: jax.Array, idx: jax.Array, k: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Fold candidate (d, idx) columns into a running (n, k) best list.
+
+    This is the canonical merge semantics every streaming top-k path
+    shares (blocked/ring kNN drivers, the fused assign kernel's in-tile
+    unrolled selection): ``lax.top_k`` over the concatenation breaks
+    distance ties toward the *earlier* concat position, so the running
+    list (already ascending, earliest-first) wins over the new tile and,
+    within a tile, the lowest global index wins — which is what makes
+    block-streamed folds bit-identical to one dense top-k.
+    """
+    cat_d = jnp.concatenate([best_d, d], axis=1)
+    cat_i = jnp.concatenate([best_i, idx], axis=1)
+    neg, pos = jax.lax.top_k(-cat_d, k)
+    new_i = jnp.take_along_axis(cat_i, pos, axis=1)
+    new_d = -neg
+    return new_d, jnp.where(jnp.isfinite(new_d), new_i, -1)
+
+
 def segment_sum(
     x: jax.Array,
     segment_ids: jax.Array,

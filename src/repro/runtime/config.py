@@ -30,7 +30,11 @@ import os
 import threading
 from typing import Any, Iterator, Mapping, Optional
 
-_IMPLS = ("auto", "pallas", "ref")
+# Kernel dispatch policies. The last three are the fused nearest-prototype
+# family (DESIGN.md §16): ops with no fused path (pairwise, segment_sum,
+# attention) degrade them to "auto", so configuring impl="fused" process-wide
+# only changes the assign/kNN hot path.
+_IMPLS = ("auto", "pallas", "ref", "fused", "fused_bf16", "fused_int8")
 
 _TUNE_MODES = ("off", "cached", "onthefly")
 
@@ -46,7 +50,12 @@ class RuntimeConfig:
 
     Fields (``None`` means "decide from the environment at use time"):
       impl: kernel dispatch policy — "auto" (Pallas on TPU, jnp reference
-        elsewhere), "pallas" (force the kernel), "ref" (force the oracle).
+        elsewhere), "pallas" (force the kernel), "ref" (force the oracle),
+        "fused" (streaming fused nearest/top-k for the assign/kNN hot path;
+        Pallas on TPU, XLA fold elsewhere), "fused_bf16" / "fused_int8"
+        (fused shortlist over the frozen low-precision prototype buffer +
+        exact-f32 rescore; serve-side only — DESIGN.md §16). Ops without a
+        fused path treat the fused family as "auto".
       interpret: force Pallas interpret mode on/off; None = interpret
         everywhere except real TPUs (the existing behaviour).
       knn_block: query/key block for the blocked kNN drivers; 0 = auto

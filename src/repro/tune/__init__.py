@@ -26,7 +26,8 @@ CLI: ``python -m repro.tune populate|show|prune|clear`` manages the cache.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+import warnings
+from typing import Any, Dict, Optional
 
 from repro import runtime
 from repro.tune.cache import (  # noqa: F401  (re-exported API)
@@ -47,6 +48,43 @@ __all__ = [
 ]
 
 
+# cached params that size a block/tile/budget. Every candidate the tuner
+# ever emits for these is a power of two, and shape buckets round up to
+# powers of two (repro.tune.cache.pow2_bucket) — so "is a positive power
+# of two" is exactly "still divides some bucket edge". Anything else is a
+# stale or hand-mangled entry and must not reach the kernels.
+_SIZE_PARAMS = ("block_q", "block_k", "block_s", "block_n", "knn_block",
+                "chunk_n", "reservoir_n")
+
+
+def _stale_reason(params: Any) -> Optional[str]:
+    """Why a cached winner can no longer be honoured (None = fine).
+
+    The cache file outlives code changes: an impl that was deregistered,
+    or a tile size that no longer divides its shape bucket, used to sail
+    through to ``ops._resolve``/the kernels and raise ``ValueError`` in
+    the middle of a fit. The gate catches those here so the caller can
+    fall back to the hand-picked constants instead.
+    """
+    if not isinstance(params, dict):
+        return f"params is {type(params).__name__}, not a dict"
+    impl = params.get("impl")
+    if impl is not None:
+        from repro.runtime.config import _IMPLS  # the single impl registry
+
+        if not isinstance(impl, str) or impl not in _IMPLS or impl == "auto":
+            return f"impl {impl!r} is not a registered impl"
+    for name in _SIZE_PARAMS:
+        if name not in params:
+            continue
+        v = params[name]
+        if not isinstance(v, int) or isinstance(v, bool) or v < 1 \
+                or (v & (v - 1)) != 0:
+            return (f"{name}={v!r} is not a positive power of two and "
+                    f"cannot tile a pow2 shape bucket")
+    return None
+
+
 def tuned_params(kernel: str, *, dtype: str = "float32",
                  **dims: int) -> Dict[str, Any]:
     """Winning params for ``kernel`` at the bucket of ``dims``, or ``{}``.
@@ -55,15 +93,33 @@ def tuned_params(kernel: str, *, dtype: str = "float32",
     but never measures, ``onthefly`` measures (and persists) on a miss.
     Callers treat a missing key in the result as "use the constant", so a
     partial dict — e.g. ``{"impl": "ref"}`` with no tile sizes — is valid.
+
+    Stale entries — a winner naming a now-unregistered impl, or a tile
+    size that no longer divides its shape bucket — are ignored AND pruned
+    from the cache (with a warning) rather than handed to the kernels,
+    where they would raise ``ValueError`` mid-fit. The prune bumps the
+    cache epoch, so compiled programs never pin the rejected entry.
     """
     mode = runtime.active().tune
     if mode == "off":
         return {}
     from repro.tune.autotune import current_device_kind  # lazy: jax
 
+    device_kind = current_device_kind()
     bucket = shape_bucket(**dims)
     cache = get_cache()
-    params = cache.lookup(current_device_kind(), kernel, bucket, dtype)
+    params = cache.lookup(device_kind, kernel, bucket, dtype)
+    if params is not None:
+        reason = _stale_reason(params)
+        if reason is not None:
+            warnings.warn(
+                f"ignoring stale tuning-cache entry "
+                f"{device_kind}|{kernel}|{bucket}|{dtype}: {reason}; "
+                f"pruned — falling back to the built-in constants "
+                f"(re-run `python -m repro.tune populate` to re-measure)",
+                RuntimeWarning, stacklevel=2)
+            cache.discard(device_kind, kernel, bucket, dtype)
+            params = None
     if params is None and mode == "onthefly":
         from repro.tune.autotune import autotune_cell
 

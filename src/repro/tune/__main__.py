@@ -146,8 +146,8 @@ def main(argv: Optional[List[str]] = None) -> int:
     p.add_argument("--shapes", default="",
                    help="comma list of synthetic shapes: NxD[xK] "
                         "positional, or named dims like n8192:m512:d8 "
-                        "for cells bucketed on m/s "
-                        "(default: one built-in shape per cell)")
+                        "or nq1024:p8192:d8 for cells bucketed on "
+                        "m/s/nq/p (default: one built-in shape per cell)")
     p.add_argument("--repeats", type=int, default=3,
                    help="timed runs per candidate (median taken)")
     p.add_argument("--dtype", default="float32",

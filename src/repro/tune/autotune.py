@@ -19,6 +19,13 @@ Cells and what they tune (DESIGN.md §14):
     ``repro.core.knn.AUTO_KNN_BLOCK``).
   * ``"stream"`` — the streaming-fit chunk budget ``chunk_n`` (shape-free
     cell: one winner per device kind, bucket ``"any"``).
+  * ``"assign"`` — the nearest/top-k hot path (serve-side
+    ``ClusterIndex.assign`` and the fused blocked-kNN inner loop,
+    DESIGN.md §16): composed ref vs the fused streaming family incl. the
+    quantized shortlist+rescore variants, plus fused tile sizes. Pallas
+    composed candidates keep the TPU-only default; the fused XLA fold and
+    the quantized variants run everywhere, so this cell is worth
+    populating on CPU too.
 
 Deliberately **not** tuned: ``n_blocks``, the canonical fixed-reduction
 width. It pins the summation order that makes single-device, sharded and
@@ -44,7 +51,8 @@ from repro.tune.cache import (
 )
 
 #: cells the autotuner knows how to measure (CLI ``populate`` default set)
-KERNELS = ("knn", "pairwise_sq_l2", "segment_sum", "knn_block", "stream")
+KERNELS = ("knn", "pairwise_sq_l2", "segment_sum", "knn_block", "stream",
+           "assign")
 
 # hardware-aligned Pallas tile candidates (sublane/lane multiples only —
 # misaligned tiles are a known Mosaic footgun, see the Pallas guide)
@@ -52,6 +60,7 @@ _QK_TILES = [(bq, bk) for bq in (128, 256, 512) for bk in (256, 512, 1024)]
 _SEG_TILES = [(bs, bn) for bs in (256, 512, 1024) for bn in (512, 1024, 2048)]
 _KNN_BLOCKS = (2048, 4096, 8192, 16384)
 _CHUNKS = (1024, 2048, 4096)
+_ASSIGN_BKS = (512, 1024, 2048)  # fused key-block tiles (pow2, lane-aligned)
 
 #: synthetic dims a cell is measured at when the caller gives none
 DEFAULT_DIMS: Dict[str, Dict[str, int]] = {
@@ -60,6 +69,7 @@ DEFAULT_DIMS: Dict[str, Dict[str, int]] = {
     "segment_sum": {"n": 8192, "d": 8, "s": 1024},
     "knn_block": {"n": 16384, "d": 8, "k": 3},
     "stream": {},
+    "assign": {"nq": 1024, "p": 8192, "d": 8, "k": 1},
 }
 
 
@@ -96,6 +106,20 @@ def candidates_for(kernel: str, dims: Dict[str, int],
         return [{"knn_block": b} for b in blocks]
     if kernel == "stream":
         return [{"chunk_n": c} for c in _CHUNKS]
+    if kernel == "assign":
+        # composed ref + the fused streaming family (XLA fold off-TPU, so
+        # it is measurable everywhere); Pallas composed candidates keep
+        # the TPU-only default — interpret mode would never win
+        cands = [{"impl": "ref"}]
+        cands += [{"impl": "fused", "block_k": bk} for bk in _ASSIGN_BKS]
+        cands += [{"impl": "fused_bf16", "block_k": bk}
+                  for bk in _ASSIGN_BKS]
+        cands += [{"impl": "fused_int8", "block_k": bk}
+                  for bk in _ASSIGN_BKS]
+        if include_pallas:
+            cands += [{"impl": "pallas", "block_q": bq, "block_k": bk}
+                      for bq, bk in _QK_TILES]
+        return cands
     raise ValueError(f"unknown tunable kernel {kernel!r}; have {KERNELS}")
 
 
@@ -176,6 +200,27 @@ def _runner(kernel: str, dims: Dict[str, int], dtype: str):
 
         def run(params):
             return knn_graph_blocked(x, k, block=params["knn_block"])
+
+        return run
+
+    if kernel == "assign":
+        from repro.core.index import ClusterIndex
+
+        nq, p, d = (pow2_bucket(dims[a]) for a in ("nq", "p", "d"))
+        protos = jnp.asarray(rng.normal(size=(p, d)), jnp.float32)
+        idx = ClusterIndex(
+            protos=protos,
+            proto_mass=jnp.ones((p,), jnp.float32),
+            proto_valid=jnp.ones((p,), bool),
+            proto_labels=jnp.asarray(np.arange(p) % 16, jnp.int32),
+            n_prototypes=jnp.asarray(p, jnp.int32),
+        ).with_packed_protos()
+        q = jnp.asarray(rng.normal(size=(nq, d)), jdt)
+
+        def run(params):
+            return idx.assign(q, impl=params["impl"],
+                              block_q=params.get("block_q"),
+                              block_k=params.get("block_k"))
 
         return run
 

@@ -157,6 +157,21 @@ class TuningCache:
 
     # ---- maintenance ------------------------------------------------------
 
+    def discard(self, device_kind: str, kernel: str, shape_bucket: str,
+                dtype: str = "float32", *, save: bool = True) -> bool:
+        """Drop one entry by exact key (used to prune stale winners the
+        validation gate rejects — see :func:`repro.tune.tuned_params`).
+        Returns whether anything was removed."""
+        entries = self._load()
+        key = make_key(device_kind, kernel, shape_bucket, dtype)
+        if key not in entries:
+            return False
+        del entries[key]
+        bump_epoch()
+        if save:
+            self.save()
+        return True
+
     def entries(self) -> Iterator[Tuple[Tuple[str, str, str, str], dict]]:
         """((device_kind, kernel, shape_bucket, dtype), record) pairs."""
         for key, rec in sorted(self._load().items()):

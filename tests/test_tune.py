@@ -224,3 +224,111 @@ def test_tune_cli_roundtrip(tmp_path, capsys):
     assert main(["--cache", path, "clear"]) == 0
     assert main(["--cache", path, "populate", "--kernels", "bogus"]) == 2
     assert len(TuningCache(path)) == 0
+
+
+# ------------------------------------------- stale-entry hardening (§14)
+
+
+def test_stale_cache_unknown_impl_ignored_and_pruned(rng, cache):
+    """A hand-corrupted cache file naming a deregistered/typo'd impl used
+    to raise ValueError from ops._resolve mid-fit; it must now be ignored
+    (constants win), warned about, and pruned from the file."""
+    bucket = tune.shape_bucket(n=24, d=3, k=2)
+    # corrupt the file by hand, bypassing record(): the entry survives a
+    # reload exactly as a stale on-disk winner would
+    blob = {"version": 1, "entries": {
+        make_key(DK, "knn", bucket, "float32"):
+            {"params": {"impl": "palas"}, "seconds": 0.001, "candidates": 9,
+             "recorded_unix": 0},
+    }}
+    json.dump(blob, open(cache.path, "w"))
+    cache.reload()
+    x = jnp.asarray(rng.normal(size=(24, 3)), jnp.float32)
+    wd, wi = ref.knn(x, 2)
+    with runtime.configure(tune="cached"):
+        with pytest.warns(RuntimeWarning, match="stale tuning-cache"):
+            gd, gi = ops.knn(x, 2)  # no ValueError: falls back to constants
+    np.testing.assert_array_equal(np.asarray(gd), np.asarray(wd))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    # pruned from memory AND from the file
+    assert cache.lookup(DK, "knn", bucket) is None
+    assert TuningCache(cache.path).lookup(DK, "knn", bucket) is None
+
+
+def test_stale_cache_bad_tile_ignored_and_pruned(rng, cache):
+    """A tile size that cannot divide a pow2 shape bucket (here 300) is
+    rejected by the same gate instead of reaching the kernel."""
+    bucket = tune.shape_bucket(n=24, d=3, k=2)
+    cache.record(DK, "knn", bucket,
+                 {"impl": "pallas", "block_q": 300, "block_k": 8})
+    x = jnp.asarray(rng.normal(size=(24, 3)), jnp.float32)
+    with runtime.configure(tune="cached"):
+        with pytest.warns(RuntimeWarning, match="power of two"):
+            gd, gi = ops.knn(x, 2)
+    wd, wi = ref.knn(x, 2)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    assert cache.lookup(DK, "knn", bucket) is None
+
+
+def test_stale_reason_catalogue():
+    from repro.tune import _stale_reason
+
+    assert _stale_reason({"impl": "ref"}) is None
+    assert _stale_reason({"impl": "fused_int8", "block_k": 1024}) is None
+    assert _stale_reason({"knn_block": 4096}) is None
+    assert _stale_reason({"impl": "palas"}) is not None
+    assert _stale_reason({"impl": "auto"}) is not None
+    assert _stale_reason({"block_k": 300}) is not None
+    assert _stale_reason({"block_q": 0}) is not None
+    assert _stale_reason({"chunk_n": "big"}) is not None
+    assert _stale_reason("not-a-dict") is not None
+
+
+# ------------------------------------------------- the "assign" cell (§16)
+
+
+def test_autotune_assign_cell_records_and_serves(rng, cache):
+    """The assign cell measures the fused + quantized candidates on any
+    backend and the recorded winner drives ClusterIndex.assign dispatch
+    without changing labels."""
+    from repro.core.index import ClusterIndex
+
+    dims = {"nq": 16, "p": 32, "d": 4, "k": 1}
+    params, sec = tune.autotune_cell("assign", dims, cache=cache, repeats=1)
+    assert params["impl"] in ("ref", "fused", "fused_bf16", "fused_int8")
+    assert sec > 0
+
+    protos = jnp.asarray(rng.normal(size=(32, 4)) * 10.0, jnp.float32)
+    idx = ClusterIndex(
+        protos=protos, proto_mass=jnp.ones((32,)),
+        proto_valid=jnp.ones((32,), bool),
+        proto_labels=jnp.arange(32, dtype=jnp.int32),
+        n_prototypes=jnp.asarray(32, jnp.int32)).with_packed_protos()
+    q = jnp.asarray(rng.normal(size=(16, 4)) * 10.0, jnp.float32)
+    want = idx.assign(q, impl="ref")
+    # pin a fused winner for this bucket and let auto dispatch pick it up
+    cache.record(DK, "assign", tune.shape_bucket(**dims),
+                 {"impl": "fused", "block_k": 16})
+    with runtime.configure(tune="cached"):
+        got = idx.assign(q)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_plan_fit_freezes_fused_assign_winner(rng, cache):
+    """A fused winner in the assign cell freezes impl="fused" into the
+    FitPlan (auto policy only), and the fused fit reproduces the untuned
+    labels bit-for-bit."""
+    x = jnp.asarray(rng.normal(size=(64, 3)), jnp.float32)
+    cache.record(DK, "assign", tune.shape_bucket(nq=64, p=64, d=3, k=1),
+                 {"impl": "fused_int8", "block_k": 16})
+    with runtime.configure(tune="cached"):
+        plan = plan_fit(x, 2, 1, "kmeans", k=3)
+    assert plan.impl == "fused"  # quantized winners freeze as plain fused
+    # explicit impl always wins over the tuned winner
+    with runtime.configure(tune="cached"):
+        plan2 = plan_fit(x, 2, 1, "kmeans", k=3, impl="ref")
+    assert plan2.impl == "ref"
+    want = repro.fit(x, 2, 1, "kmeans", k=3).labels
+    with runtime.configure(tune="cached"):
+        got = repro.fit(x, 2, 1, "kmeans", k=3).labels
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
