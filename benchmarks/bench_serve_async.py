@@ -113,7 +113,8 @@ def run(
             index, buckets=buckets, block=block,
             max_wait=max_wait_ms / 1e3, max_inflight=max_inflight,
             queue_depth=queue_depth,
-            observer=lambda rec: fills.append(rec.total / rec.bucket))
+            observer=lambda rec, fills=fills:  # bind loop var (B023)
+                fills.append(rec.total / rec.bucket))
         records, rejected, t0, t_end = asyncio.run(
             _open_loop(service, pool, qps=qps, duration=duration,
                        seed=seed + 2))

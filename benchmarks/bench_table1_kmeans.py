@@ -23,7 +23,7 @@ def run(ns=(10_000, 100_000), ms=(0, 1, 2, 3, 4), t: int = 2, seed: int = 0):
         x, true = gmm_sample(n, seed)
         xj = jnp.asarray(x)
         for m in ms:
-            def work():
+            def work(xj=xj, m=m):  # bind loop vars (B023)
                 return ihtc(xj, t, m, "kmeans", k=3,
                             key=jax.random.PRNGKey(seed))
             res, sec = timed(work, warmup=1)

@@ -32,7 +32,7 @@ def run(ns=(10_000, 100_000), t: int = 2, seed: int = 0, budget=HAC_BUDGET):
         while n // (t**m) > budget:
             m += 1
         for mm in (m, m + 1, m + 2):
-            def work():
+            def work(xj=xj, mm=mm):  # bind loop vars (B023)
                 return ihtc(xj, t, mm, "hac", k=3, linkage="ward",
                             key=jax.random.PRNGKey(seed))
             res, sec = timed(work, warmup=1)

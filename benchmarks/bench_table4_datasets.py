@@ -23,7 +23,7 @@ def run(max_n: int = 200_000, ms=(0, 1, 2, 3), datasets=None, hac_ms=None):
         xj = jnp.asarray(x)
         n = len(x)
         for m in ms:
-            def work():
+            def work(xj=xj, m=m, spec=spec):  # bind loop vars (B023)
                 return ihtc(xj, 2, m, "kmeans", k=spec.k,
                             key=jax.random.PRNGKey(1))
             res, sec = timed(work)
@@ -36,7 +36,7 @@ def run(max_n: int = 200_000, ms=(0, 1, 2, 3), datasets=None, hac_ms=None):
         while n // (2**m0) > 4096:
             m0 += 1
         for m in (hac_ms or (m0, m0 + 1)):
-            def work_h():
+            def work_h(xj=xj, m=m, spec=spec):  # bind loop vars (B023)
                 return ihtc(xj, 2, m, "hac", k=spec.k, linkage="ward",
                             key=jax.random.PRNGKey(1))
             res, sec = timed(work_h)

@@ -26,7 +26,7 @@ def run(n=100_000, ts=(2, 4, 8, 16, 32, 64), seed: int = 0):
     rows.append((n, "none", round(sec, 4), round(live_mb(), 1), n,
                  round(acc, 4)))
     for t in ts:
-        def work():
+        def work(t=t):  # bind the loop var (B023)
             return ihtc(xj, t, 1, "kmeans", k=3, key=jax.random.PRNGKey(seed))
         res, sec = timed(work)
         acc = clustering_accuracy(true, np.asarray(res.labels), 3)

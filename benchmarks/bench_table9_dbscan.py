@@ -29,7 +29,7 @@ def run(max_n: int = 50_000, ms=(0, 1, 2)):
         xj = jnp.asarray(x)
         eps = calibrate_eps(x)
         for m in ms:
-            def work():
+            def work(xj=xj, m=m, eps=eps):  # bind loop vars (B023)
                 return ihtc(xj, 2, m, "dbscan", eps=eps, min_pts=16.0,
                             key=jax.random.PRNGKey(2))
             res, sec = timed(work)

@@ -280,7 +280,7 @@ def self_test() -> int:
     injection — a tail-latency regression must be caught even when
     throughput is unchanged."""
     candidates = sorted(
-        p for p in (os.path.join(RESULTS, f) for f in os.listdir(RESULTS)
+        p for p in (os.path.join(RESULTS, f) for f in sorted(os.listdir(RESULTS))
                     if f.startswith("BENCH_") and f.endswith(".json"))
         if os.path.isfile(p)) if os.path.isdir(RESULTS) else []
     if not candidates:

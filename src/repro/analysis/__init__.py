@@ -1,0 +1,61 @@
+"""Static analysis for the repo's runtime contracts (DESIGN.md §17).
+
+The contracts that make this codebase fast and reproducible — §10 config
+dispatch, §12 host-sync discipline, §14 retrace hygiene, §16 kernel
+geometry, §4.3 determinism — are invariants the test suite can only spot-
+check: a missing ``_dispatch`` pin or a stray ``int(jnp_value)`` in the
+decode loop produces *correct numbers, slowly or unreproducibly*. This
+package checks them structurally, over the AST, with zero runtime
+dependencies (no jax import), so CI gates on them before anything runs.
+
+Layout mirrors the rest of the repo's registry idiom:
+
+- ``registry``   ``@register_rule`` + resolution (cf. ``cluster.registry``)
+- ``context``    per-file AST context + whole-repo call-graph index
+- ``rules/``     the rule families: RC, HS, RT, PK, DT, WN
+- ``pragmas``    ``# repro: allow[RULE]: reason`` suppressions
+- ``baseline``   committed, reasoned debt ledger (``analysis-baseline.json``)
+- ``runner``     two-pass driver producing a settled :class:`Report`
+- ``selftest``   per-rule bad/clean/pragma'd golden snippets
+- ``__main__``   ``python -m repro.analysis check|explain|baseline``
+
+Import note: this package is intentionally importable without jax — keep
+it that way (the ``static-analysis`` CI job runs on a bare python).
+"""
+from repro.analysis.baseline import (
+    Baseline,
+    BaselineEntry,
+    load_baseline,
+    save_baseline,
+)
+from repro.analysis.findings import Finding, PragmaError, Suppression
+from repro.analysis.registry import (
+    FAMILIES,
+    Rule,
+    available_rules,
+    iter_rules,
+    register_rule,
+    resolve_rule,
+)
+from repro.analysis.runner import Report, gather_sources, run_check
+from repro.analysis.selftest import run_selftest
+
+__all__ = [
+    "Baseline",
+    "BaselineEntry",
+    "FAMILIES",
+    "Finding",
+    "PragmaError",
+    "Report",
+    "Rule",
+    "Suppression",
+    "available_rules",
+    "gather_sources",
+    "iter_rules",
+    "load_baseline",
+    "register_rule",
+    "resolve_rule",
+    "run_check",
+    "run_selftest",
+    "save_baseline",
+]

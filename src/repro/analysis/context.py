@@ -1,0 +1,425 @@
+"""Per-file analysis context and the whole-repo call-graph index.
+
+``FileContext`` owns everything a rule needs about one module: the parsed
+tree, a parent map, import-alias resolution (``np.asarray`` →
+``numpy.asarray``), which functions are jit-traced and how (decorator,
+``jax.jit(fn)`` wrapping, ``pallas_call`` kernel bodies), and best-effort
+constant resolution for tile-geometry checks.
+
+``ProjectIndex`` is the cross-module layer: it records, for every function
+in the analyzed set, whether its body (transitively, through a dotted-name
+call graph) reads the runtime config at trace time. That is what lets the
+RC rules flag ``serve/kv_compression.py`` -- a jitted function whose
+*callee* (``itis_step``) resolves ``runtime.active()`` during tracing --
+and not just bodies that mention ``active()`` lexically.
+
+Everything here is stdlib-only (ast + tokenize): the analyzer must run in
+CI without installing jax.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+# dotted names whose *call* reads the active runtime config (§10). The
+# attribute form through any alias of repro.runtime / repro.runtime.config
+# resolves onto one of these.
+CONFIG_READ_CALLS = frozenset({
+    "repro.runtime.active",
+    "repro.runtime.dispatch_key",
+    "repro.runtime.default_config",
+    "repro.runtime.config_from_env",
+    "repro.runtime.config.active",
+    "repro.runtime.config.dispatch_key",
+    "repro.runtime.config.default_config",
+    "repro.runtime.config.config_from_env",
+})
+
+JIT_CALLS = frozenset({"jax.jit", "jax.api.jit"})
+PALLAS_CALL = "pallas_call"  # matched by suffix: pl.pallas_call aliases vary
+
+#: the §10 cache-key pin: a jitted function carrying this parameter declares
+#: its trace-time config reads covered by the static dispatch fingerprint.
+DISPATCH_PARAM = "_dispatch"
+
+
+def module_name_for_path(path: str) -> str:
+    """Repo-relative path -> dotted module name (``src/`` layout aware)."""
+    p = path.replace("\\", "/")
+    for prefix in ("src/",):
+        if p.startswith(prefix):
+            p = p[len(prefix):]
+    if p.endswith(".py"):
+        p = p[:-3]
+    if p.endswith("/__init__"):
+        p = p[: -len("/__init__")]
+    return p.replace("/", ".")
+
+
+@dataclasses.dataclass
+class FuncInfo:
+    """One function (or lambda) and what the analyzer knows about it."""
+
+    node: ast.AST                 # FunctionDef / AsyncFunctionDef / Lambda
+    qualname: str                 # module.Class.name / module.name / <lambda>
+    path: str
+    jitted: bool = False
+    jit_reason: str = ""          # "decorator" | "jax.jit(...)" | "pallas_call"
+    static_names: Tuple[str, ...] = ()
+    has_dispatch: bool = False
+    calls: Set[str] = dataclasses.field(default_factory=set)
+    reads_config: bool = False    # lexical read in this body
+    config_read_lines: List[int] = dataclasses.field(default_factory=list)
+
+
+def _arg_names(node: ast.AST) -> List[str]:
+    a = node.args
+    names = [x.arg for x in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+class FileContext:
+    """Parsed module + resolution helpers, shared by every rule."""
+
+    def __init__(self, path: str, source: str,
+                 project: Optional["ProjectIndex"] = None):
+        self.path = path.replace("\\", "/")
+        self.source = source
+        self.lines = source.splitlines()
+        self.module = module_name_for_path(self.path)
+        self.tree = ast.parse(source)
+        self.project = project
+
+        self.parents: Dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                self.parents[child] = node
+
+        self.aliases = self._collect_aliases()
+        self.module_consts = self._collect_module_consts()
+        self.functions: Dict[ast.AST, FuncInfo] = {}
+        self._collect_functions()
+        self._detect_jit()
+
+    # ------------------------------------------------------------ imports
+    def _collect_aliases(self) -> Dict[str, str]:
+        aliases: Dict[str, str] = {}
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    aliases[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0])
+            elif isinstance(node, ast.ImportFrom):
+                if node.level:  # relative: resolve against this package
+                    base_parts = self.module.split(".")
+                    # level 1 = current package (drop the module segment)
+                    base_parts = base_parts[: len(base_parts) - node.level]
+                    base = ".".join(base_parts)
+                else:
+                    base = ""
+                mod = ".".join(x for x in (base, node.module or "") if x)
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    aliases[a.asname or a.name] = (
+                        f"{mod}.{a.name}" if mod else a.name)
+        return aliases
+
+    def _collect_module_consts(self) -> Dict[str, int]:
+        consts: Dict[str, int] = {}
+        for node in self.tree.body:
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name) \
+                    and isinstance(node.value, ast.Constant) \
+                    and type(node.value.value) is int:
+                consts[node.targets[0].id] = node.value.value
+        return consts
+
+    # ---------------------------------------------------------- functions
+    def _collect_functions(self) -> None:
+        def visit(node: ast.AST, scope: List[str]) -> None:
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    qual = ".".join([self.module] + scope + [child.name])
+                    self._add_function(child, qual)
+                    visit(child, scope + [child.name])
+                elif isinstance(child, ast.ClassDef):
+                    visit(child, scope + [child.name])
+                elif isinstance(child, ast.Lambda):
+                    qual = ".".join([self.module] + scope + ["<lambda>"])
+                    self._add_function(child, qual)
+                    visit(child, scope)
+                else:
+                    visit(child, scope)
+
+        visit(self.tree, [])
+
+    def _add_function(self, node: ast.AST, qual: str) -> None:
+        info = FuncInfo(node=node, qualname=qual, path=self.path,
+                        has_dispatch=DISPATCH_PARAM in _arg_names(node))
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                name = self.dotted(sub.func)
+                if name:
+                    info.calls.add(name)
+                    if name in CONFIG_READ_CALLS:
+                        info.reads_config = True
+                        info.config_read_lines.append(sub.lineno)
+        self.functions[node] = info
+
+    # ------------------------------------------------------------ jit map
+    def _detect_jit(self) -> None:
+        # 1. decorators: @jax.jit / @functools.partial(jax.jit, ...)
+        for node, info in self.functions.items():
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for dec in node.decorator_list:
+                target, statics = self._jit_spec(dec)
+                if target:
+                    info.jitted = True
+                    info.jit_reason = "decorator"
+                    info.static_names = statics
+        # 2. call sites: jax.jit(<lambda>| <local name>), pallas_call(kernel)
+        by_name = {
+            info.qualname.rsplit(".", 1)[-1]: info
+            for node, info in self.functions.items()
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+        }
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = self.dotted(node.func) or ""
+            is_jit = name in JIT_CALLS
+            is_pallas = name.endswith(PALLAS_CALL)
+            if not (is_jit or is_pallas):
+                continue
+            statics = self._static_names_from_call(node)
+            for arg in node.args[:1]:  # the traced callable is arg 0
+                target: Optional[ast.AST] = None
+                if isinstance(arg, ast.Lambda):
+                    target = arg
+                elif isinstance(arg, ast.Name) and arg.id in by_name:
+                    target = by_name[arg.id].node
+                if target is not None and target in self.functions:
+                    info = self.functions[target]
+                    info.jitted = True
+                    info.jit_reason = ("pallas_call" if is_pallas
+                                       else "jax.jit(...)")
+                    if statics:
+                        info.static_names = statics
+
+    def _jit_spec(self, dec: ast.AST) -> Tuple[bool, Tuple[str, ...]]:
+        """Decorator node -> (is a jit decorator, static_argnames)."""
+        if self.dotted(dec) in JIT_CALLS:
+            return True, ()
+        if isinstance(dec, ast.Call):
+            fname = self.dotted(dec.func) or ""
+            if fname in JIT_CALLS:
+                return True, self._static_names_from_call(dec)
+            if fname in ("functools.partial", "partial") and dec.args:
+                if self.dotted(dec.args[0]) in JIT_CALLS:
+                    return True, self._static_names_from_call(dec)
+        return False, ()
+
+    @staticmethod
+    def _static_names_from_call(call: ast.Call) -> Tuple[str, ...]:
+        for kw in call.keywords:
+            if kw.arg == "static_argnames":
+                try:
+                    v = ast.literal_eval(kw.value)
+                except (ValueError, SyntaxError):
+                    return ()
+                if isinstance(v, str):
+                    return (v,)
+                if isinstance(v, (tuple, list)):
+                    return tuple(x for x in v if isinstance(x, str))
+        return ()
+
+    # --------------------------------------------------------- resolution
+    def dotted(self, node: ast.AST) -> Optional[str]:
+        """Best-effort dotted name for a Name/Attribute chain.
+
+        ``np.asarray`` -> ``numpy.asarray``; ``runtime.active`` ->
+        ``repro.runtime.active``; a bare name naming a module-level def ->
+        its qualified name; ``self.f`` -> ``module.Class.f`` when the
+        chain starts at ``self`` inside a class. Returns None for
+        anything dynamic.
+        """
+        parts: List[str] = []
+        cur = node
+        while isinstance(cur, ast.Attribute):
+            parts.append(cur.attr)
+            cur = cur.value
+        if not isinstance(cur, ast.Name):
+            return None
+        parts.append(cur.id)
+        parts.reverse()
+        head, rest = parts[0], parts[1:]
+        if head == "self" and rest:
+            cls = self._enclosing_class(node)
+            if cls is not None:
+                return ".".join([self.module, cls.name] + rest)
+            return None
+        base = self.aliases.get(head)
+        if base is None:
+            # a bare local name: qualify module-level defs so the call
+            # graph can link them
+            if not rest and any(
+                info.qualname == f"{self.module}.{head}"
+                for info in self.functions.values()
+            ):
+                return f"{self.module}.{head}"
+            base = head if rest else None
+            if base is None:
+                return None
+        return ".".join([base] + rest)
+
+    def _enclosing_class(self, node: ast.AST) -> Optional[ast.ClassDef]:
+        cur = self.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, ast.ClassDef):
+                return cur
+            cur = self.parents.get(cur)
+        return None
+
+    def enclosing_functions(self, node: ast.AST) -> Iterator[FuncInfo]:
+        """Innermost-out FuncInfo chain containing ``node``."""
+        cur = self.parents.get(node)
+        while cur is not None:
+            if cur in self.functions:
+                yield self.functions[cur]
+            cur = self.parents.get(cur)
+
+    def enclosing_jit(self, node: ast.AST) -> Optional[FuncInfo]:
+        """Nearest enclosing function that jax traces (jit / pallas body).
+
+        Anything lexically inside a jitted function — including nested
+        helper defs, which execute when the trace calls them — counts as
+        trace-time context. This over-approximates (a nested def that is
+        only ever returned, not called, still counts) and rules accept
+        that: the pragma mechanism exists for the rare justified case.
+        """
+        for info in self.enclosing_functions(node):
+            if info.jitted:
+                return info
+        return None
+
+    def in_loop(self, node: ast.AST) -> bool:
+        """Whether ``node`` sits lexically inside a for/while body of the
+        same function (crossing a def boundary resets — a closure defined
+        in a loop is the closure's problem, not its body's)."""
+        cur = self.parents.get(node)
+        child = node
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Lambda)):
+                return False
+            if isinstance(cur, (ast.For, ast.AsyncFor, ast.While)):
+                # the For iterable evaluates once, everything else in the
+                # loop node (body / orelse / While test) runs per iteration
+                if not (isinstance(cur, (ast.For, ast.AsyncFor))
+                        and child is cur.iter):
+                    return True
+            child = cur
+            cur = self.parents.get(cur)
+        return False
+
+    def resolve_int(self, node: ast.AST,
+                    fn: Optional[ast.AST] = None) -> Optional[int]:
+        """Literal int value of an expression, chasing simple names.
+
+        Resolves: int constants; names bound to an int default of the
+        enclosing function; names bound to a module-level int constant.
+        Anything else (min()/arithmetic/attributes) -> None, and the
+        geometry rules skip it rather than guess.
+        """
+        if isinstance(node, ast.Constant) and type(node.value) is int:
+            return node.value
+        if isinstance(node, ast.Name):
+            if fn is not None:
+                v = self._default_int(fn, node.id)
+                if v is not None:
+                    return v
+            for info in self.enclosing_functions(node):
+                v = self._default_int(info.node, node.id)
+                if v is not None:
+                    return v
+            return self.module_consts.get(node.id)
+        return None
+
+    @staticmethod
+    def _default_int(fn: ast.AST, name: str) -> Optional[int]:
+        a = fn.args
+        pos = a.posonlyargs + a.args
+        defaults = a.defaults
+        for arg, d in zip(pos[len(pos) - len(defaults):], defaults,
+                          strict=True):
+            if arg.arg == name and isinstance(d, ast.Constant) \
+                    and type(d.value) is int:
+                return d.value
+        for arg, d in zip(a.kwonlyargs, a.kw_defaults, strict=True):
+            if d is not None and arg.arg == name \
+                    and isinstance(d, ast.Constant) and type(d.value) is int:
+                return d.value
+        return None
+
+    def line_text(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+
+class ProjectIndex:
+    """Cross-module view: which functions read the config, transitively.
+
+    Built from every analyzed file's ``FuncInfo`` records, then closed
+    over the dotted-name call graph to a fixed point. Resolution is
+    best-effort by construction — a call the graph cannot link (dynamic
+    dispatch, registries) simply does not propagate, which keeps the
+    analysis quiet rather than noisy; the self-test pins the idioms it
+    must catch.
+    """
+
+    def __init__(self) -> None:
+        self.functions: Dict[str, FuncInfo] = {}
+
+    def add_file(self, ctx: FileContext) -> None:
+        for info in ctx.functions.values():
+            if info.qualname.endswith("<lambda>"):
+                continue  # lambdas are analyzed via their enclosing function
+            # first definition wins; duplicate qualnames (overloads in
+            # branches) are rare enough to ignore
+            self.functions.setdefault(info.qualname, info)
+
+    def finalize(self) -> None:
+        """Fixed-point propagation of ``reads_config`` up the call graph."""
+        changed = True
+        while changed:
+            changed = False
+            for info in self.functions.values():
+                if info.reads_config:
+                    continue
+                for callee in info.calls:
+                    target = self.functions.get(callee)
+                    if target is not None and target.reads_config:
+                        info.reads_config = True
+                        changed = True
+                        break
+
+    def reads_config(self, qualname: str) -> bool:
+        info = self.functions.get(qualname)
+        return bool(info and info.reads_config)
+
+    def reading_callees(self, info: FuncInfo) -> List[str]:
+        """Which of ``info``'s direct callees (transitively) read config."""
+        out = []
+        for callee in sorted(info.calls):
+            target = self.functions.get(callee)
+            if target is not None and target.reads_config:
+                out.append(callee)
+        return out

@@ -1,0 +1,193 @@
+"""DT — determinism (DESIGN.md §4.3).
+
+The repo's reproducibility contract: same config + same seed → identical
+assignments, identical tuned parameters, identical checkpoints. These
+rules catch the entropy leaks that break it silently — RNGs seeded from
+wall-clock/OS entropy (or not at all), and iteration orders that the
+runtime does not define (sets, directory listings) feeding anything that
+accumulates, so two runs of the same job diverge with no error anywhere.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from repro.analysis.context import FileContext
+from repro.analysis.registry import RawFinding, register_rule
+
+#: draws against the process-global numpy RNG — order-dependent across
+#: every call site in the process, untouched by the repo's seed plumbing
+_GLOBAL_NP_DRAWS = frozenset(
+    f"numpy.random.{fn}" for fn in (
+        "rand", "randn", "randint", "random", "random_sample", "normal",
+        "uniform", "choice", "permutation", "shuffle", "standard_normal",
+    ))
+_GLOBAL_STDLIB_DRAWS = frozenset(
+    f"random.{fn}" for fn in (
+        "random", "randint", "randrange", "uniform", "choice", "choices",
+        "sample", "shuffle", "gauss",
+    ))
+_RNG_FACTORIES = ("numpy.random.default_rng", "random.Random")
+_SEEDERS = ("numpy.random.seed", "random.seed")
+
+#: calls whose value is wall-clock / OS entropy — a seed derived from one
+#: makes the "seed" different every run by construction
+_ENTROPY_PREFIXES = ("time.", "secrets.", "uuid.")
+_ENTROPY_CALLS = ("os.urandom",)
+
+
+def _entropy_call(ctx: FileContext, node: ast.AST) -> Optional[str]:
+    if not isinstance(node, ast.Call):
+        return None
+    name = ctx.dotted(node.func)
+    if name is None:
+        return None
+    if name in _ENTROPY_CALLS or name.startswith(_ENTROPY_PREFIXES):
+        return name
+    return None
+
+
+@register_rule(
+    "DT501",
+    title="unseeded or entropy-seeded randomness",
+    explain="""
+    An RNG constructed from OS entropy — ``np.random.default_rng()`` /
+    ``random.Random()`` with no seed, a seed derived from ``time.*`` /
+    ``os.urandom`` / ``secrets`` / ``uuid``, or any draw against the
+    process-global ``np.random`` / ``random`` singletons (whose state
+    depends on every other call site in the process).
+
+    The §4.3 contract is bit-exact reruns: k-means++ seeding, ITIS
+    sampling and the data pipeline all thread explicit
+    ``default_rng(seed)`` / ``jax.random`` keys precisely so the same job
+    replays identically. One entropy-seeded draw upstream of a key
+    schedule makes results irreproducible with no error anywhere. Fix by
+    threading a seed from the caller (ultimately from config / CLI), and
+    deriving child seeds with ``spawn()`` / ``fold_in`` rather than fresh
+    entropy.
+    """,
+)
+def dt501(ctx: FileContext) -> Iterator[RawFinding]:
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = ctx.dotted(node.func)
+        if name is None:
+            continue
+        if name in _GLOBAL_NP_DRAWS or name in _GLOBAL_STDLIB_DRAWS:
+            yield node, (
+                f"{name}(...) draws from the process-global RNG — state "
+                f"depends on unrelated call sites; thread an explicit "
+                f"seeded generator instead (DESIGN.md §4.3)")
+            continue
+        if name in _RNG_FACTORIES or name in _SEEDERS:
+            if not node.args and not node.keywords:
+                yield node, (
+                    f"{name}() with no seed draws OS entropy — two runs of "
+                    f"the same job diverge; thread an explicit seed "
+                    f"(DESIGN.md §4.3)")
+                continue
+            seed = node.args[0] if node.args else None
+            if seed is None:
+                for kw in node.keywords:
+                    if kw.arg in ("seed", None):
+                        seed = kw.value
+            ent = _entropy_call(ctx, seed) if seed is not None else None
+            if ent:
+                yield node, (
+                    f"{name}(...) seeded from {ent}() — a wall-clock/OS "
+                    f"entropy seed is different every run; derive seeds "
+                    f"from the job seed (DESIGN.md §4.3)")
+
+
+def _sorted_wrapped(ctx: FileContext, node: ast.AST) -> bool:
+    """Whether ``node`` is a direct argument of ``sorted(...)``."""
+    parent = ctx.parents.get(node)
+    return (isinstance(parent, ast.Call)
+            and isinstance(parent.func, ast.Name)
+            and parent.func.id == "sorted")
+
+
+def _iteration_targets(tree: ast.AST) -> Iterator[ast.AST]:
+    """Every expression something iterates over: for-loops and
+    comprehension generators."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.For, ast.AsyncFor)):
+            yield node.iter
+        elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                               ast.GeneratorExp)):
+            for gen in node.generators:
+                yield gen.iter
+
+
+@register_rule(
+    "DT502",
+    title="iteration over a set with undefined order",
+    explain="""
+    A ``for`` loop or comprehension iterates a set literal or
+    ``set(...)`` / ``frozenset(...)`` call directly. Set iteration order
+    is a function of insertion history and hash seeding — stable enough to
+    pass tests, unstable enough to reorder work across processes. When
+    the loop feeds anything order-sensitive (accumulation into a float
+    sum, key derivation, file emission order), two runs differ. Wrap in
+    ``sorted(...)`` — the repo pays the O(n log n) everywhere order can
+    escape (cache keys in ``tune``, manifest writes in ``train``).
+    """,
+)
+def dt502(ctx: FileContext) -> Iterator[RawFinding]:
+    for it in _iteration_targets(ctx.tree):
+        bad = None
+        if isinstance(it, ast.Set):
+            bad = "a set literal"
+        elif isinstance(it, ast.Call) and isinstance(it.func, ast.Name) \
+                and it.func.id in ("set", "frozenset"):
+            bad = f"{it.func.id}(...)"
+        if bad and not _sorted_wrapped(ctx, it):
+            yield it, (
+                f"iterating {bad} — set order is undefined across "
+                f"processes; wrap in sorted(...) so downstream order is "
+                f"reproducible (DESIGN.md §4.3)")
+
+
+_FS_LISTING_CALLS = {
+    "os.listdir": "os.listdir",
+    "os.scandir": "os.scandir",
+    "glob.glob": "glob.glob",
+    "glob.iglob": "glob.iglob",
+}
+_FS_LISTING_METHODS = ("iterdir", "glob", "rglob")
+
+
+@register_rule(
+    "DT503",
+    title="unsorted filesystem listing order",
+    explain="""
+    A loop or comprehension iterates ``os.listdir`` / ``glob.glob`` /
+    ``Path.iterdir`` output directly. Listing order is filesystem-
+    dependent (POSIX guarantees nothing; it differs between ext4, tmpfs
+    and object-store FUSE mounts) — so checkpoint discovery, shard
+    ingestion and cache scans ordered by it do different things on
+    different machines. ``sorted(...)`` makes the order part of the
+    program. The checkpoint manager's retention scan is the canonical
+    in-repo example: it must delete the *oldest* steps, not the first
+    ones the kernel happens to return.
+    """,
+)
+def dt503(ctx: FileContext) -> Iterator[RawFinding]:
+    for it in _iteration_targets(ctx.tree):
+        if not isinstance(it, ast.Call) or _sorted_wrapped(ctx, it):
+            continue
+        name = ctx.dotted(it.func)
+        label = None
+        if name in _FS_LISTING_CALLS:
+            label = _FS_LISTING_CALLS[name]
+        elif isinstance(it.func, ast.Attribute) \
+                and it.func.attr in _FS_LISTING_METHODS \
+                and name is None:
+            # method on a non-module object: Path(...).iterdir() and such
+            label = f".{it.func.attr}()"
+        if label:
+            yield it, (
+                f"iterating {label} output directly — filesystem listing "
+                f"order is platform-dependent; wrap in sorted(...) "
+                f"(DESIGN.md §4.3)")

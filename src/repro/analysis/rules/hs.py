@@ -1,0 +1,151 @@
+"""HS — host-sync discipline on the hot paths.
+
+The fit/serve hot paths (``repro/kernels``, ``repro/core``,
+``repro/serve``) are built so the host never waits on the device: the
+streaming fold advances by host arithmetic alone, the decode loop feeds
+tokens without reading them back, spills to the host are *deliberate*
+forced copies (DESIGN.md §12). An accidental ``np.asarray`` / ``.item()``
+/ ``bool(jnp...)`` in that code inserts a device→host synchronization —
+latency the profiler attributes to nothing — or, on CPU backends, a
+zero-copy view that pins a device buffer. Deliberate sync points carry a
+``# repro: allow[HS...]: reason`` pragma; everything else is a bug.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional, Set
+
+from repro.analysis.context import FileContext
+from repro.analysis.registry import RawFinding, register_rule
+
+HOT_PATHS = ("src/repro/kernels/", "src/repro/core/", "src/repro/serve/")
+
+# calls that force (or can force) a device->host transfer / sync
+_SYNC_CALLS = {
+    "numpy.asarray": "np.asarray",
+    "numpy.array": "np.array",
+    "numpy.ascontiguousarray": "np.ascontiguousarray",
+    "jax.device_get": "jax.device_get",
+    "jax.block_until_ready": "jax.block_until_ready",
+}
+_SYNC_METHODS = ("item", "block_until_ready", "copy_to_host_async")
+
+#: names whose call produces a jax value (for the scalar-coercion rule):
+#: any dotted path rooted at jax/jnp, e.g. jnp.all, jax.numpy.sum, lax.*
+_JAX_ROOTS = ("jax", "jax.numpy", "jax.lax")
+
+
+@register_rule(
+    "HS201",
+    title="device->host sync/copy call on a hot path",
+    explain="""
+    ``np.asarray`` / ``np.array`` / ``np.ascontiguousarray`` /
+    ``jax.device_get`` / ``jax.block_until_ready`` / ``.item()`` /
+    ``.block_until_ready()`` called inside ``repro/kernels``,
+    ``repro/core`` or ``repro/serve``. Applied to a device value these
+    block the host on the device stream (and on CPU backends
+    ``np.asarray`` is a zero-copy view that *pins* the buffer — the exact
+    failure DESIGN.md §12 forces copies to avoid).
+
+    The analyzer cannot see types, so every occurrence on a hot path is
+    flagged; the documented spill points answer with a pragma stating the
+    reason, e.g.::
+
+        maps.append(np.array(out.assignment))  # repro: allow[HS201]: §12 spill — forced host copy
+
+    Anything without a pragma is either an accidental sync (fix: keep the
+    value on device, or batch the transfer at a documented boundary) or an
+    undocumented one (fix: add the reasoned pragma).
+    """,
+    scope=HOT_PATHS,
+)
+def hs201(ctx: FileContext) -> Iterator[RawFinding]:
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = ctx.dotted(node.func)
+        if name in _SYNC_CALLS:
+            yield node, (
+                f"{_SYNC_CALLS[name]}(...) on a hot path forces a "
+                f"device->host sync (or a pinning zero-copy view) — spill "
+                f"points must be deliberate and pragma'd (DESIGN.md §12)")
+        elif isinstance(node.func, ast.Attribute) \
+                and node.func.attr in _SYNC_METHODS and not node.args \
+                and not node.keywords:
+            yield node, (
+                f".{node.func.attr}() on a hot path blocks the host on "
+                f"the device stream — spill points must be deliberate "
+                f"and pragma'd (DESIGN.md §12)")
+
+
+def _local_jax_names(fn: ast.AST) -> Set[str]:
+    """Names assigned from a jax/jnp-rooted call within ``fn`` (one level
+    of single-assignment tracking — enough for ``x = jnp.all(...); int(x)``)."""
+    names: Set[str] = set()
+    for sub in ast.walk(fn):
+        if isinstance(sub, ast.Assign) and isinstance(sub.value, ast.Call):
+            if _is_jax_call(sub.value):
+                for t in sub.targets:
+                    if isinstance(t, ast.Name):
+                        names.add(t.id)
+    return names
+
+
+def _is_jax_call(call: ast.Call, ctx: Optional[FileContext] = None) -> bool:
+    # cheap structural test: dotted chain rooted at a jax-ish alias
+    cur = call.func
+    while isinstance(cur, ast.Attribute):
+        cur = cur.value
+    return isinstance(cur, ast.Name) and cur.id in ("jax", "jnp", "lax")
+
+
+@register_rule(
+    "HS202",
+    title="python scalar coercion of a jax value on a hot path",
+    explain="""
+    ``int(...)`` / ``float(...)`` / ``bool(...)`` applied to a jax
+    expression (a call rooted at ``jnp``/``jax``/``lax``, or a local name
+    assigned from one) inside the hot-path packages. Coercing a traced or
+    device value to a python scalar synchronizes the host with the device
+    — per loop iteration, that is the difference between a pipelined
+    decode/stream loop and one that stalls every step (the §12 streaming
+    executor exists to avoid exactly this).
+
+    Fix by keeping the decision on the device, deriving the quantity from
+    host-side arithmetic (shapes, counters), or — where a host decision
+    point is genuinely required, e.g. an early-exit check — making the
+    sync explicit and pragma'd.
+    """,
+    scope=HOT_PATHS,
+)
+def hs202(ctx: FileContext) -> Iterator[RawFinding]:
+    locals_cache: dict = {}
+
+    def scope_jax_locals(node: ast.AST) -> Set[str]:
+        encl = next(
+            (i.node for i in ctx.enclosing_functions(node)), ctx.tree)
+        if encl not in locals_cache:
+            locals_cache[encl] = _local_jax_names(encl)
+        return locals_cache[encl]
+
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Name)
+                and node.func.id in ("int", "float", "bool")
+                and len(node.args) == 1 and not node.keywords):
+            continue
+        arg = node.args[0]
+        coerced = None
+        if isinstance(arg, ast.Call) and _is_jax_call(arg):
+            coerced = "a jax call result"
+        elif isinstance(arg, ast.Name) and arg.id in scope_jax_locals(node):
+            coerced = f"`{arg.id}` (assigned from a jax call)"
+        elif isinstance(arg, ast.Subscript) \
+                and isinstance(arg.value, ast.Name) \
+                and arg.value.id in scope_jax_locals(node):
+            coerced = f"`{arg.value.id}[...]` (assigned from a jax call)"
+        if coerced:
+            yield node, (
+                f"{node.func.id}() of {coerced} synchronizes host "
+                f"and device on a hot path — derive it host-side "
+                f"or pragma the deliberate sync (DESIGN.md §12)")

@@ -1,0 +1,183 @@
+"""PK — Pallas kernel geometry (DESIGN.md §16).
+
+TPU vector memory is tiled: (8, 128) for f32 — 8 sublanes x 128 lanes —
+with the minor-most dimension on lanes. Pallas block shapes that are not
+powers of two, or whose trailing dims break sublane/lane alignment, force
+the compiler into padded/strided layouts (silent 2-8x slowdowns), and
+blocks that do not fit VMEM fail at lowering time on real hardware only —
+CI on CPU interpret mode never sees it. These rules check the *static*
+geometry: literal tile constants, defaults of ``block_*`` parameters, and
+a conservative VMEM working-set estimate per ``pallas_call``.
+
+Scope: only modules that import ``jax.experimental.pallas``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Tuple
+
+from repro.analysis.context import FileContext
+from repro.analysis.registry import RawFinding, register_rule
+
+#: f32 register tiling on TPU: 8 sublanes (second-minor) x 128 lanes (minor)
+SUBLANE, LANE = 8, 128
+
+#: VMEM budget per core in bytes. Real parts have ~16 MiB; the estimate
+#: must leave room for double buffering (the x2 below) and spill slack.
+VMEM_BUDGET = 16 * 1024 * 1024
+
+_TILE_PARAM_NAMES = ("block_q", "block_k", "block_s", "block_n", "block_d",
+                     "bq", "bk", "bs", "bn")
+
+
+def _imports_pallas(ctx: FileContext) -> bool:
+    return any(v.startswith("jax.experimental.pallas")
+               for v in ctx.aliases.values())
+
+
+def _pow2(v: int) -> bool:
+    return v >= 1 and (v & (v - 1)) == 0
+
+
+def _blockspec_dims(ctx: FileContext, call: ast.Call) -> List[ast.AST]:
+    """The shape-tuple element nodes of a ``pl.BlockSpec((a, b), ...)``."""
+    shape = None
+    if call.args and isinstance(call.args[0], ast.Tuple):
+        shape = call.args[0]
+    for kw in call.keywords:
+        if kw.arg == "block_shape" and isinstance(kw.value, ast.Tuple):
+            shape = kw.value
+    return list(shape.elts) if shape is not None else []
+
+
+def _check_dim(value: int, position: int, ndims: int) -> Optional[str]:
+    """Alignment verdict for one resolved literal dim (None = fine)."""
+    if not _pow2(value):
+        return (f"{value} is not a power of two — it cannot tile the "
+                f"pow2 shape buckets the autotuner measures at "
+                f"(DESIGN.md §14/§16)")
+    if position == ndims - 1 and value >= LANE and value % LANE != 0:
+        return f"minor dim {value} is not lane-aligned (multiple of {LANE})"
+    if ndims >= 2 and position == ndims - 2 and value >= SUBLANE \
+            and value % SUBLANE != 0:
+        return (f"second-minor dim {value} is not sublane-aligned "
+                f"(multiple of {SUBLANE})")
+    return None
+
+
+@register_rule(
+    "PK401",
+    title="Pallas tile constant breaks pow2 / sublane / lane alignment",
+    explain="""
+    A literal block dimension in a ``pl.BlockSpec`` shape (or the default
+    of a ``block_*`` tile parameter in a Pallas module) is not a power of
+    two, or a trailing dimension breaks the (8, 128) f32 register tiling.
+    Misaligned blocks compile — to padded, strided layouts that quietly
+    cost the 2-4x the fused kernels exist to win (DESIGN.md §16); non-pow2
+    tiles additionally can never be produced or validated by the tuning
+    cache, whose shape buckets are pow2 by construction (§14, the exact
+    staleness check ``tuned_params`` enforces at runtime).
+
+    Only dims the analyzer can resolve to int literals (constants,
+    parameter defaults, module constants) are checked; computed sizes
+    (``min(block_q, n)``) are skipped, not guessed.
+    """,
+    scope=("src/repro/kernels/",),
+)
+def pk401(ctx: FileContext) -> Iterator[RawFinding]:
+    if not _imports_pallas(ctx):
+        return
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call):
+            name = ctx.dotted(node.func) or ""
+            if name.endswith("BlockSpec"):
+                dims = _blockspec_dims(ctx, node)
+                for i, dim in enumerate(dims):
+                    v = ctx.resolve_int(dim)
+                    if v is None:
+                        continue
+                    verdict = _check_dim(v, i, len(dims))
+                    if verdict:
+                        yield dim, f"BlockSpec dim {i}: {verdict}"
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            a = node.args
+            pos = a.posonlyargs + a.args
+            pairs = list(zip(pos[len(pos) - len(a.defaults):], a.defaults,
+                             strict=True))
+            pairs += [(arg, d)
+                      for arg, d in zip(a.kwonlyargs, a.kw_defaults,
+                                        strict=True)
+                      if d is not None]
+            for arg, default in pairs:
+                if arg.arg in _TILE_PARAM_NAMES \
+                        and isinstance(default, ast.Constant) \
+                        and type(default.value) is int \
+                        and not _pow2(default.value):
+                    yield default, (
+                        f"default {arg.arg}={default.value} of "
+                        f"`{node.name}` is not a power of two — it cannot "
+                        f"tile the pow2 tuning buckets (DESIGN.md §14/§16)")
+
+
+@register_rule(
+    "PK402",
+    title="Pallas block working set exceeds the VMEM budget",
+    explain="""
+    The sum of a ``pallas_call``'s resolvable block buffers — every
+    ``BlockSpec`` shape in ``in_specs``/``out_specs``, assumed f32 (4
+    bytes) and doubled for the pipeline's double buffering — exceeds the
+    16 MiB per-core VMEM budget. Oversized blocks fail at Mosaic lowering
+    time on real TPUs only; CPU interpret mode (what CI runs) happily
+    simulates them, so the first signal would otherwise be a production
+    deploy. Dims that cannot be resolved to literals contribute their
+    resolvable factors only — the estimate is a lower bound, so exceeding
+    it is definitive.
+    """,
+    scope=("src/repro/kernels/",),
+)
+def pk402(ctx: FileContext) -> Iterator[RawFinding]:
+    if not _imports_pallas(ctx):
+        return
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call)
+                and (ctx.dotted(node.func) or "").endswith("pallas_call")):
+            continue
+        total = 0
+        resolved_any = False
+        specs: List[ast.AST] = []
+        for kw in node.keywords:
+            if kw.arg in ("in_specs", "out_specs"):
+                if isinstance(kw.value, (ast.List, ast.Tuple)):
+                    specs.extend(kw.value.elts)
+                else:
+                    specs.append(kw.value)
+            elif kw.arg == "out_shape":
+                pass  # shapes there are full-array, not per-block
+        for spec in specs:
+            if not (isinstance(spec, ast.Call)
+                    and (ctx.dotted(spec.func) or "").endswith("BlockSpec")):
+                continue
+            dims = _blockspec_dims(ctx, spec)
+            size = 1
+            ok = bool(dims)
+            for dim in dims:
+                v = ctx.resolve_int(dim)
+                if v is None:
+                    ok = False
+                    continue
+                size *= v
+            if ok:
+                resolved_any = True
+                total += size * 4  # f32 bytes; conservative lower bound
+        est = total * 2  # double buffering
+        if resolved_any and est > VMEM_BUDGET:
+            yield node, (
+                f"pallas_call block working set ≥ {est // (1024 * 1024)} MiB "
+                f"(f32, double-buffered) exceeds the "
+                f"{VMEM_BUDGET // (1024 * 1024)} MiB VMEM budget — this "
+                f"lowers on interpret-mode CI but fails on real TPUs "
+                f"(DESIGN.md §16)")
+
+
+def _tuple_dims(t: Tuple[int, ...]) -> str:
+    return "x".join(str(x) for x in t)

@@ -1,0 +1,139 @@
+"""RC — the §10 runtime-config dispatch contract.
+
+The contract: config resolution happens *before* the jit boundary. Public
+drivers are unjitted wrappers that resolve ``None`` kwargs from
+``runtime.active()`` and call an inner jitted function whose statics are
+the concrete values; any jitted function that still reads the config at
+trace time must carry ``RuntimeConfig.dispatch_key()`` as a static
+``_dispatch`` argument, so the compiled-cache key covers everything the
+trace read. A config read inside a jit without that pin is served from a
+stale compiled program after the config changes — silently.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.context import (
+    CONFIG_READ_CALLS,
+    DISPATCH_PARAM,
+    FileContext,
+)
+from repro.analysis.registry import RawFinding, register_rule
+
+
+@register_rule(
+    "RC101",
+    title="trace-time config read inside jit without a _dispatch pin",
+    explain="""
+    A function that jax traces (a ``@jax.jit``/``functools.partial(jax.jit,
+    ...)`` decorated def, a callable wrapped by ``jax.jit(...)``, or a
+    ``pallas_call`` kernel body) calls ``runtime.active()`` /
+    ``runtime.dispatch_key()`` / ``runtime.default_config()`` directly,
+    and takes no ``_dispatch`` parameter.
+
+    Why it matters (DESIGN.md §10): values read from the config during
+    tracing are baked into the compiled program, but without a
+    ``_dispatch`` static the jit cache key does not cover them — change
+    the config, hit the stale program. Fix by resolving the config in the
+    unjitted wrapper and passing concrete statics down, or by adding a
+    static ``_dispatch: tuple = ()`` parameter fed
+    ``RuntimeConfig.dispatch_key()`` by the wrapper (the idiom of
+    ``core/knn.py`` / ``cluster/kmeans.py``).
+    """,
+)
+def rc101(ctx: FileContext) -> Iterator[RawFinding]:
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = ctx.dotted(node.func)
+        if name not in CONFIG_READ_CALLS:
+            continue
+        jit_fn = ctx.enclosing_jit(node)
+        if jit_fn is None or jit_fn.has_dispatch:
+            continue
+        yield node, (
+            f"`{ctx.line_text(node.lineno)[:60]}` reads the runtime config "
+            f"at trace time inside jitted `{jit_fn.qualname}`, which has no "
+            f"static `{DISPATCH_PARAM}` parameter — a config change will "
+            f"not retrace this program (DESIGN.md §10)")
+
+
+@register_rule(
+    "RC102",
+    title="jitted function traces a config-reading callee without a "
+          "_dispatch pin",
+    explain="""
+    A jitted function without a ``_dispatch`` parameter calls — possibly
+    through several layers — a function that reads the runtime config
+    (``itis_step``, the ``kernels.ops`` entry points, any public wrapper
+    that resolves ``None`` kwargs from ``runtime.active()``). The read
+    happens while *this* function's trace is live, so it is exactly the
+    RC101 hazard, one call deeper: the cache key of the outer program does
+    not cover the configuration the trace consulted.
+
+    The call graph is resolved over dotted names across the analyzed file
+    set (best-effort: dynamic dispatch and registry indirection do not
+    propagate). Fix like RC101 — resolve in the wrapper, or add the
+    ``_dispatch`` static and thread ``runtime.dispatch_key()`` from the
+    call sites.
+    """,
+)
+def rc102(ctx: FileContext) -> Iterator[RawFinding]:
+    if ctx.project is None:
+        return
+    for info in ctx.functions.values():
+        # config_read_lines, not reads_config: finalize() propagates the
+        # latter transitively, and a *lexical* read is RC101's finding
+        if not info.jitted or info.has_dispatch or info.config_read_lines:
+            continue
+        node = info.node
+        readers = ctx.project.reading_callees(info)
+        if not readers:
+            continue
+        pretty = ", ".join(r.rsplit(".", 1)[-1] for r in readers[:3])
+        yield node, (
+            f"jitted `{info.qualname}` has no static `{DISPATCH_PARAM}` "
+            f"parameter but traces config-reading callee(s) {pretty} — "
+            f"the compiled cache key does not cover the config they "
+            f"resolve (DESIGN.md §10)")
+
+
+@register_rule(
+    "RC103",
+    title="REPRO_* environment read outside the runtime config",
+    explain="""
+    ``os.environ`` / ``os.getenv`` is consulted for a ``REPRO_*`` variable
+    somewhere other than ``repro/runtime/config.py``. The runtime config
+    reads every ``REPRO_*`` override exactly once at import into the
+    process-global default (DESIGN.md §10); a second ad-hoc read sees a
+    different value after ``update_default``/``configure`` scopes, or
+    changes behaviour mid-process when the environment mutates —
+    configuration must flow through :class:`RuntimeConfig` so scoping,
+    ``dispatch_key()`` and the documented precedence apply. Fix by adding
+    a config field (plus ``_ENV_FIELDS`` entry) and reading the active
+    config instead.
+    """,
+)
+def rc103(ctx: FileContext) -> Iterator[RawFinding]:
+    if ctx.path.endswith("runtime/config.py"):
+        return
+    for node in ast.walk(ctx.tree):
+        var = None
+        if isinstance(node, ast.Call):
+            name = ctx.dotted(node.func)
+            if name in ("os.getenv", "os.environ.get") and node.args:
+                a0 = node.args[0]
+                if isinstance(a0, ast.Constant) and isinstance(a0.value, str):
+                    var = a0.value
+        elif isinstance(node, ast.Subscript):
+            if ctx.dotted(node.value) == "os.environ" \
+                    and isinstance(node.slice, ast.Constant) \
+                    and isinstance(node.slice.value, str) \
+                    and isinstance(node.ctx, ast.Load):
+                var = node.slice.value
+        if var is not None and var.startswith("REPRO_"):
+            yield node, (
+                f"{var} read outside repro/runtime/config.py — REPRO_* "
+                f"overrides must flow through RuntimeConfig so scoped "
+                f"configure() and dispatch_key() see them (DESIGN.md §10)")

@@ -1,0 +1,122 @@
+"""RT — retrace hazards.
+
+The §10/§14 machinery guarantees that *config changes retrace*; these
+rules catch the patterns that defeat or abuse that guarantee from the
+other side: mutating the process default inside a scoped override (the
+mutation is shadowed, so nothing retraces), statics that cannot be hashed
+into a cache key, and jit wrappers constructed per loop iteration (every
+iteration gets a fresh cache, i.e. a guaranteed retrace).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.context import FileContext
+from repro.analysis.registry import RawFinding, register_rule
+
+_MUTATORS = ("repro.runtime.update_default", "repro.runtime.set_default",
+             "repro.runtime.config.update_default",
+             "repro.runtime.config.set_default")
+_CONFIGURE = ("repro.runtime.configure", "repro.runtime.config.configure")
+
+
+@register_rule(
+    "RT301",
+    title="process-default config mutation inside a configure() scope",
+    explain="""
+    ``runtime.update_default(...)`` / ``runtime.set_default(...)`` called
+    lexically inside a ``with runtime.configure(...):`` block. The scoped
+    override sits on top of the default on the thread-local stack
+    (DESIGN.md §10), so the mutated default is shadowed until the scope
+    exits: dispatch keeps resolving the scope's values, nothing retraces,
+    and the "change" silently applies only after an unwind the author may
+    be three frames away from. Mutate the default outside the scope, or
+    use a nested ``configure(...)`` override instead.
+    """,
+)
+def rt301(ctx: FileContext) -> Iterator[RawFinding]:
+    # collect configure() with-blocks, then flag mutators inside them
+    scopes = []
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            for item in node.items:
+                expr = item.context_expr
+                if isinstance(expr, ast.Call) \
+                        and ctx.dotted(expr.func) in _CONFIGURE:
+                    scopes.append(node)
+                    break
+    for scope in scopes:
+        for node in ast.walk(scope):
+            if isinstance(node, ast.Call) \
+                    and ctx.dotted(node.func) in _MUTATORS:
+                fn = ctx.dotted(node.func).rsplit(".", 1)[-1]
+                yield node, (
+                    f"runtime.{fn}(...) inside a `with runtime.configure"
+                    f"(...)` scope — the scoped override shadows the "
+                    f"mutated default, so the change is invisible (and "
+                    f"nothing retraces) until the scope exits")
+
+
+@register_rule(
+    "RT302",
+    title="jit static argument with an unhashable default",
+    explain="""
+    A parameter named in ``static_argnames`` defaults to a list / dict /
+    set literal. Static arguments become part of the jit cache key, which
+    requires hashing: the default value raises ``TypeError: unhashable
+    type`` the first time the caller omits the argument — at call time,
+    far from the definition. Use a tuple / frozenset / None default (the
+    repo's inner jits use ``_dispatch: tuple = ()``).
+    """,
+)
+def rt302(ctx: FileContext) -> Iterator[RawFinding]:
+    for node, info in ctx.functions.items():
+        if not info.jitted or not info.static_names:
+            continue
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        a = node.args
+        pos = a.posonlyargs + a.args
+        pairs = list(zip(pos[len(pos) - len(a.defaults):], a.defaults,
+                         strict=True))
+        pairs += [(arg, d)
+                  for arg, d in zip(a.kwonlyargs, a.kw_defaults,
+                                    strict=True)
+                  if d is not None]
+        for arg, default in pairs:
+            if arg.arg in info.static_names \
+                    and isinstance(default, (ast.List, ast.Dict, ast.Set,
+                                             ast.DictComp, ast.ListComp,
+                                             ast.SetComp)):
+                kind = type(default).__name__.lower().replace("comp", " comp")
+                yield default, (
+                    f"static argument `{arg.arg}` of jitted "
+                    f"`{info.qualname}` defaults to a {kind} — statics are "
+                    f"hashed into the jit cache key, so the default raises "
+                    f"TypeError at call time; use tuple/frozenset/None")
+
+
+@register_rule(
+    "RT303",
+    title="jax.jit wrapper constructed inside a loop",
+    explain="""
+    ``jax.jit(...)`` called in a for/while body. jit caches compiled
+    programs on the *wrapper object*: a wrapper constructed per iteration
+    starts with an empty cache, so every iteration re-traces and
+    re-compiles even when shapes and statics repeat — the retrace cost
+    §10 is engineered to avoid, paid n times. Hoist the ``jax.jit`` call
+    out of the loop (or cache the wrapper, as ``ServeEngine`` does at
+    construction). Sweeps that *intend* one compile per iteration (each
+    cell a different shape) carry a pragma saying so.
+    """,
+)
+def rt303(ctx: FileContext) -> Iterator[RawFinding]:
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call) \
+                and ctx.dotted(node.func) in ("jax.jit", "jax.api.jit") \
+                and ctx.in_loop(node):
+            yield node, (
+                "jax.jit(...) inside a loop body builds a fresh wrapper "
+                "(empty compile cache) every iteration — every pass "
+                "retraces; hoist the wrapper out of the loop")

@@ -1,0 +1,357 @@
+"""Analyzer self-test: every rule must catch its canonical violation.
+
+For each registered rule there is a *bad* snippet (the exact idiom the
+rule exists to flag, at a virtual path inside the rule's scope) and a
+*clean* snippet (the repaired idiom at the same path). The self-test runs
+the full pipeline — FileContext, ProjectIndex, pragma parsing — over the
+virtual files and asserts: bad flags the rule, clean stays quiet, and a
+pragma'd copy of the bad snippet is suppressed. CI runs this as its own
+leg so a refactor of the analyzer cannot silently lobotomize a rule: the
+gate would go green for the wrong reason, which is the one failure mode a
+static gate must not have.
+"""
+from __future__ import annotations
+
+import dataclasses
+import textwrap
+from typing import Dict, List, Tuple
+
+from repro.analysis.registry import available_rules
+from repro.analysis.runner import run_check
+
+
+@dataclasses.dataclass(frozen=True)
+class Case:
+    rule: str
+    path: str        # virtual repo-relative path (chooses the rule's scope)
+    bad: str         # must yield >=1 finding of `rule`
+    clean: str       # must yield none
+    pragma_ok: bool = True  # also verify a pragma'd bad copy is suppressed
+
+
+CASES: Tuple[Case, ...] = (
+    Case(
+        rule="RC101",
+        path="src/repro/models/x.py",
+        bad="""
+            import jax
+            from repro import runtime
+
+            @jax.jit
+            def step(x):
+                cfg = runtime.active()
+                return x * cfg.block_q
+            """,
+        clean="""
+            import functools
+            import jax
+            from repro import runtime
+
+            @functools.partial(jax.jit, static_argnames=("_dispatch",))
+            def step(x, _dispatch=()):
+                cfg = runtime.active()
+                return x * cfg.block_q
+            """,
+    ),
+    Case(
+        rule="RC102",
+        path="src/repro/models/x.py",
+        bad="""
+            import jax
+            from repro import runtime
+
+            def resolve_impl(x):
+                return runtime.active().impl
+
+            @jax.jit
+            def step(x):
+                return resolve_impl(x)
+            """,
+        clean="""
+            import functools
+            import jax
+            from repro import runtime
+
+            def resolve_impl(x):
+                return runtime.active().impl
+
+            @functools.partial(jax.jit, static_argnames=("_dispatch",))
+            def step(x, _dispatch=()):
+                return resolve_impl(x)
+            """,
+    ),
+    Case(
+        rule="RC103",
+        path="src/repro/models/x.py",
+        bad="""
+            import os
+
+            INTERPRET = os.getenv("REPRO_INTERPRET", "0") == "1"
+            """,
+        clean="""
+            from repro import runtime
+
+            def interpret_enabled():
+                return runtime.active().interpret
+            """,
+    ),
+    Case(
+        rule="HS201",
+        path="src/repro/core/x.py",
+        bad="""
+            import numpy as np
+
+            def frontier(chunk):
+                return np.asarray(chunk)
+            """,
+        clean="""
+            def frontier(chunk):
+                return chunk
+            """,
+    ),
+    Case(
+        rule="HS202",
+        path="src/repro/serve/x.py",
+        bad="""
+            import jax.numpy as jnp
+
+            def decode_done(tokens, eos):
+                done = jnp.all(tokens == eos)
+                return bool(done)
+            """,
+        clean="""
+            def decode_done(pos_host, max_len):
+                return bool(pos_host >= max_len)
+            """,
+    ),
+    Case(
+        rule="RT301",
+        path="src/repro/models/x.py",
+        bad="""
+            from repro import runtime
+
+            def run(cfg):
+                with runtime.configure(interpret=True):
+                    runtime.update_default(impl="ref")
+            """,
+        clean="""
+            from repro import runtime
+
+            def run(cfg):
+                runtime.update_default(impl="ref")
+                with runtime.configure(interpret=True):
+                    pass
+            """,
+    ),
+    Case(
+        rule="RT302",
+        path="src/repro/models/x.py",
+        bad="""
+            import functools
+            import jax
+
+            @functools.partial(jax.jit, static_argnames=("opts",))
+            def step(x, opts=[]):
+                return x
+            """,
+        clean="""
+            import functools
+            import jax
+
+            @functools.partial(jax.jit, static_argnames=("opts",))
+            def step(x, opts=()):
+                return x
+            """,
+    ),
+    Case(
+        rule="RT303",
+        path="src/repro/models/x.py",
+        bad="""
+            import jax
+
+            def sweep(fns, x):
+                for fn in fns:
+                    x = jax.jit(fn)(x)
+                return x
+            """,
+        clean="""
+            import jax
+
+            def sweep(fns, x):
+                jitted = [jax.jit(fn) for fn in fns]
+                for fn in jitted:
+                    x = fn(x)
+                return x
+            """,
+    ),
+    Case(
+        rule="PK401",
+        path="src/repro/kernels/x.py",
+        bad="""
+            from jax.experimental import pallas as pl
+
+            def spec():
+                return pl.BlockSpec((8, 96), lambda i: (i, 0))
+            """,
+        clean="""
+            from jax.experimental import pallas as pl
+
+            def spec():
+                return pl.BlockSpec((8, 128), lambda i: (i, 0))
+            """,
+    ),
+    Case(
+        rule="PK402",
+        path="src/repro/kernels/x.py",
+        bad="""
+            from jax.experimental import pallas as pl
+
+            def call(kernel, shape):
+                return pl.pallas_call(
+                    kernel,
+                    out_shape=shape,
+                    in_specs=[pl.BlockSpec((4096, 4096), lambda i: (i, 0))],
+                    out_specs=pl.BlockSpec((4096, 4096), lambda i: (i, 0)),
+                )
+            """,
+        clean="""
+            from jax.experimental import pallas as pl
+
+            def call(kernel, shape):
+                return pl.pallas_call(
+                    kernel,
+                    out_shape=shape,
+                    in_specs=[pl.BlockSpec((256, 128), lambda i: (i, 0))],
+                    out_specs=pl.BlockSpec((256, 128), lambda i: (i, 0)),
+                )
+            """,
+    ),
+    Case(
+        rule="DT501",
+        path="src/repro/models/x.py",
+        bad="""
+            import numpy as np
+
+            def init(n):
+                rng = np.random.default_rng()
+                return rng.normal(size=n)
+            """,
+        clean="""
+            import numpy as np
+
+            def init(n, seed):
+                rng = np.random.default_rng(seed)
+                return rng.normal(size=n)
+            """,
+    ),
+    Case(
+        rule="DT502",
+        path="src/repro/models/x.py",
+        bad="""
+            def emit(handlers):
+                out = []
+                for name in {"b", "a", "c"}:
+                    out.append(handlers[name])
+                return out
+            """,
+        clean="""
+            def emit(handlers):
+                out = []
+                for name in sorted({"b", "a", "c"}):
+                    out.append(handlers[name])
+                return out
+            """,
+    ),
+    Case(
+        rule="DT503",
+        path="src/repro/models/x.py",
+        bad="""
+            import os
+
+            def shards(d):
+                return [f for f in os.listdir(d) if f.endswith(".npz")]
+            """,
+        clean="""
+            import os
+
+            def shards(d):
+                return [f for f in sorted(os.listdir(d))
+                        if f.endswith(".npz")]
+            """,
+    ),
+    Case(
+        rule="WN601",
+        path="src/repro/models/x.py",
+        bad="""
+            import warnings
+
+            def prune(cache):
+                warnings.warn("stale entry", RuntimeWarning)
+            """,
+        clean="""
+            import warnings
+
+            def prune(cache):
+                warnings.warn("stale entry", RuntimeWarning, stacklevel=2)
+            """,
+    ),
+)
+
+
+def _pragma_variant(case: Case) -> str:
+    """The bad snippet with a standalone pragma above every line the rule
+    flags — built by running the rule and inserting comments."""
+    src = textwrap.dedent(case.bad).strip("\n") + "\n"
+    report = run_check({case.path: src}, only=[case.rule])
+    lines = src.splitlines()
+    flagged = sorted({f.line for f in report.new}, reverse=True)
+    for line in flagged:
+        indent = lines[line - 1][: len(lines[line - 1])
+                                 - len(lines[line - 1].lstrip())]
+        lines.insert(
+            line - 1,
+            f"{indent}# repro: allow[{case.rule}]: self-test suppression")
+    return "\n".join(lines) + "\n"
+
+
+def run_selftest() -> Tuple[bool, List[str]]:
+    """Run every case; returns (all passed, human-readable lines)."""
+    lines: List[str] = []
+    ok = True
+    covered = {c.rule for c in CASES}
+    missing = [r for r in available_rules() if r not in covered]
+    if missing:
+        ok = False
+        lines.append(
+            f"FAIL registry: rules without a self-test case: "
+            f"{', '.join(missing)}")
+
+    for case in CASES:
+        bad_src = textwrap.dedent(case.bad).strip("\n") + "\n"
+        clean_src = textwrap.dedent(case.clean).strip("\n") + "\n"
+        failures: List[str] = []
+
+        bad = run_check({case.path: bad_src}, only=[case.rule])
+        if not any(f.rule == case.rule for f in bad.new):
+            failures.append("bad snippet not flagged")
+
+        clean = run_check({case.path: clean_src}, only=[case.rule])
+        if clean.new:
+            failures.append(
+                "clean snippet flagged: "
+                + "; ".join(f.format() for f in clean.new))
+
+        if case.pragma_ok and not failures:
+            sup = run_check({case.path: _pragma_variant(case)},
+                            only=[case.rule])
+            if sup.new:
+                failures.append("pragma did not suppress the bad snippet")
+            elif not sup.suppressed_pragma:
+                failures.append("pragma variant produced no suppression")
+
+        if failures:
+            ok = False
+            lines.append(f"FAIL {case.rule}: " + "; ".join(failures))
+        else:
+            lines.append(f"ok   {case.rule}")
+    return ok, lines

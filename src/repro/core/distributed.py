@@ -541,6 +541,7 @@ def itis_sharded(
     assignments = []
     n_protos = jnp.sum(cur_v).astype(jnp.int32)
     for level in range(m):
+        # repro: allow[HS202]: deliberate per-level sync — the early-exit floor is a host decision, m times per fit
         n_valid = int(jnp.sum(cur_v))
         if n_valid < max(min_points, 2 * t):
             break

@@ -139,6 +139,7 @@ class ClusterIndex(NamedTuple):
     def n_valid(self) -> int:
         """Count of real (non-padding) prototypes. Forces a device sync —
         a host-side inspection helper, not for use inside traced code."""
+        # repro: allow[HS202]: documented host inspection helper — the docstring above is the contract
         return int(jnp.sum(self.proto_valid))
 
     def check_servable(self, expect_dim: Optional[int] = None

@@ -202,6 +202,7 @@ def itis(
     cur_x, cur_m, cur_v = x, mass, valid
     n_protos = jnp.sum(cur_v).astype(jnp.int32)
     for level in range(m):
+        # repro: allow[HS202]: deliberate per-level sync — the early-exit floor is a host decision, m times per fit
         n_valid = int(jnp.sum(cur_v))
         if n_valid < max(min_points, 2 * t):
             break

@@ -265,6 +265,7 @@ class FitResult:
 
     def _proto_labels_np(self) -> np.ndarray:
         if self._proto_labels_host is None:
+            # repro: allow[HS201]: fit epilogue — final labels materialize to host once, cached; the fit loop is already complete
             self._proto_labels_host = np.asarray(self.proto_labels)
         return self._proto_labels_host
 
@@ -276,6 +277,7 @@ class FitResult:
         if chunk_idx != 0:
             raise IndexError(
                 f"in-memory fit has a single chunk; got index {chunk_idx}")
+        # repro: allow[HS201]: fit epilogue — labels_for is the documented host hand-off point, after the fit completed
         return np.asarray(self._labels)
 
     def iter_labels(self) -> Iterator[np.ndarray]:
@@ -598,9 +600,11 @@ def _finalize_backend(plan: FitPlan, red: Reduction) -> jax.Array:
         fn = resolve_backend(plan.backend)
         protos, pvalid, pw = red.protos, red.valid, w
         if plan.executor in SHARDED_EXECUTORS:
-            protos = jax.device_get(protos)
-            pvalid = jax.device_get(pvalid)
-            pw = None if pw is None else jax.device_get(pw)
+            # the host backend cannot consume sharded arrays: gather the
+            # (small) prototype set once, after the sharded reduction
+            protos = jax.device_get(protos)  # repro: allow[HS201]: sharded epilogue gather
+            pvalid = jax.device_get(pvalid)  # repro: allow[HS201]: sharded epilogue gather
+            pw = None if pw is None else jax.device_get(pw)  # repro: allow[HS201]: sharded epilogue gather
         proto_labels = fn(protos, valid=pvalid, weights=pw, key=key_backend,
                           impl=plan.impl, **kwargs)
     return jnp.where(red.valid, proto_labels, -1).astype(jnp.int32)

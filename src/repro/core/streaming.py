@@ -99,6 +99,7 @@ def _normalize_chunk(item, driver: str) -> Tuple[np.ndarray, int]:
     """Accept bare (c, d) arrays or ``(chunk, n_valid)`` pairs."""
     if isinstance(item, (tuple, list)) and len(item) == 2:
         arr, n_valid = item
+        # repro: allow[HS201]: chunk ingest — stream chunks are host data by contract (§12), coerced once before any device work
         arr = np.asarray(arr, np.float32)
         n_valid = int(n_valid)
         if not 0 <= n_valid <= arr.shape[0]:
@@ -106,6 +107,7 @@ def _normalize_chunk(item, driver: str) -> Tuple[np.ndarray, int]:
                 f"{driver}: chunk n_valid={n_valid} outside "
                 f"[0, {arr.shape[0]}]")
         return arr, n_valid
+    # repro: allow[HS201]: chunk ingest — stream chunks are host data by contract (§12), coerced once before any device work
     arr = np.asarray(item, np.float32)
     return arr, arr.shape[0]
 
@@ -371,6 +373,7 @@ def _run_stream(plan: FitPlan, chunks, placement_cls) -> Reduction:
 
     def cascade():
         nonlocal res, frontier, n_cascades
+        # repro: allow[HS202]: deliberate per-cascade sync — compaction-vs-reduction is a host decision, once per reservoir fill, not per chunk
         occ_valid = int(jnp.sum(res[2]))
         if occ_valid < floor:
             # the frontier is exhausted but the slots are mostly masked
@@ -379,11 +382,13 @@ def _run_stream(plan: FitPlan, chunks, placement_cls) -> Reduction:
             # holes out instead — an identity level that frees the space
             # without collapsing anything
             res, assignment = placement.compact(res)
+            # repro: allow[HS201]: §12 spill — forced host copy (np.array, never a view) of the per-level map
             maps.append(np.array(assignment))  # true host copy
             frontier = occ_valid
             return
         ck = jax.random.fold_in(key_cascade, n_cascades)
         out = placement.level_step(*res, key=ck, n_out=cascade_out)
+        # repro: allow[HS201]: §12 spill — forced host copy (np.array, never a view) of the per-level map
         maps.append(np.array(out.assignment))  # true host copy, not a view
         res = placement.pad_protos(out, reservoir_n)
         frontier = cascade_out
@@ -443,6 +448,7 @@ def _run_stream(plan: FitPlan, chunks, placement_cls) -> Reduction:
         out = placement.level_step(xj, mj, vj, key=sub, n_out=chunk_out)
         off = fold(out.protos, out.mass, out.valid, chunk_out)
         epoch = len(maps)  # after the fold — see the raw path above
+        # repro: allow[HS201]: §12 spill — forced host copy (np.array, never a view) of the chunk assignment
         chunk_assign.append(np.array(out.assignment))  # true host copy
         chunk_offset.append(off)
         chunk_epoch.append(epoch)
@@ -461,12 +467,14 @@ def _run_stream(plan: FitPlan, chunks, placement_cls) -> Reduction:
     sizes = level_sizes(size0, t, m - 1, multiple=mult) if m > 1 else [size0]
     buf_x, buf_m, buf_v = placement.prefix(res, frontier, size0)
     for level in range(m - 1):
+        # repro: allow[HS202]: deliberate per-level sync — the §6 early-exit floor is a host decision, m-1 times per fit, stream loop is already drained
         n_valid = int(jnp.sum(buf_v))
         if n_valid < floor:
             break
         key_chain, sub = jax.random.split(key_chain)
         out = placement.level_step(buf_x, buf_m, buf_v, key=sub,
                                    n_out=sizes[level + 1])
+        # repro: allow[HS201]: §12 spill — forced host copy (np.array, never a view) of the per-level map
         maps.append(np.array(out.assignment))  # true host copy, not a view
         buf_x, buf_m, buf_v = out.protos, out.mass, out.valid
 

@@ -131,7 +131,7 @@ def _add_ihtc_bias(c, s):
             cc[k2], ss[k2] = _add_ihtc_bias(c[k2], s[k2])
         return cc, ss
     if isinstance(c, (list, tuple)):
-        pairs = [_add_ihtc_bias(a, b) for a, b in zip(c, s)]
+        pairs = [_add_ihtc_bias(a, b) for a, b in zip(c, s, strict=True)]
         return [p[0] for p in pairs], [p[1] for p in pairs]
     return c, s
 

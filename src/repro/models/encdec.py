@@ -107,7 +107,7 @@ def encode(
         x, _ = jax.lax.scan(body, x, params["enc"])
     else:  # unrolled (cost-accounting probes)
         for i in range(cfg.n_enc_layers):
-            lp = jax.tree_util.tree_map(lambda a: a[i], params["enc"])
+            lp = jax.tree_util.tree_map(lambda a, i=i: a[i], params["enc"])
             x, _ = body(x, lp)
     return rms_norm(x, params["ln_enc"], cfg.norm_eps)
 
@@ -180,7 +180,8 @@ def decode(
             x, _ = jax.lax.scan(body, x, params["dec"])
         else:  # unrolled (cost-accounting probes)
             for i in range(cfg.n_layers):
-                lp = jax.tree_util.tree_map(lambda a: a[i], params["dec"])
+                lp = jax.tree_util.tree_map(lambda a, i=i: a[i],
+                                            params["dec"])
                 x, _ = body(x, lp)
         new_caches = None
     else:
@@ -192,7 +193,7 @@ def decode(
         else:
             outs = []
             for i in range(cfg.n_layers):
-                sl = jax.tree_util.tree_map(lambda a: a[i],
+                sl = jax.tree_util.tree_map(lambda a, i=i: a[i],
                                             (params["dec"], caches))
                 x, nc = body(x, sl)
                 outs.append(nc)

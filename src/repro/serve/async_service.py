@@ -347,6 +347,7 @@ class AsyncClusterService:
         t_admit = self._loop.now()
         req = _Request(next(self._rid), state.tenant, n, fut, t_admit,
                        state.entry)
+        # repro: allow[HS201]: admission-time ingest — client queries are host data; sliced into segments before any device work
         q = np.asarray(queries)
         deadline = t_admit + self.max_wait
         segments = [
@@ -510,6 +511,7 @@ class AsyncClusterService:
     def _run_batch(entry: _IndexEntry, queries: np.ndarray) -> np.ndarray:
         # np.asarray materializes (device sync) so completion == labels
         # actually available to the client, not a lazy device handle
+        # repro: allow[HS201]: deliberate materialization — completion must mean results-on-host, runs on the worker thread, never the event loop
         return np.asarray(entry.service.assign_bucket(queries))
 
     def _on_batch_done(self, batch, result, exc) -> None:

@@ -117,6 +117,7 @@ class ClusterService:
             self.index = self.index.replicate(cfg.mesh)
         d = self.index.dim
         for b in self.buckets:
+            # repro: allow[HS201]: warmup — blocking here is the point: compile every bucket before traffic arrives
             jax.block_until_ready(
                 self.index.assign(jnp.zeros((b, d), self.index.protos.dtype),
                                   impl=self.impl, block=self.block))

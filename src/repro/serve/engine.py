@@ -16,7 +16,10 @@ import jax.numpy as jnp
 
 from repro.models.registry import ModelBundle
 from repro.models.transformer import ShardingPlan
-from repro.serve.kv_compression import compress_model_caches
+from repro.serve.kv_compression import (
+    compress_model_caches,
+    find_attention_caches,
+)
 
 
 @dataclass
@@ -33,12 +36,14 @@ class ServeConfig:
 
 
 class ServeEngine:
-    def __init__(self, bundle: ModelBundle, params, scfg: ServeConfig = ServeConfig(),
-                 plan: ShardingPlan = ShardingPlan()):
+    def __init__(self, bundle: ModelBundle, params,
+                 scfg: Optional[ServeConfig] = None,
+                 plan: Optional[ShardingPlan] = None):
         self.bundle = bundle
         self.params = params
-        self.scfg = scfg
-        self.plan = plan
+        self.scfg = scfg if scfg is not None else ServeConfig()
+        self.plan = plan if plan is not None else ShardingPlan()
+        scfg, plan = self.scfg, self.plan
         self._prefill = jax.jit(
             lambda p, c, b: bundle.prefill(p, c, b, plan=plan, impl=scfg.impl)
         )
@@ -73,11 +78,17 @@ class ServeEngine:
         caches = self.bundle.init_caches(b, total, **cache_kw)
         logits, caches = self._prefill(self.params, caches, batch)
 
+        # Host-side mirror of the cache write position (§12: the decode
+        # loop must not read the device to know where it is). After a
+        # compress, pos == P == cache_size - tail — all shape arithmetic;
+        # each decode step then advances it by one.
+        pos_host = -1
         if scfg.compress:
             caches = compress_model_caches(
                 caches, scfg.compress_t, scfg.compress_m,
                 tail=scfg.compress_tail, impl="ref" if scfg.impl == "xla" else scfg.impl,
             )
+            pos_host = self._cache_size(caches) - scfg.compress_tail
 
         out: List[jax.Array] = []
         done = jnp.zeros((b,), bool)
@@ -87,7 +98,12 @@ class ServeEngine:
             out.append(tok)
             if scfg.eos_id >= 0:
                 done = done | (tok == scfg.eos_id)
-                if bool(jnp.all(done)):
+                # Deliberate one-scalar-per-step sync: EOS early-exit is a
+                # host control decision, there is nothing to derive it from
+                # but the device. device_get makes the transfer explicit
+                # rather than hiding it in a bool() coercion.
+                # repro: allow[HS201]: deliberate EOS early-exit sync — one scalar per step, the only device read in the decode loop
+                if jax.device_get(jnp.all(done)):
                     break
             key = jax.random.fold_in(key, i)
             logits, caches = self._decode(
@@ -95,22 +111,25 @@ class ServeEngine:
             )
             tok = self._sample(logits, key)
             if scfg.compress:
-                from repro.serve.kv_compression import find_attention_caches
-
-                c0 = next(find_attention_caches(caches))
-                pos = c0["pos"]
-                stacked = c0["k"].ndim == 5  # (rep, b, h, S, hd)
-                size = c0["k"].shape[3 if stacked else 2]
-                pos_val = int(pos[0]) if stacked else int(pos)
-                if pos_val >= size:  # tail full → recompress
+                pos_host += 1  # _decode appended one token per sequence
+                if pos_host >= self._cache_size(caches):  # tail full
                     caches = compress_model_caches(
                         caches, scfg.compress_t, scfg.compress_m,
                         tail=scfg.compress_tail,
                         impl="ref" if scfg.impl == "xla" else scfg.impl,
                     )
+                    pos_host = self._cache_size(caches) - scfg.compress_tail
                     n_compress += 1
         return {
             "tokens": jnp.stack(out, axis=1),
             "n_steps": len(out),
             "compressions": n_compress,
         }
+
+    @staticmethod
+    def _cache_size(caches) -> int:
+        """Sequence capacity of the first attention cache — static shape
+        metadata, no device read."""
+        c0 = next(find_attention_caches(caches))
+        stacked = c0["k"].ndim == 5  # (rep, b, h, S, hd)
+        return c0["k"].shape[3 if stacked else 2]

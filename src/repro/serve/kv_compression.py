@@ -21,13 +21,14 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import runtime
 from repro.core.itis import itis_step
 from repro.core.prototypes import reduce_to_prototypes
 
 _MASKED = -1e30
 
 
-@functools.partial(jax.jit, static_argnames=("t", "m", "impl"))
+@functools.partial(jax.jit, static_argnames=("t", "m", "impl", "_dispatch"))
 def compress_kv_head(
     k: jax.Array,      # (S, hd)
     v: jax.Array,      # (S, hd)
@@ -38,10 +39,16 @@ def compress_kv_head(
     *,
     key: Optional[jax.Array] = None,
     impl: str = "auto",
+    _dispatch: tuple = (),
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Compress one head's KV set by (t)^m. Returns (k̄ (P,hd), v̄, mass, valid)
     with P = S // t^m. V prototypes use the same clustering as K (attention
-    output = Σ p_i v_i needs E[v | cluster], mass-weighted)."""
+    output = Σ p_i v_i needs E[v | cluster], mass-weighted).
+
+    ``_dispatch`` is the §10 cache-key pin: ``itis_step`` /
+    ``reduce_to_prototypes`` resolve the active config while this trace is
+    live, so the caller passes ``runtime.dispatch_key()`` to make config
+    changes retrace."""
     if key is None:
         key = jax.random.PRNGKey(0)
     kv = jnp.concatenate([k.astype(jnp.float32), v.astype(jnp.float32)], axis=-1)
@@ -89,9 +96,12 @@ def compress_cache(
     valid = jnp.broadcast_to(jnp.arange(S)[None, None, :] < pos, (b, h, S))
 
     flat = lambda x: x.reshape((b * h,) + x.shape[2:])
+    # resolve the dispatch fingerprint here, outside the jit boundary, and
+    # close over it — the static pin that keys the compiled program (§10)
+    dk = runtime.dispatch_key()
     fn = jax.vmap(
         lambda kk, vv, mm, vl: compress_kv_head(
-            kk, vv, mm, vl, t, m, key=key, impl=impl
+            kk, vv, mm, vl, t, m, key=key, impl=impl, _dispatch=dk
         )
     )
     kbar, vbar, pmass, pvalid = fn(flat(k), flat(v), flat(mass), flat(valid))

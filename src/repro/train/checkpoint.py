@@ -81,7 +81,7 @@ class CheckpointManager:
     # ------------------------------------------------------------- restore
     def all_steps(self):
         out = []
-        for d in os.listdir(self.dir):
+        for d in sorted(os.listdir(self.dir)):
             if d.startswith("step_") and not d.endswith(".tmp"):
                 out.append(int(d.split("_")[1]))
         return sorted(out)
@@ -104,7 +104,7 @@ class CheckpointManager:
             flat_specs = tdef.flatten_up_to(specs)
             placed = [
                 jax.device_put(l, jax.sharding.NamedSharding(mesh, s))
-                for l, s in zip(leaves, flat_specs)
+                for l, s in zip(leaves, flat_specs, strict=True)
             ]
             tree = jax.tree_util.tree_unflatten(tdef, placed)
         return tree

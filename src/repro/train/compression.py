@@ -67,7 +67,7 @@ def tree_compressed_psum(tree: Any, err_tree: Any, axis_name: str):
     flat, tdef = jax.tree_util.tree_flatten(tree)
     errs = tdef.flatten_up_to(err_tree)
     outs, new_errs = [], []
-    for x, e in zip(flat, errs):
+    for x, e in zip(flat, errs, strict=True):
         o, ne = psum_with_error_feedback(x, e, axis_name)
         outs.append(o.astype(x.dtype))
         new_errs.append(ne)

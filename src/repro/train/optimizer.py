@@ -91,7 +91,7 @@ def adamw_update(
     flat_mast = (tdef.flatten_up_to(opt_state["master"]) if has_master
                  else [None] * len(flat_p))
     out = [upd(p, g, m, v, mt) for p, g, m, v, mt in
-           zip(flat_p, flat_g, flat_m, flat_v, flat_mast)]
+           zip(flat_p, flat_g, flat_m, flat_v, flat_mast, strict=True)]
     new_p = tdef.unflatten([o[0] for o in out])
     new_state = {
         "m": tdef.unflatten([o[1] for o in out]),
@@ -111,7 +111,7 @@ def _zero_spec_for(spec: P, shape, data_axes: Tuple[str, ...], mesh_shape: dict)
     if dp <= 1 or not shape:
         return spec
     parts = list(spec) + [None] * (len(shape) - len(spec))
-    for i, (dim, cur) in enumerate(zip(shape, parts)):
+    for i, (dim, cur) in enumerate(zip(shape, parts, strict=True)):
         if cur is None and dim % dp == 0:
             parts[i] = data_axes if len(data_axes) > 1 else data_axes[0]
             return P(*parts)

@@ -48,7 +48,7 @@ def _parse_shapes(spec: str) -> List[dict]:
         else:
             vals = [int(v) for v in part.split("x")]
             names = ("n", "d", "k")[: len(vals)]
-            out.append(dict(zip(names, vals)))
+            out.append(dict(zip(names, vals, strict=False)))  # >3 dims: extras are deliberately dropped
     return out
 
 

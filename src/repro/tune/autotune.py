@@ -271,7 +271,7 @@ def autotune_cell(
     with runtime.configure(tune="off"):
         run = _runner(kernel, dims, dtype)
         for params in cands:
-            sec = _median_seconds(lambda: run(params), repeats)
+            sec = _median_seconds(lambda params=params: run(params), repeats)
             if verbose:
                 print(f"#   {kernel} {params} -> {sec * 1e3:.3f} ms")
             if sec < best_sec:

@@ -474,7 +474,7 @@ def test_asyncio_adapter_end_to_end():
         return results, final
 
     results, final = asyncio.run(main())
-    for q, got in zip(batches, results):
+    for q, got in zip(batches, results, strict=True):
         want = np.asarray(index.assign(jnp.asarray(q)))
         np.testing.assert_array_equal(got, want)
     assert final["completed"] == len(batches)

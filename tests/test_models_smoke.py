@@ -70,7 +70,7 @@ def test_microbatched_train_matches_full(name, smoke_bundles):
     # losses equal (mean over microbatches) and params close
     assert abs(float(m1["loss"]) - float(m2["loss"])) < 2e-2
     for a, b in zip(jax.tree_util.tree_leaves(p1),
-                    jax.tree_util.tree_leaves(p2)):
+                    jax.tree_util.tree_leaves(p2), strict=True):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32), atol=5e-3)
 

@@ -119,7 +119,7 @@ def test_serve_async_rows_are_gated(serve_async_baseline):
     assert report["regressions"] == [] and report["checked"] > 0
     keys = [gate.row_key(r) for r in serve_async_baseline["rows"]]
     assert all(("offered_qps", r["offered_qps"]) in k
-               for r, k in zip(serve_async_baseline["rows"], keys))
+               for r, k in zip(serve_async_baseline["rows"], keys, strict=True))
     assert len(set(keys)) == len(keys)
     # floors must sit below the recorded baselines or latency cells
     # silently drop out of the gate
@@ -134,7 +134,7 @@ def test_latency_only_regression_is_flagged(serve_async_baseline):
     slowed = gate.inject_slowdown(serve_async_baseline, factor=3.0,
                                   metrics=["p50_ms", "p99_ms"])
     for base_row, slow_row in zip(serve_async_baseline["rows"],
-                                  slowed["rows"]):
+                                  slowed["rows"], strict=True):
         assert slow_row["qps"] == base_row["qps"]  # metrics= filtered
     report = gate.compare(serve_async_baseline, slowed)
     metrics = {f["metric"] for f in report["regressions"]}
@@ -160,7 +160,7 @@ def test_median_artifact_merges_repeats(baseline):
     runs = [copy.deepcopy(baseline) for _ in range(3)]
     key0 = gate.row_key(baseline["rows"][0])
     # one noisy outlier run: the median must shrug it off
-    for factor, run in zip((1.0, 10.0, 1.1), runs):
+    for factor, run in zip((1.0, 10.0, 1.1), runs, strict=True):
         for row in run["rows"]:
             if gate.row_key(row) == key0:
                 row["seconds"] = row["seconds"] * factor

@@ -5,6 +5,7 @@ import tempfile
 
 import jax
 import numpy as np
+import pytest
 
 from repro.configs import ARCHS, SHAPES, smoke_config
 from repro.data import make_batch
@@ -59,11 +60,8 @@ def test_retry_exhaustion_raises():
 
     guard = StepGuard(lambda *a: None, max_retries=2,
                       failure_hook=always_fail)
-    try:
+    with pytest.raises(TransientError):
         guard(0)
-        assert False, "should have raised"
-    except TransientError:
-        pass
     assert guard.stats.failures == 3  # initial + 2 retries
 
 
@@ -83,7 +81,7 @@ def test_checkpoint_resume_is_exact():
             train_step=step, init_state=(rest["params"], rest["opt"]),
             batch_for_step=bfs, n_steps=10, start_step=5)
     for a, b in zip(jax.tree_util.tree_leaves(pA),
-                    jax.tree_util.tree_leaves(pB)):
+                    jax.tree_util.tree_leaves(pB), strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 

@@ -284,6 +284,26 @@ def test_stale_reason_catalogue():
     assert _stale_reason("not-a-dict") is not None
 
 
+def test_stale_prune_warning_points_at_the_caller(cache):
+    """The prune warning carries ``stacklevel=2`` (WN601): its reported
+    location must be the code that consulted the cache — this file — not
+    a line inside ``repro/tune/__init__.py``, or ``-W error`` CI jobs and
+    users chasing the warning land in library internals."""
+    import warnings as _warnings
+
+    bucket = tune.shape_bucket(n=24, d=3, k=2)
+    cache.record(DK, "knn", bucket, {"impl": "not-an-impl"})
+    with runtime.configure(tune="cached"):
+        with _warnings.catch_warnings(record=True) as caught:
+            _warnings.simplefilter("always")
+            params = tune.tuned_params("knn", n=24, d=3, k=2)
+    assert params == {}
+    stale = [w for w in caught
+             if "stale tuning-cache" in str(w.message)]
+    assert len(stale) == 1
+    assert stale[0].filename == __file__
+
+
 # ------------------------------------------------- the "assign" cell (§16)
 
 
