@@ -1,0 +1,221 @@
+"""Pipelined streaming ingestion (DESIGN.md §18): prefetch x donation grid.
+
+Sweeps the streaming-family executors over ``prefetch_depth`` x
+``donate_stream`` against a *latency-bound* chunk source — each chunk
+arrives after a fixed fetch delay (``io_ms``), modelling the out-of-core
+reality the prefetcher exists for: chunks come off storage or a network
+and the serial loop pays ``sum(fetch + compute)`` per chunk while the
+pipelined loop pays ``max(fetch, compute)``. Every cell records wall
+time, fit throughput, the peak live device-buffer footprint, and
+``device_idle_frac`` — the fraction of the ingest loop the consumer spent
+blocked on the source (from ``LabelSpill.ingest_stats``).
+
+The claims under test (ISSUE 9 acceptance):
+
+  * ``prefetch_depth >= 1`` beats the serial loop (``prefetch_depth=0``)
+    on points_per_sec at the largest quick-bench n — the fetch latency is
+    hidden behind device compute;
+  * ``peak_mb`` stays flat across the grid — the staging pool and the
+    deferred spill queue are O(depth * chunk), not O(n), so pipelining
+    never trades the streaming memory contract for speed.
+
+Results are bit-identical across every cell by construction (asserted in
+tests/test_streaming.py and tests/test_distribution.py), so this harness
+measures only speed, not quality.
+
+Writes benchmarks/results/BENCH_ingest.json (schema in
+docs/BENCHMARKS.md); discovered and summarized by run.py's benchmark
+registry (``--bench ingest``); gated row-by-row on
+points_per_sec/wall_s/peak_mb by gate.py.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import sys
+import time
+
+# direct-run support: repo root for the benchmarks package, src/ for repro
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_REPO, os.path.join(_REPO, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+import jax
+import numpy as np
+
+from benchmarks.common import live_mb, print_csv
+
+RESULTS = os.path.join(os.path.dirname(os.path.abspath(__file__)), "results")
+
+#: the grid every mode sweeps: serial reference + shallow/deep prefetch
+DEPTHS = (0, 1, 3)
+DONATE = (False, True)
+
+# benchmark-registry entry (benchmarks/run.py --bench ingest)
+BENCH = {
+    "name": "ingest",
+    "artifact": "BENCH_ingest.json",
+    "summary": ("n", "points_per_sec"),
+    "quick": dict(ns=(65_536,), chunk=2_048, io_ms=20.0, repeats=3,
+                  mode="quick"),
+    "full": lambda mx: dict(
+        ns=tuple(n for n in (65_536, 262_144) if n <= mx) or (mx,),
+        chunk=4_096, io_ms=20.0, repeats=3, mode="full"),
+}
+
+
+def _default_executors():
+    execs = ["streaming"]
+    if len(jax.devices()) > 1:
+        execs.append("streaming_sharded")
+    return tuple(execs)
+
+
+def _make_blobs(n: int, d: int, k: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(k, d), scale=4.0)
+    return (centers[rng.integers(0, k, size=n)]
+            + rng.normal(size=(n, d))).astype(np.float32)
+
+
+def _latency_chunks(x: np.ndarray, chunk: int, io_ms: float, peak):
+    """The latency-bound source: each chunk 'arrives' after ``io_ms`` of
+    fetch delay (sleep releases the GIL, exactly like a disk/network read
+    would), with the live device footprint sampled at every boundary."""
+    for lo in range(0, len(x), chunk):
+        if io_ms:
+            time.sleep(io_ms / 1e3)
+        peak[0] = max(peak[0], live_mb())
+        yield x[lo:lo + chunk]
+
+
+def run(
+    ns=(65_536,),
+    chunk: int = 2_048,
+    io_ms: float = 20.0,
+    t: int = 2,
+    m: int = 2,
+    d: int = 8,
+    k: int = 4,
+    repeats: int = 3,
+    seed: int = 0,
+    mode: str = "quick",
+    executors=None,
+):
+    import repro
+    from repro.core import make_data_mesh
+
+    executors = _default_executors() if executors is None else executors
+    mesh = (make_data_mesh()
+            if any(e == "streaming_sharded" for e in executors) else None)
+    rows = []
+    for n in ns:
+        x = _make_blobs(n, d, k, seed)
+        for executor in executors:
+            ekw = dict(mesh=mesh) if executor == "streaming_sharded" else {}
+            # warm both jit families on the full stream (donating twins
+            # compile separately, and the cascade/backend shapes only
+            # appear at the real chunk count)
+            for don in DONATE:
+                repro.fit(_latency_chunks(x, chunk, 0.0, [0.0]),
+                          t, m, "kmeans", k=k, executor=executor,
+                          chunk_n=chunk, prefetch_depth=1, donate_stream=don,
+                          key=jax.random.PRNGKey(seed), **ekw)
+            for depth in DEPTHS:
+                for donate in DONATE:
+                    walls, idles, peaks = [], [], []
+                    for _ in range(max(repeats, 1)):
+                        peak = [0.0]
+                        t0 = time.perf_counter()
+                        res = repro.fit(
+                            _latency_chunks(x, chunk, io_ms, peak), t, m,
+                            "kmeans", k=k, executor=executor, chunk_n=chunk,
+                            prefetch_depth=depth, donate_stream=donate,
+                            key=jax.random.PRNGKey(seed), **ekw)
+                        jax.block_until_ready(res.proto_labels)
+                        peak[0] = max(peak[0], live_mb())
+                        walls.append(time.perf_counter() - t0)
+                        st = res.spill.ingest_stats
+                        idles.append(st["ingest_wait_s"] / st["wall_s"]
+                                     if st["wall_s"] else 0.0)
+                        peaks.append(peak[0])
+                        n_chunks, n_casc = res.n_chunks, res.n_cascades
+                        del res
+                    wall = statistics.median(walls)
+                    rows.append({
+                        "n": n,
+                        "executor": executor,
+                        "prefetch_depth": depth,
+                        "donate": donate,
+                        "chunks": n_chunks,
+                        "cascades": n_casc,
+                        "wall_s": round(wall, 4),
+                        "points_per_sec": round(n / wall),
+                        "peak_mb": round(max(peaks), 3),
+                        "device_idle_frac": round(
+                            statistics.median(idles), 4),
+                    })
+
+    print_csv(
+        "ingest_pipeline",
+        [(r["n"], r["executor"], r["prefetch_depth"], r["donate"],
+          r["chunks"], r["wall_s"], r["points_per_sec"], r["peak_mb"],
+          r["device_idle_frac"])
+         for r in rows],
+        "n,executor,prefetch_depth,donate,chunks,wall_s,points_per_sec,"
+        "peak_mb,device_idle_frac",
+    )
+
+    os.makedirs(RESULTS, exist_ok=True)
+    artifact = {
+        "name": "ingest_pipeline",
+        "mode": mode,
+        "t": t, "m": m, "d": d, "k": k,
+        "chunk_n": chunk,
+        "io_ms": io_ms,
+        "repeats": repeats,
+        "devices": len(jax.devices()),
+        "executors": list(executors),
+        "recorded_unix": round(time.time(), 1),
+        "rows": rows,
+    }
+    path = os.path.join(RESULTS, "BENCH_ingest.json")
+    with open(path, "w") as f:
+        json.dump(artifact, f, indent=1)
+    print(f"# wrote {os.path.relpath(path, _REPO)}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ns", type=str, default="")
+    ap.add_argument("--chunk", type=int, default=2_048)
+    ap.add_argument("--io-ms", type=float, default=20.0,
+                    help="per-chunk fetch latency the source models")
+    ap.add_argument("--t", type=int, default=2)
+    ap.add_argument("--m", type=int, default=2)
+    ap.add_argument("--d", type=int, default=8)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--executors", type=str, default="",
+                    help="comma list among streaming,streaming_sharded "
+                         "(default: streaming, plus the composed executor "
+                         "when more than one device is visible)")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny sweep for CI smoke")
+    args = ap.parse_args()
+    executors = tuple(args.executors.split(",")) if args.executors else None
+    if args.quick:
+        run(ns=(8_192,), chunk=1_024, io_ms=5.0, d=2, repeats=1,
+            mode="smoke", executors=executors)
+        return
+    ns = (tuple(int(v) for v in args.ns.split(",")) if args.ns
+          else (65_536,))
+    run(ns=ns, chunk=args.chunk, io_ms=args.io_ms, t=args.t, m=args.m,
+        d=args.d, repeats=args.repeats, mode="cli", executors=executors)
+
+
+if __name__ == "__main__":
+    main()

@@ -56,13 +56,15 @@ RESULTS = os.path.join(os.path.dirname(os.path.abspath(__file__)), "results")
 
 #: row-identity fields (whichever exist in a row form its match key)
 KEY_FIELDS = ("n", "executor", "devices", "batch", "dataset", "t", "m",
-              "offered_qps", "n_protos", "n_queries", "impl")
+              "offered_qps", "n_protos", "n_queries", "impl",
+              "prefetch_depth", "donate")
 
 #: metric -> (direction, default relative tolerance, absolute noise floor)
 #: direction "lower": fresh > base*(1+tol) regresses; "higher": fresh <
 #: base/(1+tol) regresses. Baselines under the floor are skipped outright.
 METRIC_RULES: Dict[str, Tuple[str, float, float]] = {
     "seconds": ("lower", 0.5, 0.05),
+    "wall_s": ("lower", 0.5, 0.05),
     "stream_seconds": ("lower", 0.5, 0.05),
     "inmem_seconds": ("lower", 0.5, 0.05),
     "ingest_seconds": ("lower", 0.5, 0.05),

@@ -116,7 +116,14 @@ class LabelSpill:
     reservoir and ``chunk_epoch`` says how many maps existed at fold time,
     so a chunk is only composed through the maps recorded at-or-after its
     fold (DESIGN.md §12). Everything here is host numpy — nothing O(n) ever
-    lands on device.
+    lands on device: the constructor enforces the forced-copy contract
+    (every map a real ``np.ndarray``), so a deferred spill drain that
+    forgot to materialize a device buffer fails here, not at back-out.
+
+    ``ingest_stats`` (optional) carries the stream loop's pipeline
+    telemetry (DESIGN.md §18): prefetch depth, donation flag, loop wall
+    seconds and the time the consumer spent waiting on ingest —
+    benchmarks/bench_ingest.py derives ``device_idle_frac`` from it.
     """
 
     def __init__(
@@ -129,7 +136,15 @@ class LabelSpill:
         chunk_counts: List[int],
         maps: List[np.ndarray],
         n_cascades: int,
+        ingest_stats: Optional[dict] = None,
     ):
+        for name, arrs in (("chunk_assign", chunk_assign), ("maps", maps)):
+            for a in arrs:
+                if not isinstance(a, np.ndarray):
+                    raise TypeError(
+                        f"LabelSpill.{name} must be host numpy (forced "
+                        f"copies, §12); got {type(a).__name__} — a spill "
+                        f"drain left a device buffer behind")
         self.chunk_n = chunk_n
         self.chunk_assign = chunk_assign
         self.chunk_offset = chunk_offset
@@ -137,6 +152,7 @@ class LabelSpill:
         self.chunk_counts = chunk_counts
         self.maps = maps
         self.n_cascades = n_cascades
+        self.ingest_stats = ingest_stats
 
     @property
     def n_chunks(self) -> int:
@@ -354,6 +370,8 @@ class FitPlan:
     n_blocks: int = 8
     chunk_n: int = 0
     reservoir_n: int = 0
+    prefetch_depth: int = 0
+    donate_stream: bool = False
     mesh: Any = None
     axis_name: str = "data"
     min_points: int = 4
@@ -420,6 +438,8 @@ def plan_fit(
     n_blocks: Optional[int] = None,
     chunk_n: Optional[int] = None,
     reservoir_n: Optional[int] = None,
+    prefetch_depth: Optional[int] = None,
+    donate_stream: Optional[bool] = None,
     mesh=None,
     axis_name: Optional[str] = None,
     min_points: int = 4,
@@ -451,6 +471,12 @@ def plan_fit(
     n_blocks = cfg.n_blocks if n_blocks is None else n_blocks
     chunk_n = cfg.chunk_n if chunk_n is None else chunk_n
     reservoir_n = cfg.reservoir_n if reservoir_n is None else reservoir_n
+    explicit_prefetch = prefetch_depth is not None
+    explicit_donate = donate_stream is not None
+    prefetch_depth = (cfg.prefetch_depth if prefetch_depth is None
+                      else prefetch_depth)
+    donate_stream = (cfg.donate_stream if donate_stream is None
+                     else donate_stream)
     mesh = cfg.mesh if mesh is None else mesh
     axis_name = cfg.axis_name if axis_name is None else axis_name
     if key is None:
@@ -506,6 +532,25 @@ def plan_fit(
             f"array and only the 'sharded' executor honours it (got "
             f"{executor!r}); slice the array instead, or mask stream "
             f"chunks with (chunk, n_valid) pairs")
+    if prefetch_depth < 0:
+        raise ValueError(
+            f"{driver}: prefetch_depth must be >= 0, got {prefetch_depth}")
+    # the ingest-pipeline knobs only mean something to the stream loop
+    # (DESIGN.md §18); an explicit value on an in-memory executor would be
+    # silently dropped, so reject it like knn_block/weights above
+    if executor not in STREAMING_EXECUTORS:
+        if explicit_prefetch and prefetch_depth:
+            raise ValueError(
+                f"{driver}: prefetch_depth={prefetch_depth} cannot apply "
+                f"to the {executor!r} executor — only the streaming "
+                f"executors stage chunks (a configured runtime "
+                f"prefetch_depth is ignored elsewhere)")
+        if explicit_donate and donate_stream:
+            raise ValueError(
+                f"{driver}: donate_stream=True cannot apply to the "
+                f"{executor!r} executor — only the streaming executors "
+                f"hold a reservoir to donate (a configured runtime "
+                f"donate_stream is ignored elsewhere)")
 
     # tuned-dispatch resolution (DESIGN.md §14): with the tuning policy
     # active, auto knobs resolve through the measured winners for this
@@ -517,12 +562,21 @@ def plan_fit(
         from repro import tune  # lazy: no cycle through core
 
         if streaming_input:
-            if chunk_n == 0:
+            if chunk_n == 0 or (prefetch_depth == 0
+                                and not explicit_prefetch):
                 ts = tune.tuned_params("stream")
-                if ts.get("chunk_n"):
-                    chunk_n = int(ts["chunk_n"])
-                if reservoir_n == 0 and ts.get("reservoir_n"):
-                    reservoir_n = int(ts["reservoir_n"])
+                if chunk_n == 0:
+                    if ts.get("chunk_n"):
+                        chunk_n = int(ts["chunk_n"])
+                    if reservoir_n == 0 and ts.get("reservoir_n"):
+                        reservoir_n = int(ts["reservoir_n"])
+                # depth 0 is the serial default, not a measured choice:
+                # treat it as "auto" unless the caller pinned it (explicit
+                # kwargs always win; donation stays manual — it changes
+                # buffer lifetimes, not a measurable constant)
+                if (prefetch_depth == 0 and not explicit_prefetch
+                        and ts.get("prefetch_depth") is not None):
+                    prefetch_depth = int(ts["prefetch_depth"])
         else:
             n0, d0 = int(data.shape[0]), int(data.shape[1])
             dt = str(data.dtype) if hasattr(data, "dtype") else "float32"
@@ -564,7 +618,8 @@ def plan_fit(
         weighted=weighted, use_mass_in_backend=use_mass_in_backend,
         impl=impl, knn_block=knn_block, block_q=block_q, block_k=block_k,
         n_blocks=n_blocks, chunk_n=chunk_n,
-        reservoir_n=reservoir_n, mesh=mesh, axis_name=axis_name,
+        reservoir_n=reservoir_n, prefetch_depth=int(prefetch_depth),
+        donate_stream=bool(donate_stream), mesh=mesh, axis_name=axis_name,
         min_points=min_points, weights=weights, valid=valid, driver=driver,
         backend_kwargs=dict(backend_kwargs),
     )

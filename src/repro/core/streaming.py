@@ -42,6 +42,21 @@ Execution plan (DESIGN.md §12–§13):
     remaining ``m - 1`` ITIS levels (the in-memory key schedule and
     early-stop rule); the planner's epilogue labels the survivors.
 
+Ingest pipeline (DESIGN.md §18): the loop above is additionally pipelined
+when the plan asks for it. ``prefetch_depth >= 1`` starts a bounded
+background prefetch thread that normalizes/validates chunk N+1..N+depth
+and writes them into a rotating pool of preallocated host staging buffers
+while chunk N's level/fold runs on device; ``donate_stream=True`` donates
+the reservoir operands of the fold/cascade/compaction programs so the
+reservoir updates in place instead of being copied O(reservoir) every
+chunk; and the per-chunk assignment spills are deferred as device buffers
+and drained to host in batches off the critical path. All three are pure
+scheduling changes: the chunk key schedule is bound to the chunk *index*
+(``fold_in(key_level0, chunk_idx)``), never to arrival order — the
+consumer asserts indices arrive monotonically — so every prefetch depth
+and donation setting is bit-identical to the ``prefetch_depth=0`` serial
+loop.
+
 Labels stream *back out* chunk-by-chunk through the spilled maps
 (:class:`repro.core.plan.LabelSpill`), entirely in host numpy — the device
 never holds an O(n) label array.
@@ -64,6 +79,9 @@ spells out why.
 from __future__ import annotations
 
 import functools
+import queue
+import threading
+import time
 from typing import List, Optional, Tuple, Union
 
 import jax
@@ -91,6 +109,15 @@ from repro.core.plan import (
 # fold_in tag separating the cascade key stream from the per-chunk stream
 _CASCADE_KEY_TAG = 0x7FFFFFFF
 
+# deferred spill maps accumulated on device before one batched host drain
+# (§18); bounds the device-side spill backlog to a constant independent of
+# the stream length, so the O(chunk + reservoir) memory contract holds
+_SPILL_DRAIN_BATCH = 16
+
+# thread name of the background prefetcher — the fault tests key on it to
+# prove a mid-stream failure reaps the thread
+_PREFETCH_THREAD_NAME = "repro-ingest-prefetch"
+
 # deprecation alias: every executor returns the canonical FitResult now
 StreamingIHTCResult = FitResult
 
@@ -112,8 +139,158 @@ def _normalize_chunk(item, driver: str) -> Tuple[np.ndarray, int]:
     return arr, arr.shape[0]
 
 
-@jax.jit
-def _compact(res_x, res_m, res_v):
+def _validate_chunk(arr: np.ndarray, chunk_idx: int, chunk_n: int, d: int,
+                    driver: str) -> None:
+    """Shape checks every chunk passes in stream order — inline in the
+    serial loop, on the prefetch thread when pipelined (the error then
+    travels the queue and is re-raised at the chunk's stream position, so
+    both modes fail with the identical exception)."""
+    if arr.shape[0] > chunk_n:
+        raise ValueError(
+            f"{driver}: chunk {chunk_idx} has {arr.shape[0]} rows "
+            f"> chunk_n={chunk_n}; re-chunk the stream or raise chunk_n")
+    if arr.ndim != 2 or arr.shape[1] != d:
+        raise ValueError(
+            f"{driver}: chunk {chunk_idx} has shape {arr.shape}, "
+            f"expected (<= {chunk_n}, {d})")
+
+
+# ---------------------------------------------------------------------------
+# host staging pool + background prefetcher (DESIGN.md §18)
+# ---------------------------------------------------------------------------
+
+
+class _PoolClosed(Exception):
+    """Raised inside the prefetch thread when the consumer shut the pool
+    down mid-stage — a silent exit signal, never user-visible."""
+
+
+class _StagingPool:
+    """Rotating pool of preallocated host staging buffers.
+
+    Ownership protocol (§18): a buffer index travels
+    stage → (queue) → consumer → ``release`` → back to the free list; at
+    most one owner ever writes a buffer. ``stage`` blocks for a free
+    buffer, waits out the previous tenant's device dependency (the placed
+    chunk array — on backends where host→device copies may complete
+    asynchronously, overwriting the source before the transfer lands would
+    corrupt the in-flight chunk; by recycle time the copy is long done, so
+    the wait is ~free), then overwrites: rows [0, r) copied, the stale
+    tail [r, prev_fill) re-zeroed, rows beyond prev_fill untouched (still
+    zero). The contents are therefore bit-identical to a fresh
+    ``np.zeros`` + fill without the per-chunk allocation churn, and a
+    chunk spanning the full buffer skips the zero-fill entirely.
+    """
+
+    def __init__(self, n_bufs: int, rows: int, d: int):
+        self._bufs = [np.zeros((rows, d), np.float32) for _ in range(n_bufs)]
+        self._fill = [0] * n_bufs
+        self._free: queue.Queue = queue.Queue()
+        for i in range(n_bufs):
+            self._free.put((i, None))
+
+    def stage(self, arr: np.ndarray,
+              stop: Optional[threading.Event] = None) -> int:
+        """Copy ``arr`` into a free buffer; returns the buffer index."""
+        while True:
+            try:
+                i, dep = self._free.get(timeout=0.05)
+                break
+            except queue.Empty:
+                if stop is not None and stop.is_set():
+                    raise _PoolClosed()
+        if dep is not None:
+            # repro: allow[HS201]: staging-pool recycle (§18) — the retired chunk's host→device copy must land before its source buffer is overwritten; waited depth+2 chunks later, so the transfer is long complete
+            jax.block_until_ready(dep)
+        buf = self._bufs[i]
+        r = arr.shape[0]
+        if r:
+            buf[:r] = arr
+        if self._fill[i] > r:
+            buf[r:self._fill[i]] = 0.0
+        self._fill[i] = r
+        return i
+
+    def buffer(self, i: int) -> np.ndarray:
+        return self._bufs[i]
+
+    def release(self, i: int, dep=None) -> None:
+        """Hand a buffer back; ``dep`` is the device array placed from it
+        (the next ``stage`` of this buffer waits on it before writing)."""
+        self._free.put((i, dep))
+
+
+class _Prefetcher:
+    """Bounded background ingest: normalizes + validates chunks in stream
+    order, stages them into the pool, and hands ``(chunk_idx, buf_idx,
+    n_valid)`` records to the consumer through a depth-limited queue — at
+    most ``depth`` chunks ever sit staged ahead of the device. Errors
+    travel in-band: a bad chunk enqueues its exception at its stream
+    position, so the consumer finishes every earlier chunk and then raises
+    exactly what the serial loop would have. ``close()`` is idempotent and
+    exception-safe: it stops the thread (unblocking a pending put or
+    stage) and joins it, so no fit ever leaks the thread or a staged
+    buffer."""
+
+    def __init__(self, it, pool: _StagingPool, *, driver: str, chunk_n: int,
+                 d: int, depth: int, start_idx: int):
+        self._pool = pool
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(
+            target=self._run, args=(it, driver, chunk_n, d, start_idx),
+            name=_PREFETCH_THREAD_NAME, daemon=True)
+        self._thread.start()
+
+    def _run(self, it, driver: str, chunk_n: int, d: int, idx: int) -> None:
+        try:
+            for item in it:
+                if self._stop.is_set():
+                    return
+                arr, n_valid = _normalize_chunk(item, driver)
+                _validate_chunk(arr, idx, chunk_n, d, driver)
+                buf_i = (self._pool.stage(arr, stop=self._stop)
+                         if n_valid > 0 else None)
+                self._put(("chunk", idx, buf_i, n_valid))
+                idx += 1
+            self._put(("end", None, None, None))
+        except _PoolClosed:
+            pass  # consumer shut us down; nothing to deliver
+        except BaseException as exc:  # noqa: BLE001 — delivered in-band
+            self._put(("err", exc, None, None))
+
+    def _put(self, item) -> None:
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.05)
+                return
+            except queue.Full:
+                continue
+
+    def get(self):
+        """Next record, in stream order (blocks; the thread always closes
+        the stream with an ``end`` or ``err`` record while it is alive)."""
+        return self._q.get()
+
+    def close(self) -> None:
+        self._stop.set()
+        while True:  # unblock a producer stuck on a full queue
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join(timeout=10.0)
+
+
+# ---------------------------------------------------------------------------
+# the jitted reservoir programs — each in a donating and a non-donating
+# flavour (§18: donation aliases the reservoir operands into the outputs so
+# the update happens in place; donating and plain calls are different
+# executables, hence separate jit wrappers, selected once per plan)
+# ---------------------------------------------------------------------------
+
+
+def _compact_impl(res_x, res_m, res_v):
     """Gather the valid reservoir rows to the front (an identity level: no
     reduction, just squeezing out the masked holes between slabs). Returns
     the compacted buffers plus the old-slot → new-slot assignment map, in
@@ -128,14 +305,69 @@ def _compact(res_x, res_m, res_v):
     return new_x, new_m, new_v, assignment
 
 
-@functools.partial(jax.jit, static_argnames=("_dispatch",))
-def _fold(res_x, res_m, res_v, px, pm, pv, offset, _dispatch: tuple = ()):
+_compact = jax.jit(_compact_impl)
+_COMPACT = {False: _compact,
+            True: jax.jit(_compact_impl, donate_argnums=(0, 1, 2))}
+
+
+def _fold_impl(res_x, res_m, res_v, px, pm, pv, offset, _dispatch: tuple = ()):
     """Write one prototype slab at the reservoir frontier (traced offset:
     a single compiled program serves the whole stream)."""
     res_x = jax.lax.dynamic_update_slice(res_x, px, (offset, 0))
     res_m = jax.lax.dynamic_update_slice(res_m, pm, (offset,))
     res_v = jax.lax.dynamic_update_slice(res_v, pv, (offset,))
     return res_x, res_m, res_v
+
+
+_fold = jax.jit(_fold_impl, static_argnames=("_dispatch",))
+_FOLD = {False: _fold,
+         True: jax.jit(_fold_impl, static_argnames=("_dispatch",),
+                       donate_argnums=(0, 1, 2))}
+
+
+def _pad_into_impl(res_x, res_m, res_v, px, pm, pv):
+    """Cascade absorb: pad the reduced slab back up to reservoir size. The
+    outputs have exactly the donated reservoir buffers' shapes/dtypes, so
+    under donation XLA aliases them and the pad is an in-place write."""
+    pad = res_x.shape[0] - px.shape[0]
+    return (jnp.pad(px, ((0, pad), (0, 0))),
+            jnp.pad(pm, (0, pad)),
+            jnp.pad(pv, (0, pad)))
+
+
+_PAD_INTO_DONATED = jax.jit(_pad_into_impl, donate_argnums=(0, 1, 2))
+
+
+@functools.lru_cache(maxsize=None)
+def _mesh_donating_jits(mesh, axis_name: str):
+    """Donating mesh twins of the compaction and cascade-absorb programs.
+
+    The plain mesh path runs the shared programs and re-pins the layout
+    with ``device_put`` afterwards; a donating program cannot do that (the
+    input buffers are gone), so these twins pin the reservoir layout with
+    sharding constraints *inside* the jit — the outputs keep the exact
+    sharded shapes of the donated operands, which is what makes the
+    donation aliasable per shard. Cached per (mesh, axis): a fresh
+    ``jax.jit`` wrapper per fit would defeat the compile cache."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    row = NamedSharding(mesh, P(axis_name, None))
+    vec = NamedSharding(mesh, P(axis_name))
+    pin = jax.lax.with_sharding_constraint
+
+    def compact(res_x, res_m, res_v):
+        new_x, new_m, new_v, assignment = _compact_impl(res_x, res_m, res_v)
+        return (pin(new_x, row), pin(new_m, vec), pin(new_v, vec),
+                assignment)
+
+    def pad_into(res_x, res_m, res_v, px, pm, pv):
+        pad = res_x.shape[0] - px.shape[0]
+        return (pin(jnp.pad(px, ((0, pad), (0, 0))), row),
+                pin(jnp.pad(pm, (0, pad)), vec),
+                pin(jnp.pad(pv, (0, pad)), vec))
+
+    return (jax.jit(compact, donate_argnums=(0, 1, 2)),
+            jax.jit(pad_into, donate_argnums=(0, 1, 2)))
 
 
 # ---------------------------------------------------------------------------
@@ -151,6 +383,7 @@ class _DevicePlacement:
         self.plan = plan
         self.d = d
         self.mult = 1
+        self.donate = plan.donate_stream
 
     def reservoir(self, n: int):
         return (jnp.zeros((n, self.d), jnp.float32),
@@ -173,14 +406,20 @@ class _DevicePlacement:
             knn_block=p.knn_block, n_out=n_out, n_blocks=p.n_blocks)
 
     def fold(self, res, px, pm, pv, offset: int):
-        return _fold(*res, px, pm, pv, jnp.int32(offset),
-                     _dispatch=runtime.dispatch_key())
+        return _FOLD[self.donate](*res, px, pm, pv, jnp.int32(offset),
+                                  _dispatch=runtime.dispatch_key())
 
     def compact(self, res):
-        new_x, new_m, new_v, assignment = _compact(*res)
+        new_x, new_m, new_v, assignment = _COMPACT[self.donate](*res)
         return (new_x, new_m, new_v), assignment
 
-    def pad_protos(self, out: ITISLevelOut, total_n: int):
+    def absorb(self, out: ITISLevelOut, total_n: int, old_res):
+        """New reservoir from a cascade output: the reduced slab padded
+        back to reservoir size — into the donated old buffers when
+        donation is on, a fresh padded copy otherwise (bit-identical)."""
+        if self.donate:
+            return _PAD_INTO_DONATED(*old_res, out.protos, out.mass,
+                                     out.valid)
         pad = total_n - out.protos.shape[0]
         return (jnp.pad(out.protos, ((0, pad), (0, 0))),
                 jnp.pad(out.mass, (0, pad)),
@@ -207,6 +446,7 @@ class _MeshPlacement:
         self.mult = plan.shard_multiple()
         self.mesh = plan.mesh
         self.axis_name = plan.axis_name
+        self.donate = plan.donate_stream
         self._row = NamedSharding(self.mesh, P(self.axis_name, None))
         self._vec = NamedSharding(self.mesh, P(self.axis_name))
         self._rep = NamedSharding(self.mesh, P())
@@ -225,9 +465,13 @@ class _MeshPlacement:
         return self._place(buf, vj.astype(np.float32), vj)
 
     def place_slab(self, px, pm, pv):
-        return (jax.device_put(jnp.asarray(px), self._rep),
-                jax.device_put(jnp.asarray(pm), self._rep),
-                jax.device_put(jnp.asarray(pv), self._rep))
+        """Replicate a slab over the mesh. ``device_put`` reshards
+        device-resident slabs (cascade outputs, already committed jax
+        arrays) device-to-device and takes raw host slabs directly — no
+        ``jnp.asarray`` round trip through the default device."""
+        return (jax.device_put(px, self._rep),
+                jax.device_put(pm, self._rep),
+                jax.device_put(pv, self._rep))
 
     def level_step(self, x, mass, valid, key, n_out: int) -> ITISLevelOut:
         from repro.core.distributed import _itis_level_sharded
@@ -241,18 +485,26 @@ class _MeshPlacement:
 
     def fold(self, res, px, pm, pv, offset: int):
         px, pm, pv = self.place_slab(px, pm, pv)
-        return _fold_sharded(
+        return _FOLD_SHARDED[self.donate](
             *res, px, pm, pv, jnp.int32(offset),
             slab_n=px.shape[0], axis_name=self.axis_name, mesh=self.mesh,
             _dispatch=runtime.dispatch_key())
 
     def compact(self, res):
         # _compact is exact (integer ranks + unique-index scatters), so
-        # running it resident and re-pinning the layout stays deterministic
+        # running it resident stays deterministic; the plain path re-pins
+        # the layout afterwards, the donating twin pins it in-program
+        if self.donate:
+            cfn, _ = _mesh_donating_jits(self.mesh, self.axis_name)
+            new_x, new_m, new_v, assignment = cfn(*res)
+            return (new_x, new_m, new_v), assignment
         new_x, new_m, new_v, assignment = _compact(*res)
         return self._place(new_x, new_m, new_v), assignment
 
-    def pad_protos(self, out: ITISLevelOut, total_n: int):
+    def absorb(self, out: ITISLevelOut, total_n: int, old_res):
+        if self.donate:
+            _, pfn = _mesh_donating_jits(self.mesh, self.axis_name)
+            return pfn(*old_res, out.protos, out.mass, out.valid)
         pad = total_n - out.protos.shape[0]
         return self._place(jnp.pad(out.protos, ((0, pad), (0, 0))),
                            jnp.pad(out.mass, (0, pad)),
@@ -267,14 +519,13 @@ class _MeshPlacement:
             jnp.pad(res_v[:frontier], (0, pad)))
 
 
-@functools.partial(
-    jax.jit, static_argnames=("slab_n", "axis_name", "mesh", "_dispatch"))
-def _fold_sharded(res_x, res_m, res_v, px, pm, pv, offset, *,
-                  slab_n: int, axis_name: str, mesh, _dispatch: tuple = ()):
-    """Per-shard twin of :func:`_fold`: every shard overwrites the rows of
-    the global ``[offset, offset + slab_n)`` window it owns, reading from
-    the replicated slab. One compiled program per slab shape serves the
-    whole stream (the offset stays traced)."""
+def _fold_sharded_impl(res_x, res_m, res_v, px, pm, pv, offset, *,
+                       slab_n: int, axis_name: str, mesh,
+                       _dispatch: tuple = ()):
+    """Per-shard twin of :func:`_fold_impl`: every shard overwrites the
+    rows of the global ``[offset, offset + slab_n)`` window it owns,
+    reading from the replicated slab. One compiled program per slab shape
+    serves the whole stream (the offset stays traced)."""
     from jax.sharding import PartitionSpec as P
 
     from repro.core.distributed import _shard_map
@@ -298,6 +549,18 @@ def _fold_sharded(res_x, res_m, res_v, px, pm, pv, offset, *,
     )(res_x, res_m, res_v, px, pm, pv, offset)
 
 
+_fold_sharded = jax.jit(
+    _fold_sharded_impl,
+    static_argnames=("slab_n", "axis_name", "mesh", "_dispatch"))
+_FOLD_SHARDED = {
+    False: _fold_sharded,
+    True: jax.jit(
+        _fold_sharded_impl,
+        static_argnames=("slab_n", "axis_name", "mesh", "_dispatch"),
+        donate_argnums=(0, 1, 2)),
+}
+
+
 # ---------------------------------------------------------------------------
 # the stream loop (once, for both executors)
 # ---------------------------------------------------------------------------
@@ -307,6 +570,7 @@ def _run_stream(plan: FitPlan, chunks, placement_cls) -> Reduction:
     driver = plan.driver
     t, m = plan.t, plan.m
     floor = plan.reduction_floor()
+    depth = plan.prefetch_depth
     key_itis, _ = plan.split_keys()
     # the in-memory key schedule: one split per level, level 0 first
     key_chain, key_level0 = jax.random.split(key_itis)
@@ -361,6 +625,11 @@ def _run_stream(plan: FitPlan, chunks, placement_cls) -> Reduction:
             f"slots); need reservoir_n - max(reservoir_n//t, {floor - 1}) "
             f">= max(chunk_n//t, {raw_len})")
 
+    # staging pool: `depth` chunks queued ahead + one being staged by the
+    # producer + one still owned by the consumer; the serial loop double-
+    # buffers so a recycled buffer never waits on its own transfer
+    pool = _StagingPool(depth + 2 if depth else 2, chunk_buf_n, d)
+
     res = placement.reservoir(reservoir_n)
     frontier = 0          # host-tracked write position (no device sync)
     n_cascades = 0
@@ -370,9 +639,23 @@ def _run_stream(plan: FitPlan, chunks, placement_cls) -> Reduction:
     chunk_epoch: List[int] = []
     chunk_counts: List[int] = []
     maps: List[np.ndarray] = []
+    spill_pending: List[int] = []  # chunk_assign slots still on device
+    ingest_wait_s = 0.0  # consumer time blocked on ingest (stage/queue)
+    loop_t0 = time.perf_counter()
+
+    def drain_spills() -> None:
+        # deferred spill drain (§18): the per-chunk assignment maps were
+        # enqueued as device buffers; copy them to host in one batch off
+        # the per-chunk critical path, restoring the §12 forced-copy
+        # contract before anything reads them
+        for i in spill_pending:
+            # repro: allow[HS201]: §12 spill — forced host copy (np.array, never a view) of the chunk assignment, batch-drained off the critical path (§18)
+            chunk_assign[i] = np.array(chunk_assign[i])
+        spill_pending.clear()
 
     def cascade():
         nonlocal res, frontier, n_cascades
+        drain_spills()  # the cascade syncs anyway; clear the backlog first
         # repro: allow[HS202]: deliberate per-cascade sync — compaction-vs-reduction is a host decision, once per reservoir fill, not per chunk
         occ_valid = int(jnp.sum(res[2]))
         if occ_valid < floor:
@@ -390,7 +673,7 @@ def _run_stream(plan: FitPlan, chunks, placement_cls) -> Reduction:
         out = placement.level_step(*res, key=ck, n_out=cascade_out)
         # repro: allow[HS201]: §12 spill — forced host copy (np.array, never a view) of the per-level map
         maps.append(np.array(out.assignment))  # true host copy, not a view
-        res = placement.pad_protos(out, reservoir_n)
+        res = placement.absorb(out, reservoir_n, res)
         frontier = cascade_out
         n_cascades += 1
 
@@ -408,23 +691,16 @@ def _run_stream(plan: FitPlan, chunks, placement_cls) -> Reduction:
         frontier += slab
         return offset
 
-    def consume(arr: np.ndarray, n_valid: int, chunk_idx: int) -> None:
-        if arr.shape[0] > chunk_n:
-            raise ValueError(
-                f"{driver}: chunk {chunk_idx} has {arr.shape[0]} rows "
-                f"> chunk_n={chunk_n}; re-chunk the stream or raise chunk_n")
-        if arr.ndim != 2 or arr.shape[1] != d:
-            raise ValueError(
-                f"{driver}: chunk {chunk_idx} has shape {arr.shape}, "
-                f"expected (<= {chunk_n}, {d})")
+    def process(chunk_idx: int, buf_i: Optional[int], n_valid: int) -> None:
+        """Device half of one chunk: place the staged buffer, reduce, fold,
+        record the spill — identical for the serial and pipelined loops."""
         if n_valid == 0:  # nothing to cluster; keep chunk indexing aligned
             chunk_assign.append(np.full((chunk_buf_n,), -1, np.int32))
             chunk_offset.append(0)
             chunk_epoch.append(len(maps))
             chunk_counts.append(0)
             return
-        buf = np.zeros((chunk_buf_n, d), np.float32)
-        buf[: arr.shape[0]] = arr
+        buf = pool.buffer(buf_i)
         if n_valid < floor:
             # too small to reduce (the itis early-stop rule): fold the valid
             # prefix raw, with an identity assignment map
@@ -432,6 +708,11 @@ def _run_stream(plan: FitPlan, chunks, placement_cls) -> Reduction:
             px, pm, pv = placement.place_slab(
                 buf[:raw_len], pv.astype(np.float32), pv)
             off = fold(px, pm, pv, raw_len)
+            # release AFTER the fold that consumed the slab: the recycle
+            # dep must be the consumer's output (res), not the placed
+            # array — placement may hold a zero-copy view of the host
+            # buffer, so "transfer done" is not "done reading"
+            pool.release(buf_i, res[0])
             # epoch AFTER the fold: a cascade the fold itself triggered
             # must not apply to the slots it just wrote
             epoch = len(maps)
@@ -446,21 +727,81 @@ def _run_stream(plan: FitPlan, chunks, placement_cls) -> Reduction:
         sub = key_level0 if chunk_idx == 0 else jax.random.fold_in(
             key_level0, chunk_idx)
         out = placement.level_step(xj, mj, vj, key=sub, n_out=chunk_out)
+        # release AFTER the level step that consumed xj: the recycle dep
+        # must be the consumer's output — ``place_chunk`` may hold a
+        # zero-copy view of the host buffer, so blocking on the placed
+        # array alone proves the transfer landed, not that the reduction
+        # finished reading it
+        pool.release(buf_i, out.protos)
         off = fold(out.protos, out.mass, out.valid, chunk_out)
         epoch = len(maps)  # after the fold — see the raw path above
-        # repro: allow[HS201]: §12 spill — forced host copy (np.array, never a view) of the chunk assignment
-        chunk_assign.append(np.array(out.assignment))  # true host copy
+        if depth:
+            # deferred spill (§18): keep the map on device, drain in
+            # batches — the cascade and the stream end drain the rest
+            chunk_assign.append(out.assignment)
+            spill_pending.append(len(chunk_assign) - 1)
+            if len(spill_pending) >= _SPILL_DRAIN_BATCH:
+                drain_spills()
+        else:
+            # repro: allow[HS201]: §12 spill — forced host copy (np.array, never a view) of the chunk assignment
+            chunk_assign.append(np.array(out.assignment))  # true host copy
         chunk_offset.append(off)
         chunk_epoch.append(epoch)
         chunk_counts.append(n_valid)
 
-    consume(*first, 0)
-    for chunk_idx, item in enumerate(it, start=1):
-        consume(*_normalize_chunk(item, driver), chunk_idx)
+    def consume(arr: np.ndarray, n_valid: int, chunk_idx: int) -> None:
+        """Serial (depth 0) path: validate, stage inline, process."""
+        nonlocal ingest_wait_s
+        _validate_chunk(arr, chunk_idx, chunk_n, d, driver)
+        buf_i = None
+        if n_valid > 0:
+            t0 = time.perf_counter()
+            buf_i = pool.stage(arr)
+            ingest_wait_s += time.perf_counter() - t0
+        process(chunk_idx, buf_i, n_valid)
+
+    consume(*first, 0)  # chunk 0 always inline: it fixed the geometry
+    if depth == 0:
+        for chunk_idx, item in enumerate(it, start=1):
+            t0 = time.perf_counter()
+            arr, n_valid = _normalize_chunk(item, driver)
+            ingest_wait_s += time.perf_counter() - t0
+            consume(arr, n_valid, chunk_idx)
+    else:
+        pf = _Prefetcher(it, pool, driver=driver, chunk_n=chunk_n, d=d,
+                         depth=depth, start_idx=1)
+        try:
+            expected = 1
+            while True:
+                t0 = time.perf_counter()
+                tag, a, b, c = pf.get()
+                ingest_wait_s += time.perf_counter() - t0
+                if tag == "end":
+                    break
+                if tag == "err":
+                    raise a
+                if a != expected:
+                    # the chunk key schedule is index-bound; folding out of
+                    # order would silently change the estimator
+                    raise RuntimeError(
+                        f"{driver}: prefetch delivered chunk {a}, expected "
+                        f"{expected} — stream order violated")
+                expected += 1
+                process(a, b, c)
+        finally:
+            pf.close()
     if frontier == 0:
         raise ValueError(
             f"{driver}: the stream contained no valid rows (every "
             f"chunk was empty or fully masked) — nothing to cluster")
+    drain_spills()  # stream-end drain: every spilled map back on host
+    ingest_stats = {
+        "prefetch_depth": depth,
+        "donate": bool(plan.donate_stream),
+        "n_chunks": len(chunk_counts),
+        "wall_s": time.perf_counter() - loop_t0,
+        "ingest_wait_s": ingest_wait_s,
+    }
 
     # ---- finalize: levels 1..m-1 on the occupied reservoir prefix --------
     size0 = round_up(frontier, mult)
@@ -482,6 +823,7 @@ def _run_stream(plan: FitPlan, chunks, placement_cls) -> Reduction:
         chunk_n=chunk_n, chunk_assign=chunk_assign,
         chunk_offset=chunk_offset, chunk_epoch=chunk_epoch,
         chunk_counts=chunk_counts, maps=maps, n_cascades=n_cascades,
+        ingest_stats=ingest_stats,
     )
     return Reduction(
         protos=buf_x, mass=buf_m, valid=buf_v,
@@ -508,6 +850,8 @@ def ihtc_streaming(
     *,
     chunk_n: Optional[int] = None,
     reservoir_n: Optional[int] = None,
+    prefetch_depth: Optional[int] = None,
+    donate_stream: Optional[bool] = None,
     weighted: bool = False,
     use_mass_in_backend: bool = True,
     key: Optional[jax.Array] = None,
@@ -531,9 +875,12 @@ def ihtc_streaming(
 
     ``chunk_n`` / ``reservoir_n`` default to the active runtime config
     (``REPRO_CHUNK_N`` / ``REPRO_RESERVOIR_N``); 0 = auto (the first
-    chunk's row count, resp. ``4 * (chunk_n // t)``). ``m >= 1`` is
-    required: with m = 0 no reduction ever happens and the backend would
-    need all n points at once — exactly what streaming exists to avoid.
+    chunk's row count, resp. ``4 * (chunk_n // t)``). ``prefetch_depth`` /
+    ``donate_stream`` (``REPRO_PREFETCH_DEPTH`` / ``REPRO_DONATE_STREAM``)
+    pipeline the ingest loop — see DESIGN.md §18; results are bit-identical
+    at every setting. ``m >= 1`` is required: with m = 0 no reduction ever
+    happens and the backend would need all n points at once — exactly what
+    streaming exists to avoid.
 
     Returns the canonical :class:`repro.core.plan.FitResult`;
     ``labels_for(i)`` / ``iter_labels()`` stream the final labels back out,
@@ -542,7 +889,9 @@ def ihtc_streaming(
     """
     return fit(
         chunks, t, m, backend, executor="streaming",
-        chunk_n=chunk_n, reservoir_n=reservoir_n, weighted=weighted,
+        chunk_n=chunk_n, reservoir_n=reservoir_n,
+        prefetch_depth=prefetch_depth, donate_stream=donate_stream,
+        weighted=weighted,
         use_mass_in_backend=use_mass_in_backend, key=key, impl=impl,
         knn_block=knn_block, n_blocks=n_blocks, min_points=min_points,
         driver="ihtc_streaming", **backend_kwargs,

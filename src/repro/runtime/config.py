@@ -78,6 +78,18 @@ class RuntimeConfig:
         fit; 0 = auto (at least 4x the per-chunk prototype budget
         ``chunk_n // t``, raised to cover the feasibility bound of
         DESIGN.md §12).
+      prefetch_depth: how many chunks the streaming executors stage ahead
+        of the device (DESIGN.md §18): 0 = today's serial loop (normalize,
+        stage, reduce, fold — one chunk at a time); >= 1 starts a bounded
+        background prefetch thread that normalizes/validates chunk N+1..
+        N+depth into a rotating staging-buffer pool while chunk N runs on
+        device. Every depth is bit-identical to depth 0 (the chunk key
+        schedule is indexed, not arrival-ordered).
+      donate_stream: donate the reservoir operands of the streaming fold /
+        cascade / compaction programs (``jax.jit`` ``donate_argnums``) so
+        the reservoir updates in place instead of being copied every
+        chunk. Results are bit-identical either way; donation only changes
+        buffer reuse.
       executor: fit execution strategy for :func:`repro.fit`
         (:mod:`repro.core.plan`) — "auto" picks from the input type and the
         mesh ("memory" | "sharded" for resident arrays, "streaming" |
@@ -114,6 +126,8 @@ class RuntimeConfig:
     axis_name: str = "data"
     chunk_n: int = 0
     reservoir_n: int = 0
+    prefetch_depth: int = 0
+    donate_stream: bool = False
     executor: str = "auto"
     tune: str = "off"
     serve_queue_depth: int = 8192
@@ -124,7 +138,7 @@ class RuntimeConfig:
     def __post_init__(self) -> None:
         if self.impl not in _IMPLS:
             raise ValueError(f"impl must be one of {_IMPLS}, got {self.impl!r}")
-        for name in ("knn_block", "chunk_n", "reservoir_n"):
+        for name in ("knn_block", "chunk_n", "reservoir_n", "prefetch_depth"):
             if getattr(self, name) < 0:
                 raise ValueError(f"{name} must be >= 0, got {getattr(self, name)}")
         for name in ("block_q", "block_k", "n_blocks"):
@@ -160,7 +174,14 @@ class RuntimeConfig:
         no-stale-cache contract, extended to fields the outer jit does not
         itself resolve (``interpret``, Pallas tile sizes, ...). ``chunk_n``
         and ``reservoir_n`` participate because the streaming drivers derive
-        static buffer shapes from them, and ``executor`` because the fit
+        static buffer shapes from them; ``donate_stream`` because donation
+        is part of the compiled executable (input-output aliasing — a
+        donating program must never be served where a non-donating one was
+        requested, or vice versa) and ``prefetch_depth`` for the same
+        completeness reason as ``executor`` below (it selects the stream
+        loop's pipeline shape, not a traced program, but downstream
+        consumers treat the key as a fingerprint of every
+        behaviour-determining field); and ``executor`` because the fit
         planner (:mod:`repro.core.plan`) derives buffer placement and level
         shapes from the chosen executor — a plan change must retrace, never
         hit a program compiled for another executor's buffers. ``mesh`` /
@@ -194,6 +215,7 @@ class RuntimeConfig:
             tune_state = (self.tune, cache_epoch())
         return (self.impl, self.interpret, self.knn_block, self.block_q,
                 self.block_k, self.n_blocks, self.chunk_n, self.reservoir_n,
+                self.prefetch_depth, self.donate_stream,
                 self.executor, tune_state, self.serve_queue_depth,
                 self.serve_max_inflight, self.serve_max_wait_ms)
 
@@ -214,6 +236,8 @@ _ENV_FIELDS = {
     "REPRO_AXIS_NAME": ("axis_name", str),
     "REPRO_CHUNK_N": ("chunk_n", int),
     "REPRO_RESERVOIR_N": ("reservoir_n", int),
+    "REPRO_PREFETCH_DEPTH": ("prefetch_depth", int),
+    "REPRO_DONATE_STREAM": ("donate_stream", _parse_bool),
     "REPRO_EXECUTOR": ("executor", str),
     "REPRO_TUNE": ("tune", str),
     "REPRO_SERVE_QUEUE_DEPTH": ("serve_queue_depth", int),

@@ -82,6 +82,12 @@ def _stale_reason(params: Any) -> Optional[str]:
                 or (v & (v - 1)) != 0:
             return (f"{name}={v!r} is not a positive power of two and "
                     f"cannot tile a pow2 shape bucket")
+    # prefetch_depth is a queue depth, not a tile: 0 (serial) and small
+    # non-pow2 depths are all legal — only reject non-ints/negatives
+    if "prefetch_depth" in params:
+        v = params["prefetch_depth"]
+        if not isinstance(v, int) or isinstance(v, bool) or v < 0:
+            return (f"prefetch_depth={v!r} is not a non-negative int")
     return None
 
 

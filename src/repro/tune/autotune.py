@@ -17,8 +17,11 @@ Cells and what they tune (DESIGN.md §14):
   * ``"knn_block"`` — the executor-level blocked-kNN row block that
     ``knn_block=0`` ("auto") resolves to (today's hand-picked constant is
     ``repro.core.knn.AUTO_KNN_BLOCK``).
-  * ``"stream"`` — the streaming-fit chunk budget ``chunk_n`` (shape-free
-    cell: one winner per device kind, bucket ``"any"``).
+  * ``"stream"`` — the streaming-fit chunk budget ``chunk_n`` and ingest
+    ``prefetch_depth`` (shape-free cell: one winner per device kind,
+    bucket ``"any"``). Every depth is bit-identical (DESIGN.md §18), so
+    tuning it is a pure latency choice; ``donate_stream`` stays manual —
+    donation changes buffer ownership, not a tile size.
   * ``"assign"`` — the nearest/top-k hot path (serve-side
     ``ClusterIndex.assign`` and the fused blocked-kNN inner loop,
     DESIGN.md §16): composed ref vs the fused streaming family incl. the
@@ -60,6 +63,7 @@ _QK_TILES = [(bq, bk) for bq in (128, 256, 512) for bk in (256, 512, 1024)]
 _SEG_TILES = [(bs, bn) for bs in (256, 512, 1024) for bn in (512, 1024, 2048)]
 _KNN_BLOCKS = (2048, 4096, 8192, 16384)
 _CHUNKS = (1024, 2048, 4096)
+_PREFETCH_DEPTHS = (0, 2)  # serial vs pipelined ingest (§18); bit-identical
 _ASSIGN_BKS = (512, 1024, 2048)  # fused key-block tiles (pow2, lane-aligned)
 
 #: synthetic dims a cell is measured at when the caller gives none
@@ -105,7 +109,8 @@ def candidates_for(kernel: str, dims: Dict[str, int],
         blocks = [b for b in _KNN_BLOCKS if b <= ceiling] or [ceiling]
         return [{"knn_block": b} for b in blocks]
     if kernel == "stream":
-        return [{"chunk_n": c} for c in _CHUNKS]
+        return [{"chunk_n": c, "prefetch_depth": p}
+                for c in _CHUNKS for p in _PREFETCH_DEPTHS]
     if kernel == "assign":
         # composed ref + the fused streaming family (XLA fold off-TPU, so
         # it is measurable everywhere); Pallas composed candidates keep
@@ -235,7 +240,8 @@ def _runner(kernel: str, dims: Dict[str, int], dtype: str):
             c = params["chunk_n"]
             chunks = (x[i:i + c] for i in range(0, n, c))
             res = repro.fit(chunks, 2, 1, "kmeans", k=3,
-                            executor="streaming", chunk_n=c)
+                            executor="streaming", chunk_n=c,
+                            prefetch_depth=params["prefetch_depth"])
             return res.proto_labels
 
         return run

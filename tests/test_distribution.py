@@ -314,6 +314,103 @@ print("FIT-MATRIX-OK")
     assert "FIT-MATRIX-OK" in out
 
 
+def test_pipelined_ingest_matrix_bit_identical():
+    """The §18 extension of the executor matrix: the streaming executors
+    stay bit-identical to the in-memory reference on the aligned config —
+    and to their own serial loop on a cascading multi-chunk stream — for
+    every prefetch_depth in {0, 1, 3} x donation on/off, on a real 8-way
+    mesh."""
+    out = _run("""
+import repro
+from repro.core import make_data_mesh
+
+rng = np.random.default_rng(0)
+mus = np.array([[1, 2], [7, 8], [3, 5]], float)
+sds = np.array([[1, 0.5], [2, 1], [3, 4]], float) ** 0.5
+comp = rng.choice(3, size=512, p=[0.5, 0.3, 0.2])
+x_np = (mus[comp] + rng.normal(size=(512, 2)) * sds[comp]).astype(np.float32)
+mesh = make_data_mesh()
+key = jax.random.PRNGKey(7)
+GRID = [(dep, don) for dep in (0, 1, 3) for don in (False, True)]
+
+# aligned single-buffer stream: every cell == the in-memory bits
+want = repro.fit(jnp.asarray(x_np), 2, 2, "kmeans", k=3, key=key,
+                 executor="memory")
+wl = np.asarray(want.labels)
+wp = np.asarray(want.protos).view(np.uint32)
+wm = np.asarray(want.proto_mass).view(np.uint32)
+for ex, kw in (("streaming", {}), ("streaming_sharded", {"mesh": mesh})):
+    for dep, don in GRID:
+        r = repro.fit(iter([x_np]), 2, 2, "kmeans", k=3, key=key,
+                      executor=ex, chunk_n=512, reservoir_n=1024,
+                      prefetch_depth=dep, donate_stream=don, **kw)
+        assert np.array_equal(wl, r.labels_for(0)), (ex, dep, don)
+        assert np.array_equal(wp, np.asarray(r.protos).view(np.uint32)), (ex, dep, don)
+        assert np.array_equal(wm, np.asarray(r.proto_mass).view(np.uint32)), (ex, dep, don)
+
+# cascading multi-chunk stream: every cell == that executor's serial loop
+n, chunk = 4096, 512
+comp2 = rng.choice(3, size=n, p=[0.5, 0.3, 0.2])
+y = (mus[comp2] + rng.normal(size=(n, 2)) * sds[comp2]).astype(np.float32)
+mk = lambda: iter([y[lo:lo + chunk] for lo in range(0, n, chunk)])
+for ex, kw in (("streaming", {}), ("streaming_sharded", {"mesh": mesh})):
+    ref = repro.fit(mk(), 2, 2, "kmeans", k=3, key=key, executor=ex,
+                    chunk_n=chunk, reservoir_n=640, prefetch_depth=0, **kw)
+    assert ref.n_cascades >= 1
+    rl = ref.labels()
+    rp = np.asarray(ref.protos).view(np.uint32)
+    for dep, don in GRID[2:]:
+        r = repro.fit(mk(), 2, 2, "kmeans", k=3, key=key, executor=ex,
+                      chunk_n=chunk, reservoir_n=640, prefetch_depth=dep,
+                      donate_stream=don, **kw)
+        assert np.array_equal(rl, r.labels()), (ex, dep, don)
+        assert np.array_equal(rp, np.asarray(r.protos).view(np.uint32)), (ex, dep, don)
+print("PIPELINED-MATRIX-OK")
+""")
+    assert "PIPELINED-MATRIX-OK" in out
+
+
+def test_mesh_place_slab_reshards_device_resident():
+    """Satellite regression: _MeshPlacement.place_slab must reshard
+    device-resident slabs directly (device_put on a jax array) instead of
+    round-tripping through jnp.asarray — an already-replicated slab passes
+    through untouched (the device_put no-op fast path), a row-sharded slab
+    reshards to the replicated layout bit-for-bit, and host numpy slabs
+    still place."""
+    out = _run("""
+from repro.core.plan import plan_fit
+from repro.core.streaming import _MeshPlacement
+from repro.core import make_data_mesh
+
+mesh = make_data_mesh()
+plan = plan_fit(None, 2, 2, "kmeans", k=3, executor="streaming_sharded",
+                chunk_n=64, reservoir_n=128, mesh=mesh)
+pl = _MeshPlacement(plan, d=2)
+rng = np.random.default_rng(0)
+px = rng.normal(size=(64, 2)).astype(np.float32)
+pm = np.ones((64,), np.float32)
+pv = np.ones((64,), bool)
+
+# host slabs place and replicate
+hx, hm, hv = pl.place_slab(px, pm, pv)
+assert hx.sharding == pl._rep and hm.sharding == pl._rep
+assert np.array_equal(np.asarray(hx), px)
+
+# an already-replicated device slab passes through as the same object
+gx, gm, gv = pl.place_slab(hx, hm, hv)
+assert gx is hx and gm is hm and gv is hv
+
+# a row-sharded device slab (a sharded level-step output) reshards
+# device-to-device, bit-for-bit
+sx = jax.device_put(jnp.asarray(px), pl._row)
+rx, rm, rv = pl.place_slab(sx, hm, hv)
+assert rx.sharding == pl._rep
+assert np.array_equal(np.asarray(rx).view(np.uint32), px.view(np.uint32))
+print("PLACE-SLAB-OK")
+""")
+    assert "PLACE-SLAB-OK" in out
+
+
 def test_composed_executor_multichunk_invariants():
     """The composed streaming+sharded path under real cascade pressure:
     host chunks reduced by sharded level steps into a bounded mesh-sharded

@@ -155,6 +155,35 @@ def test_weights_and_valid_rejected_where_unsupported(rng):
     assert (lab[32:] == -1).all() and lab[:32].min() >= 0
 
 
+def test_ingest_knobs_resolve_and_reject_where_unsupported(rng):
+    """§18 knob plumbing: plan_fit freezes prefetch_depth/donate_stream
+    from kwargs or the runtime config (explicit wins), rejects a negative
+    depth, and rejects explicit values loudly on executors that have no
+    stream loop to apply them to (a configured value simply does not
+    apply there)."""
+    x, _ = gmm_sample(64, rng)
+    xj = jnp.asarray(x)
+    plan = plan_fit(iter([x]), 2, 1, prefetch_depth=3, donate_stream=True)
+    assert (plan.prefetch_depth, plan.donate_stream) == (3, True)
+    with runtime.configure(prefetch_depth=2, donate_stream=True):
+        plan = plan_fit(iter([x]), 2, 1)
+        assert (plan.prefetch_depth, plan.donate_stream) == (2, True)
+        # explicit kwargs beat the configured values
+        plan = plan_fit(iter([x]), 2, 1, prefetch_depth=0,
+                        donate_stream=False)
+        assert (plan.prefetch_depth, plan.donate_stream) == (0, False)
+    with pytest.raises(ValueError, match="prefetch_depth must be >= 0"):
+        plan_fit(iter([x]), 2, 1, prefetch_depth=-1)
+    with pytest.raises(ValueError, match="prefetch_depth"):
+        plan_fit(xj, 2, 1, executor="memory", prefetch_depth=2)
+    with pytest.raises(ValueError, match="donate_stream"):
+        plan_fit(xj, 2, 1, executor="memory", donate_stream=True)
+    # explicit 0/False and configured values are not errors off-stream
+    assert plan_fit(xj, 2, 1, prefetch_depth=0).prefetch_depth == 0
+    with runtime.configure(prefetch_depth=2, donate_stream=True):
+        assert plan_fit(xj, 2, 1).executor == "memory"
+
+
 # ------------------------------------------------- canonical result type
 
 

@@ -394,6 +394,24 @@ def test_serve_config_knobs_env_validation_and_dispatch_key():
         == base.dispatch_key()
 
 
+def test_ingest_config_knobs_env_validation_and_dispatch_key():
+    """The §18 ingest-pipeline knobs live in the runtime config:
+    REPRO_PREFETCH_DEPTH / REPRO_DONATE_STREAM parse from env, a negative
+    depth fails at construction, and both participate in dispatch_key()
+    (donation changes the compiled executable's aliasing)."""
+    cfg = runtime.config_from_env(
+        {"REPRO_PREFETCH_DEPTH": "3", "REPRO_DONATE_STREAM": "true"})
+    assert cfg.prefetch_depth == 3
+    assert cfg.donate_stream is True
+    with pytest.raises(ValueError):
+        runtime.RuntimeConfig(prefetch_depth=-1)
+    base = runtime.RuntimeConfig()
+    assert base.replace(prefetch_depth=2).dispatch_key() \
+        != base.dispatch_key()
+    assert base.replace(donate_stream=True).dispatch_key() \
+        != base.dispatch_key()
+
+
 def test_cluster_service_warmup_excludes_prior_traffic_from_stats(rng):
     """Regression: warmup() must leave the stats counters at zero even
     when probe traffic preceded it (deployment health checks routinely

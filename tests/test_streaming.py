@@ -233,6 +233,133 @@ def test_streaming_all_masked_stream_raises_clearly():
                        chunk_n=8)
 
 
+# ------------------------------------------- pipelined ingest (§18)
+
+
+def _spill_tuple(res):
+    """Everything the back-out chain depends on, as host arrays."""
+    s = res.spill
+    return (np.asarray(res.protos).view(np.uint32),
+            np.asarray(res.proto_mass).view(np.uint32),
+            np.asarray(res.proto_valid),
+            list(s.chunk_assign), list(s.maps),
+            list(s.chunk_offset), list(s.chunk_epoch))
+
+
+@pytest.mark.parametrize("depth,donate",
+                         [(1, False), (1, True), (3, False), (3, True)])
+def test_pipelined_ingest_bitwise_parity(rng, depth, donate):
+    """Acceptance contract: every prefetch depth x donation setting is
+    bitwise identical to the serial loop — through mid-stream cascades,
+    a raw-fold tail, and an empty chunk."""
+    x, _ = gmm_sample(2048, rng)
+    chunks = lambda: iter(
+        list(_chunked(x[:1792], 256))
+        + [np.zeros((0, 2), np.float32), x[1792:1797]])
+    kw = dict(chunk_n=256, reservoir_n=320, key=jax.random.PRNGKey(7))
+    ref = ihtc_streaming(chunks(), 2, 2, "kmeans", k=3,
+                         prefetch_depth=0, **kw)
+    assert ref.n_cascades >= 1  # the parity claim must cover cascades
+    got = ihtc_streaming(chunks(), 2, 2, "kmeans", k=3,
+                         prefetch_depth=depth, donate_stream=donate, **kw)
+    for a, b in zip(_spill_tuple(ref), _spill_tuple(got)):
+        if isinstance(a, list):
+            assert len(a) == len(b)
+            for ai, bi in zip(a, b):
+                np.testing.assert_array_equal(np.asarray(ai),
+                                              np.asarray(bi))
+        else:
+            np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(ref.labels(), got.labels())
+
+
+@pytest.mark.parametrize("depth", [0, 2])
+def test_staging_pool_tail_masking_unchanged(rng, depth):
+    """Satellite regression: the staging pool reuses buffers with a
+    zero-fill watermark instead of a fresh np.zeros per chunk. A full
+    chunk followed by shorter ragged chunks leaves stale rows in the
+    reused buffer — the masked tail must still read as zeros, so the
+    result matches the same stream pre-padded by hand."""
+    x, _ = gmm_sample(700, rng)
+    ragged = [x[:256], x[256:456], x[456:500], x[500:700]]
+
+    def padded():
+        for c in ragged:
+            buf = np.zeros((256, 2), np.float32)
+            buf[:len(c)] = c
+            yield buf, len(c)
+
+    kw = dict(chunk_n=256, reservoir_n=512, key=jax.random.PRNGKey(2),
+              prefetch_depth=depth)
+    a = ihtc_streaming(iter(ragged), 2, 2, "kmeans", k=3, **kw)
+    b = ihtc_streaming(padded(), 2, 2, "kmeans", k=3, **kw)
+    np.testing.assert_array_equal(
+        np.asarray(a.protos).view(np.uint32),
+        np.asarray(b.protos).view(np.uint32))
+    np.testing.assert_array_equal(a.labels(), b.labels())
+
+
+def _prefetch_threads():
+    import threading
+
+    from repro.core.streaming import _PREFETCH_THREAD_NAME
+
+    return [t for t in threading.enumerate()
+            if t.name == _PREFETCH_THREAD_NAME and t.is_alive()]
+
+
+def test_prefetch_fault_mid_stream_shuts_down_cleanly(rng):
+    """A bad chunk mid-stream must raise the same error the serial loop
+    raises, at any depth, and the prefetch thread must not outlive the
+    failed fit (no hung queue, no leaked staging buffers)."""
+    x, _ = gmm_sample(512, rng)
+    bad = np.zeros((300, 2), np.float32)  # 300 rows > chunk_n=256
+
+    def stream():
+        yield x[:256]
+        yield x[256:512]
+        yield bad
+
+    with pytest.raises(ValueError, match="rows > chunk_n") as serial:
+        ihtc_streaming(stream(), 2, 2, "kmeans", k=3, chunk_n=256,
+                       prefetch_depth=0, key=jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="rows > chunk_n") as piped:
+        ihtc_streaming(stream(), 2, 2, "kmeans", k=3, chunk_n=256,
+                       prefetch_depth=2, key=jax.random.PRNGKey(0))
+    assert str(piped.value) == str(serial.value)
+    assert _prefetch_threads() == []
+    # a generator that itself explodes propagates the original exception
+    def exploding():
+        yield x[:256]
+        raise RuntimeError("source died")
+
+    with pytest.raises(RuntimeError, match="source died"):
+        ihtc_streaming(exploding(), 2, 2, "kmeans", k=3, chunk_n=256,
+                       prefetch_depth=2, key=jax.random.PRNGKey(0))
+    assert _prefetch_threads() == []
+
+
+def test_ingest_stats_and_forced_copy_contract(rng):
+    """LabelSpill carries ingest telemetry, every spilled map is a true
+    host copy (the §12 contract is now enforced at construction), and a
+    device array smuggled into LabelSpill raises."""
+    from repro.core.plan import LabelSpill
+
+    x, _ = gmm_sample(1024, rng)
+    res = ihtc_streaming(_chunked(x, 256), 2, 2, "kmeans", k=3,
+                         chunk_n=256, reservoir_n=320,
+                         prefetch_depth=2, key=jax.random.PRNGKey(1))
+    st = res.spill.ingest_stats
+    assert st["prefetch_depth"] == 2 and st["n_chunks"] == 4
+    assert st["wall_s"] > 0 and st["ingest_wait_s"] >= 0
+    for a in list(res.spill.chunk_assign) + list(res.spill.maps):
+        assert isinstance(a, np.ndarray)
+    with pytest.raises(TypeError, match="forced"):
+        LabelSpill(chunk_assign=[jnp.zeros((4,), jnp.int32)], maps=[],
+                   chunk_offset=[0], chunk_epoch=[0], chunk_counts=[4],
+                   chunk_n=4, n_cascades=0)
+
+
 def test_streaming_hole_heavy_reservoir_compacts(rng):
     """Slabs that are mostly masked holes (chunks collapsing to very few
     clusters) can fill the reservoir with fewer valid prototypes than a

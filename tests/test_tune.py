@@ -148,13 +148,24 @@ def test_fit_with_tuned_plan_matches_untuned_labels(rng, cache):
 
 def test_plan_fit_streaming_consults_stream_cell(rng, cache):
     x = rng.normal(size=(64, 3)).astype(np.float32)
-    cache.record(DK, "stream", "any", {"chunk_n": 2048, "reservoir_n": 8192})
+    cache.record(DK, "stream", "any", {"chunk_n": 2048, "reservoir_n": 8192,
+                                       "prefetch_depth": 2})
     with runtime.configure(tune="cached"):
         plan = plan_fit(iter([x]), 2, 1)
         assert (plan.chunk_n, plan.reservoir_n) == (2048, 8192)
+        # depth 0 is the serial default, treated as auto: the measured
+        # winner applies unless the caller pins a depth explicitly
+        assert plan.prefetch_depth == 2
+        assert plan_fit(iter([x]), 2, 1, prefetch_depth=0).prefetch_depth \
+            == 0
+        assert plan_fit(iter([x]), 2, 1, prefetch_depth=1).prefetch_depth \
+            == 1
+        # donation is never tuned
+        assert plan.donate_stream is False
         # explicit values beat the tuned budget
         assert plan_fit(iter([x]), 2, 1, chunk_n=64).chunk_n == 64
     assert plan_fit(iter([x]), 2, 1).chunk_n == 0  # off: auto stays auto
+    assert plan_fit(iter([x]), 2, 1).prefetch_depth == 0
 
 
 def test_resolve_auto_block(cache):
@@ -282,6 +293,13 @@ def test_stale_reason_catalogue():
     assert _stale_reason({"block_q": 0}) is not None
     assert _stale_reason({"chunk_n": "big"}) is not None
     assert _stale_reason("not-a-dict") is not None
+    # prefetch_depth is a queue depth, not a pow2 tile: 0 and 3 are fine,
+    # negatives / non-ints are stale
+    assert _stale_reason({"chunk_n": 2048, "prefetch_depth": 0}) is None
+    assert _stale_reason({"chunk_n": 2048, "prefetch_depth": 3}) is None
+    assert _stale_reason({"prefetch_depth": -1}) is not None
+    assert _stale_reason({"prefetch_depth": True}) is not None
+    assert _stale_reason({"prefetch_depth": "deep"}) is not None
 
 
 def test_stale_prune_warning_points_at_the_caller(cache):
