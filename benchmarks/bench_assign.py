@@ -74,13 +74,13 @@ def _index(p: int, d: int, c: int, seed: int) -> ClusterIndex:
     centers = rng.normal(size=(c, d)) * 50.0
     comp = np.arange(p) % c
     protos = centers[comp] + rng.normal(size=(p, d)) * 0.05
-    return ClusterIndex(
+    return ClusterIndex.build(ClusterIndex(
         protos=jnp.asarray(protos, jnp.float32),
         proto_mass=jnp.ones((p,), jnp.float32),
         proto_valid=jnp.ones((p,), bool),
         proto_labels=jnp.asarray(comp, jnp.int32),
         n_prototypes=jnp.asarray(p, jnp.int32),
-    ).with_packed_protos()
+    ))
 
 
 def _queries(nq: int, d: int, c: int, seed: int) -> jnp.ndarray:

@@ -1,0 +1,252 @@
+"""Open-loop traffic across a zero-downtime index refresh (DESIGN.md §19).
+
+``bench_serve_async.py`` measures the async front-end in steady state;
+this harness measures the *lifecycle*: requests flow while an
+:class:`repro.serve.lifecycle.RefreshDriver` folds drifted traffic into a
+live :class:`OnlineFitter` and hot-swaps the refreshed index into the
+serving :class:`AsyncClusterService` mid-run. Three phases per offered
+rate, each reported as its own row (the per-phase counters come from the
+``stats_snapshot(reset=True)`` satellite):
+
+* ``steady`` — the fresh-fit baseline, no refresh;
+* ``swap``   — the same offered load with the snapshot → save → warmup →
+  install pipeline firing mid-phase; ``swap_ms`` is the wall time the
+  swap pipeline holds the event loop, ``swap_stall_p99_ms`` the p99
+  latency of the requests in flight while it runs (the stall a client
+  actually sees);
+* ``post``   — drifted traffic on the refreshed index; ``dist_ratio``
+  is the refreshed-vs-stale mean assign distance on the drifted
+  distribution (quality recovered by the refresh — well under 1.0).
+
+Artifact: ``benchmarks/results/BENCH_lifecycle.json``, gated by
+``benchmarks/gate.py`` with row identity on (phase, offered_qps) and wide
+tolerances on the swap-stall metrics (docs/BENCHMARKS.md).
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import os
+import sys
+
+# direct-run support: repo root for the benchmarks package, src/ for repro
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_REPO, os.path.join(_REPO, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import gmm_sample, print_csv
+from repro.core.index import nearest_valid_prototype
+from repro.serve import (AsyncClusterService, OnlineFitter, QueueFullError,
+                         RefreshDriver, RefreshPolicy)
+
+RESULTS = os.path.join(os.path.dirname(os.path.abspath(__file__)), "results")
+
+# benchmark-registry entry (benchmarks/run.py --bench lifecycle)
+BENCH = {
+    "name": "lifecycle",
+    "artifact": "BENCH_lifecycle.json",
+    "summary": ("offered_qps", "p99_ms"),
+    "quick": dict(n=6_000, duration=1.2, qps_levels=(100,), mode="quick"),
+    "full": lambda mx: dict(n=min(mx, 200_000), duration=6.0,
+                            qps_levels=(200, 1_000),
+                            buckets=(32, 128, 512), mode="full"),
+}
+
+SIZES = (1, 4, 16, 64)
+DRIFT_SHIFT = 6.0  # how far the traffic distribution moves
+
+
+async def _phase(service, pool, *, qps: float, duration: float, seed: int,
+                 fire_at: float = -1.0, fire=None):
+    """Offered load at ``qps`` for ``duration`` seconds; optionally call
+    ``fire()`` (loop-blocking, e.g. the refresh pipeline) at ``fire_at``.
+    Returns (records, rejected, span_s, swap window)."""
+    loop = asyncio.get_running_loop()
+    rng = np.random.default_rng(seed)
+    records, rejected = [], 0
+    swap_t0 = swap_t1 = None
+    t0 = loop.time()
+    next_t, i, fired = 0.0, 0, fire is None
+    while next_t < duration:
+        if not fired and next_t >= fire_at:
+            fired = True
+            swap_t0 = loop.time()
+            fire()
+            swap_t1 = loop.time()
+        gap = t0 + next_t - loop.time()
+        if gap > 0:
+            await asyncio.sleep(gap)
+        size = SIZES[i % len(SIZES)]
+        lo = int(rng.integers(0, pool.shape[0] - size))
+        record = {"n": size, "t_submit": loop.time(), "t_done": None}
+        try:
+            fut = service.submit(pool[lo:lo + size])
+        except QueueFullError:
+            rejected += 1
+        else:
+            fut.add_done_callback(
+                lambda _f, record=record: record.__setitem__(
+                    "t_done", loop.time()))
+            records.append(record)
+        i += 1
+        next_t += 1.0 / qps  # open loop: the schedule never backs off
+    # settle in-flight work without draining (the service survives phases)
+    while any(r["t_done"] is None for r in records):
+        await asyncio.sleep(0.005)
+    window = (swap_t0, swap_t1) if swap_t0 is not None else None
+    return records, rejected, loop.time() - t0, window
+
+
+def _lat_ms(records):
+    return np.array([(r["t_done"] - r["t_submit"]) * 1e3 for r in records
+                     if r["t_done"] is not None])
+
+
+def _mean_dist(index, queries) -> float:
+    d, _ = nearest_valid_prototype(jnp.asarray(queries), index.protos,
+                                   index.proto_valid)
+    return float(jnp.mean(jnp.sqrt(jnp.maximum(d, 0.0))))
+
+
+def run(
+    n: int = 6_000,
+    t: int = 2,
+    m: int = 2,
+    backend: str = "kmeans",
+    buckets=(32, 128, 512),
+    duration: float = 1.2,
+    qps_levels=(100,),
+    max_wait_ms: float = 2.0,
+    max_inflight: int = 4,
+    observe_points: int = 2_000,
+    seed: int = 0,
+    mode: str = "quick",
+):
+    x, _ = gmm_sample(n, seed)
+    drifted_pool = gmm_sample(4096, seed + 1)[0] + DRIFT_SHIFT
+    home_pool = gmm_sample(4096, seed + 2)[0]
+
+    rows = []
+    for qps in qps_levels:
+        fitter = OnlineFitter(x, t, m, backend, k=3,
+                              chunk_n=max(observe_points, 1024))
+        stale = fitter.build_index()
+        service = AsyncClusterService(
+            stale, buckets=buckets, max_wait=max_wait_ms / 1e3,
+            max_inflight=max_inflight)
+        driver = RefreshDriver(service, fitter, policy=RefreshPolicy())
+
+        def phase_row(phase, records, rejected, span_s):
+            lat = _lat_ms(records)
+            sched = service.stats_snapshot(reset=True)["scheduler"]
+            return {
+                "phase": phase,
+                "offered_qps": int(qps),
+                "p50_ms": round(float(np.percentile(lat, 50)), 3),
+                "p99_ms": round(float(np.percentile(lat, 99)), 3),
+                "qps": round(len(lat) / max(span_s, 1e-9), 1),
+                "batches": sched["batches"],
+                "swaps": sched["swaps"],
+                "rejected": rejected,
+            }
+
+        # phase 1: steady state on the freshly fitted index
+        service.stats_snapshot(reset=True)
+        records, rejected, span, _ = asyncio.run(_phase(
+            service, home_pool, qps=qps, duration=duration, seed=seed + 3))
+        rows.append(phase_row("steady", records, rejected, span))
+
+        # fold drifted evidence in ahead of the timed swap (the observe
+        # path is the fitter's cost; the swap phase isolates the install)
+        rng = np.random.default_rng(seed + 4)
+        driver.fitter.observe(
+            drifted_pool[rng.integers(0, drifted_pool.shape[0],
+                                      size=observe_points)])
+
+        # phase 2: same load, refresh pipeline fires mid-phase
+        records, rejected, span, window = asyncio.run(_phase(
+            service, drifted_pool, qps=qps, duration=duration,
+            seed=seed + 5, fire_at=duration / 2,
+            fire=lambda: driver.refresh(trigger="bench")))
+        swap_ms = (window[1] - window[0]) * 1e3
+        # the stall a client saw: requests in flight while the swap
+        # pipeline held the loop (submitted before it ended, done after
+        # it began)
+        stalled = _lat_ms([
+            r for r in records if r["t_done"] is not None
+            and r["t_submit"] <= window[1] and r["t_done"] >= window[0]])
+        row = phase_row("swap", records, rejected, span)
+        row["swap_ms"] = round(swap_ms, 3)
+        row["swap_stall_p99_ms"] = round(
+            float(np.percentile(stalled, 99)), 3) if stalled.size else 0.0
+        rows.append(row)
+
+        # phase 3: drifted traffic on the refreshed index + quality delta
+        records, rejected, span, _ = asyncio.run(_phase(
+            service, drifted_pool, qps=qps, duration=duration,
+            seed=seed + 6))
+        fresh = service.current_index()
+        row = phase_row("post", records, rejected, span)
+        row["dist_ratio"] = round(
+            _mean_dist(fresh, drifted_pool)
+            / max(_mean_dist(stale, drifted_pool), 1e-12), 4)
+        rows.append(row)
+
+        async def _shutdown(svc=service):
+            await svc.drain()
+
+        asyncio.run(_shutdown())
+
+    print_csv(
+        "lifecycle",
+        [(r["phase"], r["offered_qps"], r["p50_ms"], r["p99_ms"], r["qps"],
+          r["batches"], r["swaps"], r.get("swap_ms", ""),
+          r.get("swap_stall_p99_ms", ""), r.get("dist_ratio", ""))
+         for r in rows],
+        "phase,offered_qps,p50_ms,p99_ms,qps,batches,swaps,swap_ms,"
+        "swap_stall_p99_ms,dist_ratio")
+
+    os.makedirs(RESULTS, exist_ok=True)
+    art = {
+        "name": "lifecycle",
+        "mode": mode,
+        "fit": {"n": n, "t": t, "m": m, "backend": backend},
+        "config": {"buckets": list(buckets), "duration": duration,
+                   "max_wait_ms": max_wait_ms, "max_inflight": max_inflight,
+                   "observe_points": observe_points,
+                   "drift_shift": DRIFT_SHIFT, "sizes": list(SIZES)},
+        "rows": rows,
+    }
+    with open(os.path.join(RESULTS, "BENCH_lifecycle.json"), "w") as f:
+        json.dump(art, f, indent=1)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=6_000)
+    ap.add_argument("--t", type=int, default=2)
+    ap.add_argument("--m", type=int, default=2)
+    ap.add_argument("--duration", type=float, default=1.2,
+                    help="seconds of offered load per phase")
+    ap.add_argument("--qps", type=int, nargs="+", default=[100])
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--observe-points", type=int, default=2_000)
+    ap.add_argument("--quick", action="store_true",
+                    help="run the registered quick-mode sweep")
+    args = ap.parse_args()
+    if args.quick:
+        run(**BENCH["quick"])
+    else:
+        run(n=args.n, t=args.t, m=args.m, duration=args.duration,
+            qps_levels=tuple(args.qps), max_wait_ms=args.max_wait_ms,
+            observe_points=args.observe_points, mode="cli")
+
+
+if __name__ == "__main__":
+    main()

@@ -56,8 +56,8 @@ def run(
     x, _ = gmm_sample(n, seed)
     xj = jnp.asarray(x)
     index, fit_sec = timed(
-        lambda: ClusterIndex.fit(xj, t, m, backend, k=3,
-                                 key=jax.random.PRNGKey(seed)),
+        lambda: ClusterIndex.build(xj, t, m, backend, k=3,
+                                   key=jax.random.PRNGKey(seed)),
         warmup=0)
     service = ClusterService(index, buckets=buckets, block=block)
     service.warmup()

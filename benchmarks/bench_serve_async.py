@@ -102,8 +102,8 @@ def run(
     mode: str = "quick",
 ):
     x, _ = gmm_sample(n, seed)
-    index = ClusterIndex.fit(jnp.asarray(x), t, m, backend, k=3,
-                             key=jax.random.PRNGKey(seed))
+    index = ClusterIndex.build(jnp.asarray(x), t, m, backend, k=3,
+                               key=jax.random.PRNGKey(seed))
     pool = gmm_sample(4096, seed + 1)[0]
 
     rows = []

@@ -24,6 +24,11 @@ _LAZY = {
     "available_executors": "repro.core.plan",
     "ClusterIndex": "repro.core.index",
     "ClusterService": "repro.serve.cluster_service",
+    "AsyncClusterService": "repro.serve.async_service",
+    "OnlineFitter": "repro.serve.lifecycle",
+    "RefreshDriver": "repro.serve.lifecycle",
+    "RefreshPolicy": "repro.serve.lifecycle",
+    "IndexStore": "repro.serve.artifacts",
     "ihtc": "repro.core.ihtc",
     "ihtc_sharded": "repro.core.distributed",
     "ihtc_streaming": "repro.core.streaming",

@@ -18,7 +18,8 @@ through jit/shard_map and can be checkpointed with any pytree saver.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional, Tuple, Union
+import warnings
+from typing import Any, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -61,21 +62,70 @@ class ClusterIndex(NamedTuple):
     q8_zero: Optional[jax.Array] = None      # (d,) f32 per-feature zero pt
 
     @classmethod
-    def from_result(cls, result: FitResult) -> "ClusterIndex":
-        """Freeze any fitted :class:`repro.core.plan.FitResult` (every
-        executor returns the same canonical artifact), packing the
-        low-precision prototype buffers while we are at it — the
-        prototype set is O(n/(t*)^m), so the one-time cost is noise next
-        to the fit."""
-        return cls(
-            protos=result.protos,
-            proto_mass=result.proto_mass,
-            proto_valid=result.proto_valid,
-            proto_labels=result.proto_labels,
-            n_prototypes=result.n_prototypes,
-        ).with_packed_protos()
+    def build(
+        cls,
+        source: Any,
+        t: Optional[int] = None,
+        m: Optional[int] = None,
+        backend: Union[str, BackendFn] = "kmeans",
+        *,
+        pack: bool = True,
+        **fit_kwargs,
+    ) -> "ClusterIndex":
+        """The one constructor: build a servable index from whatever you
+        have, dispatching on the input type exactly like ``repro.fit()``
+        dispatches executors.
 
-    def with_packed_protos(self) -> "ClusterIndex":
+        ``source`` is one of:
+
+        * a fitted :class:`repro.core.plan.FitResult` (any executor —
+          every one returns the same canonical artifact): freeze it;
+        * an existing :class:`ClusterIndex` (e.g. hand-built from five
+          arrays, or loaded from an artifact store): (re)pack it;
+        * raw data — a resident (n, d) array or any chunk iterable: run
+          the planned fit (``t``/``m`` required; the planner picks the
+          executor from the input type and the mesh, all dispatch knobs
+          default to the runtime config, and every :func:`repro.fit`
+          keyword is accepted) and freeze the result. Use ``repro.fit``
+          directly when the per-point training labels are also needed —
+          ``build`` keeps only the O(n/(t*)^m) index.
+
+        ``pack=True`` (default) also freezes the bf16/int8 low-precision
+        prototype buffers the quantized assign variants serve from
+        (DESIGN.md §16) — assigns are bitwise-identical either way, the
+        packed form just does the one-time quantization at freeze time
+        instead of per compiled shape. This subsumes the former four-way
+        constructor surface (``fit`` / ``fit_streaming`` / ``from_result``
+        / ``with_packed_protos``), which survive as deprecated aliases.
+        """
+        if isinstance(source, FitResult):
+            if t is not None or m is not None:
+                raise TypeError(
+                    "ClusterIndex.build: t/m only apply when building from "
+                    "raw data; the FitResult already fixed them")
+            idx = cls(
+                protos=source.protos,
+                proto_mass=source.proto_mass,
+                proto_valid=source.proto_valid,
+                proto_labels=source.proto_labels,
+                n_prototypes=source.n_prototypes,
+            )
+            return idx._packed() if pack else idx
+        if isinstance(source, ClusterIndex):
+            if t is not None or m is not None:
+                raise TypeError(
+                    "ClusterIndex.build: t/m only apply when building from "
+                    "raw data; the index is already fitted")
+            return source._packed() if pack else source
+        if t is None or m is None:
+            raise TypeError(
+                "ClusterIndex.build from raw data needs t and m (got "
+                f"t={t!r}, m={m!r}); pass a FitResult to freeze an "
+                "already-run fit")
+        return cls.build(_fit(source, t, m, backend, **fit_kwargs),
+                         pack=pack)
+
+    def _packed(self) -> "ClusterIndex":
         """Precompute the bf16 copy and the per-feature int8 quantization
         of the prototype buffer (scale/zero-point over valid rows only).
         Freeze-time work so per-request assign only touches queries —
@@ -87,6 +137,23 @@ class ClusterIndex(NamedTuple):
             protos_q8=q8, q8_scale=scale, q8_zero=zero,
         )
 
+    # ---- deprecated constructor aliases (the pre-build surface) -----------
+
+    @classmethod
+    def from_result(cls, result: FitResult) -> "ClusterIndex":
+        """Deprecated alias of ``ClusterIndex.build(result)``."""
+        warnings.warn(
+            "ClusterIndex.from_result is deprecated; use "
+            "ClusterIndex.build(result)", DeprecationWarning, stacklevel=2)
+        return cls.build(result)
+
+    def with_packed_protos(self) -> "ClusterIndex":
+        """Deprecated alias of ``ClusterIndex.build(index)`` (repack)."""
+        warnings.warn(
+            "ClusterIndex.with_packed_protos is deprecated; use "
+            "ClusterIndex.build(index)", DeprecationWarning, stacklevel=2)
+        return self._packed()
+
     @classmethod
     def fit(
         cls,
@@ -96,17 +163,12 @@ class ClusterIndex(NamedTuple):
         backend: Union[str, BackendFn] = "kmeans",
         **fit_kwargs,
     ) -> "ClusterIndex":
-        """Run the planned fit (:func:`repro.fit`) and freeze the servable
-        artifact.
-
-        ``x`` is a resident (n, d) array or any chunk iterable — the
-        planner picks the executor from the input type and the mesh
-        (``mesh=``/``executor=`` pin it; all dispatch knobs default to the
-        runtime config). Use ``from_result`` instead when the per-point
-        training labels are also needed — ``fit`` keeps only the
-        O(n/(t*)^m) index.
-        """
-        return cls.from_result(_fit(x, t, m, backend, **fit_kwargs))
+        """Deprecated alias of ``ClusterIndex.build(x, t, m, backend)``."""
+        warnings.warn(
+            "ClusterIndex.fit is deprecated; use "
+            "ClusterIndex.build(x, t, m, backend)",
+            DeprecationWarning, stacklevel=2)
+        return cls.build(x, t, m, backend, **fit_kwargs)
 
     @classmethod
     def fit_streaming(
@@ -117,19 +179,14 @@ class ClusterIndex(NamedTuple):
         backend: Union[str, BackendFn] = "kmeans",
         **streaming_kwargs,
     ) -> "ClusterIndex":
-        """Out-of-core fit: freeze the servable index straight from a chunk
-        stream without ever materializing the (n, d) array on device.
-
-        Accepts every :func:`repro.core.streaming.ihtc_streaming` keyword
-        (``chunk_n``/``reservoir_n`` default to the runtime config); with a
-        mesh configured the planner composes the out-of-core fit with the
-        sharded level steps (the ``streaming_sharded`` executor). The
-        result's host-side label spill is dropped — use ``repro.fit``
-        directly when the training labels are also needed, then
-        ``.to_index()`` for this same artifact.
-        """
-        return cls.from_result(_fit(chunks, t, m, backend,
-                                    **streaming_kwargs))
+        """Deprecated alias of ``ClusterIndex.build(chunks, t, m, backend)``
+        (the planner already streams chunk iterables — with a mesh
+        configured it composes the ``streaming_sharded`` executor)."""
+        warnings.warn(
+            "ClusterIndex.fit_streaming is deprecated; use "
+            "ClusterIndex.build(chunks, t, m, backend)",
+            DeprecationWarning, stacklevel=2)
+        return cls.build(chunks, t, m, backend, **streaming_kwargs)
 
     @property
     def dim(self) -> int:

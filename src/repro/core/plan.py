@@ -29,9 +29,9 @@ layer a pluggable front-end instead of three incidental copies:
     which survive as thin deprecation aliases).
 
 ``repro.fit(x_or_chunks, t, m, backend)`` is the public entry point;
-``ClusterIndex.fit`` / ``ClusterIndex.fit_streaming`` and
-``ClusterService.from_fit`` consume the result uniformly. DESIGN.md §13
-documents the executor contract and the composed-reservoir invariants.
+``ClusterIndex.build`` and ``ClusterService.from_fit`` consume the result
+uniformly. DESIGN.md §13 documents the executor contract and the
+composed-reservoir invariants.
 """
 from __future__ import annotations
 
@@ -323,17 +323,15 @@ class FitResult:
 
     # ---- conversion -------------------------------------------------------
 
-    def to_index(self):
-        """Freeze into a servable :class:`repro.core.index.ClusterIndex`."""
+    def to_index(self, *, pack: bool = True):
+        """Freeze into a servable :class:`repro.core.index.ClusterIndex`
+        (via :meth:`ClusterIndex.build` — ``pack=True`` also freezes the
+        bf16/int8 prototype buffers the quantized assign variants serve
+        from; bitwise-identical assigns either way, the packed form just
+        skips the per-trace repack)."""
         from repro.core.index import ClusterIndex  # lazy: no import cycle
 
-        return ClusterIndex(
-            protos=self.protos,
-            proto_mass=self.proto_mass,
-            proto_valid=self.proto_valid,
-            proto_labels=self.proto_labels,
-            n_prototypes=self.n_prototypes,
-        )
+        return ClusterIndex.build(self, pack=pack)
 
     def __repr__(self) -> str:
         return (f"FitResult(executor={self.executor!r}, "
@@ -665,24 +663,26 @@ def _finalize_backend(plan: FitPlan, red: Reduction) -> jax.Array:
     return jnp.where(red.valid, proto_labels, -1).astype(jnp.int32)
 
 
-def execute_plan(plan: FitPlan, data: Any) -> FitResult:
-    """Run the plan's executor, then the shared epilogue.
-
-    The executor (and the backend epilogue) run under a config scope
-    pinning the plan's resolved ``block_q``/``block_k``, so trace-time
-    kernel-tile reads default to what :func:`plan_fit` froze rather than
-    whatever the ambient config says by the time data starts moving. The
-    tune policy is also clamped to a non-measuring mode (``onthefly`` →
-    ``cached``): the planner may measure, execution never does. Note the
-    precise contract (§14): the plan's own knobs are frozen, while the
-    per-shape ops-level lookups stay live against the cache — epoch-keyed,
-    so deeper ITIS levels keep their finer-grained winners and any cache
-    mutation retraces correctly. With tuning off both pins are no-ops.
-    """
+def _plan_scope(plan: FitPlan):
+    """The execution config scope (§14): the plan's resolved tile knobs
+    pinned, the tune policy clamped to a non-measuring mode (``onthefly``
+    → ``cached``; the planner may measure, execution never does). Opening
+    the scope is idempotent — nesting it re-applies the same overrides —
+    which is what lets the online lifecycle re-run the epilogue under a
+    scope bit-identical to the one the executor originally ran in."""
     exec_tune = "off" if runtime.active().tune == "off" else "cached"
-    with runtime.configure(block_q=plan.block_q, block_k=plan.block_k,
-                           tune=exec_tune):
-        red = resolve_executor(plan.executor)(plan, data)
+    return runtime.configure(block_q=plan.block_q, block_k=plan.block_k,
+                             tune=exec_tune)
+
+
+def finalize_reduction(plan: FitPlan, red: Reduction) -> FitResult:
+    """The planner epilogue on an already-produced :class:`Reduction`:
+    backend finalize + label back-out + the canonical result — exactly
+    what :func:`execute_plan` runs after its executor returns. Split out
+    so the online lifecycle (:class:`repro.serve.lifecycle.OnlineFitter`)
+    can re-finalize a live reservoir snapshot into a fresh
+    :class:`FitResult` through the identical code path."""
+    with _plan_scope(plan):
         proto_labels = _finalize_backend(plan, red)
     if red.spill is not None:
         return FitResult(
@@ -699,6 +699,25 @@ def execute_plan(plan: FitPlan, data: Any) -> FitResult:
         proto_valid=red.valid, proto_labels=proto_labels,
         n_prototypes=red.n_prototypes, assignments=red.assignments,
         labels=labels)
+
+
+def execute_plan(plan: FitPlan, data: Any) -> FitResult:
+    """Run the plan's executor, then the shared epilogue.
+
+    The executor (and the backend epilogue) run under a config scope
+    pinning the plan's resolved ``block_q``/``block_k``, so trace-time
+    kernel-tile reads default to what :func:`plan_fit` froze rather than
+    whatever the ambient config says by the time data starts moving. The
+    tune policy is also clamped to a non-measuring mode (``onthefly`` →
+    ``cached``): the planner may measure, execution never does. Note the
+    precise contract (§14): the plan's own knobs are frozen, while the
+    per-shape ops-level lookups stay live against the cache — epoch-keyed,
+    so deeper ITIS levels keep their finer-grained winners and any cache
+    mutation retraces correctly. With tuning off both pins are no-ops.
+    """
+    with _plan_scope(plan):
+        red = resolve_executor(plan.executor)(plan, data)
+    return finalize_reduction(plan, red)
 
 
 def fit(

@@ -429,6 +429,12 @@ class _DevicePlacement:
         res_x, res_m, res_v = res
         return res_x[:size0], res_m[:size0], res_v[:size0]
 
+    def clone(self, bufs):
+        """Force fresh device buffers (a full-reservoir ``prefix`` slice is
+        the *same* array object in jax, and a later donated fold would
+        invalidate it — snapshots must outlive the live reservoir)."""
+        return tuple(jnp.array(b) for b in bufs)
+
 
 class _MeshPlacement:
     """Mesh strategy (the composed ``streaming_sharded`` executor): the
@@ -518,6 +524,13 @@ class _MeshPlacement:
             jnp.pad(res_m[:frontier], (0, pad)),
             jnp.pad(res_v[:frontier], (0, pad)))
 
+    def clone(self, bufs):
+        """Fresh buffers re-pinned to the reservoir layout (see the
+        single-device twin: a zero-pad prefix can alias the live
+        reservoir, which a later donated fold would invalidate)."""
+        x, m, v = (jnp.array(b) for b in bufs)
+        return self._place(x, m, v)
+
 
 def _fold_sharded_impl(res_x, res_m, res_v, px, pm, pv, offset, *,
                        slab_n: int, axis_name: str, mesh,
@@ -561,221 +574,308 @@ _FOLD_SHARDED = {
 }
 
 
+# executor name → placement strategy (the lifecycle layer resolves the
+# plan's executor through this instead of reaching into the registry)
+_PLACEMENTS = {"streaming": _DevicePlacement,
+               "streaming_sharded": _MeshPlacement}
+
+
 # ---------------------------------------------------------------------------
-# the stream loop (once, for both executors)
+# the stream loop (once, for both executors) — a long-lived machine
 # ---------------------------------------------------------------------------
 
 
-def _run_stream(plan: FitPlan, chunks, placement_cls) -> Reduction:
-    driver = plan.driver
-    t, m = plan.t, plan.m
-    floor = plan.reduction_floor()
-    depth = plan.prefetch_depth
-    key_itis, _ = plan.split_keys()
-    # the in-memory key schedule: one split per level, level 0 first
-    key_chain, key_level0 = jax.random.split(key_itis)
-    key_cascade = jax.random.fold_in(key_level0, _CASCADE_KEY_TAG)
+class _StreamMachine:
+    """The §12/§18 stream loop as a long-lived object.
 
-    it = iter(chunks)
-    first = None
-    for item in it:
-        first = _normalize_chunk(item, driver)
-        break
-    if first is None:
-        raise ValueError(f"{driver}: the chunk stream is empty")
-    chunk_n = plan.chunk_n
-    if not chunk_n:
-        chunk_n = first[0].shape[0]
-        if chunk_n == 0:
+    ``_run_stream`` used to be one closure-heavy function: geometry fixed
+    from the first chunk, a consume/process/fold/cascade loop, a
+    destructive end-of-stream finalize. The online lifecycle (DESIGN.md
+    §19) needs the identical machinery to *outlive* a single fit —
+    :class:`repro.serve.lifecycle.OnlineFitter` keeps folding observed
+    chunks into the same bounded reservoir for the life of a deployment
+    and re-finalizes on demand — so the loop's state (reservoir, frontier,
+    spill lists, the index-bound key schedule) and its transitions
+    (``consume`` / ``process`` / ``fold`` / ``cascade`` / ``finalize``)
+    live here as methods instead of closures.
+
+    Epilogue contract: ``finalize(snapshot=False)`` is exactly the old
+    end-of-stream epilogue (the batch executors call it once and drop the
+    machine). ``finalize(snapshot=True)`` is **non-destructive**: it
+    drains the deferred-spill backlog, composes the back-out state over
+    *copies* of the spill lists, clones the occupied reservoir prefix
+    (a full-reservoir prefix slice aliases the live buffers, which the
+    next donated fold would invalidate), and runs levels 1..m-1 from the
+    stored level-1 chain key. The level keys are re-derived from the same
+    stored key on every finalize — the schedule is a pure function of
+    (reservoir state, plan key) — so a snapshot after zero further chunks
+    is bit-identical to the FitResult the batch executor returns, and
+    ingestion continues afterwards as if the snapshot never happened.
+    """
+
+    def __init__(self, plan: FitPlan, placement_cls, first_arr: np.ndarray):
+        driver = plan.driver
+        self.plan = plan
+        self.driver = driver
+        self.t, self.m = plan.t, plan.m
+        self.floor = plan.reduction_floor()
+        self.depth = plan.prefetch_depth
+        key_itis, _ = plan.split_keys()
+        # the in-memory key schedule: one split per level, level 0 first.
+        # key_chain seeds levels 1..m-1 and is NOT consumed in place —
+        # finalize re-splits from it every time (snapshot purity).
+        self.key_chain, self.key_level0 = jax.random.split(key_itis)
+        self.key_cascade = jax.random.fold_in(self.key_level0,
+                                              _CASCADE_KEY_TAG)
+
+        chunk_n = plan.chunk_n
+        if not chunk_n:
+            chunk_n = first_arr.shape[0]
+            if chunk_n == 0:
+                raise ValueError(
+                    f"{driver}: cannot infer chunk_n from an empty first "
+                    f"chunk; pass chunk_n= or configure runtime chunk_n")
+        d = first_arr.shape[1] if first_arr.ndim == 2 else None
+        if d is None:
+            raise ValueError(f"{driver}: chunks must be 2-D (rows, d)")
+        validate_reduction_params(self.t, self.m, n=chunk_n, min_m=1,
+                                  driver=driver)
+        self.chunk_n = chunk_n
+        self.d = d
+
+        self.placement = placement_cls(plan, d)
+        mult = self.placement.mult
+        self.mult = mult
+        self.chunk_buf_n = round_up(chunk_n, mult)
+        self.chunk_out = round_up(max(self.chunk_buf_n // self.t, 1), mult)
+        # raw-fold slab for chunks too small to reduce (the in-memory
+        # early-stop rule, applied per chunk): their valid prefix is copied
+        # verbatim. Raw slabs enter the fold replicated, so they need no
+        # shard padding.
+        self.raw_len = min(chunk_n, self.floor)
+        reservoir_n = plan.reservoir_n
+        if not reservoir_n:
+            # large enough for the feasibility bound below by construction,
+            # including the compaction degradation case
+            reservoir_n = max(4 * self.chunk_out, 2 * self.raw_len,
+                              self.floor - 1 + max(self.chunk_out,
+                                                   self.raw_len))
+        reservoir_n = round_up(reservoir_n, mult)
+        self.reservoir_n = reservoir_n
+        self.cascade_out = round_up(max(reservoir_n // self.t, 1), mult)
+        # feasibility up front, before any of the stream is consumed: an
+        # overflow frees down to cascade_out (reduction) or, degraded, to at
+        # most floor - 1 valid rows (compaction — too few valid prototypes
+        # to reduce); the next slab may be a full chunk reduce (chunk_out
+        # rows) or a raw tail (raw_len)
+        post_overflow = max(self.cascade_out, self.floor - 1)
+        if reservoir_n - post_overflow < max(self.chunk_out, self.raw_len):
             raise ValueError(
-                f"{driver}: cannot infer chunk_n from an empty first "
-                f"chunk; pass chunk_n= or configure runtime chunk_n")
-    d = first[0].shape[1] if first[0].ndim == 2 else None
-    if d is None:
-        raise ValueError(f"{driver}: chunks must be 2-D (rows, d)")
-    validate_reduction_params(t, m, n=chunk_n, min_m=1, driver=driver)
+                f"{driver}: reservoir_n={reservoir_n} cannot absorb a "
+                f"{max(self.chunk_out, self.raw_len)}-row slab right after "
+                f"an overflow (which frees down to at most {post_overflow} "
+                f"occupied slots); need reservoir_n - "
+                f"max(reservoir_n//t, {self.floor - 1}) "
+                f">= max(chunk_n//t, {self.raw_len})")
 
-    placement = placement_cls(plan, d)
-    mult = placement.mult
-    chunk_buf_n = round_up(chunk_n, mult)
-    chunk_out = round_up(max(chunk_buf_n // t, 1), mult)
-    # raw-fold slab for chunks too small to reduce (the in-memory early-stop
-    # rule, applied per chunk): their valid prefix is copied verbatim.
-    # Raw slabs enter the fold replicated, so they need no shard padding.
-    raw_len = min(chunk_n, floor)
-    reservoir_n = plan.reservoir_n
-    if not reservoir_n:
-        # large enough for the feasibility bound below by construction,
-        # including the compaction degradation case
-        reservoir_n = max(4 * chunk_out, 2 * raw_len,
-                          floor - 1 + max(chunk_out, raw_len))
-    reservoir_n = round_up(reservoir_n, mult)
-    cascade_out = round_up(max(reservoir_n // t, 1), mult)
-    # feasibility up front, before any of the stream is consumed: an
-    # overflow frees down to cascade_out (reduction) or, degraded, to at
-    # most floor - 1 valid rows (compaction — too few valid prototypes to
-    # reduce); the next slab may be a full chunk reduce (chunk_out rows) or
-    # a raw tail (raw_len)
-    post_overflow = max(cascade_out, floor - 1)
-    if reservoir_n - post_overflow < max(chunk_out, raw_len):
-        raise ValueError(
-            f"{driver}: reservoir_n={reservoir_n} cannot absorb a "
-            f"{max(chunk_out, raw_len)}-row slab right after an overflow "
-            f"(which frees down to at most {post_overflow} occupied "
-            f"slots); need reservoir_n - max(reservoir_n//t, {floor - 1}) "
-            f">= max(chunk_n//t, {raw_len})")
+        # staging pool: `depth` chunks queued ahead + one being staged by
+        # the producer + one still owned by the consumer; the serial loop
+        # double-buffers so a recycled buffer never waits on its own
+        # transfer
+        self.pool = _StagingPool(self.depth + 2 if self.depth else 2,
+                                 self.chunk_buf_n, d)
 
-    # staging pool: `depth` chunks queued ahead + one being staged by the
-    # producer + one still owned by the consumer; the serial loop double-
-    # buffers so a recycled buffer never waits on its own transfer
-    pool = _StagingPool(depth + 2 if depth else 2, chunk_buf_n, d)
+        self.res = self.placement.reservoir(reservoir_n)
+        self.frontier = 0     # host-tracked write position (no device sync)
+        self.n_cascades = 0
 
-    res = placement.reservoir(reservoir_n)
-    frontier = 0          # host-tracked write position (no device sync)
-    n_cascades = 0
+        self.chunk_assign: List[np.ndarray] = []
+        self.chunk_offset: List[int] = []
+        self.chunk_epoch: List[int] = []
+        self.chunk_counts: List[int] = []
+        self.maps: List[np.ndarray] = []
+        self.spill_pending: List[int] = []  # chunk_assign slots on device
+        self.ingest_wait_s = 0.0  # consumer time blocked on ingest
+        self.loop_t0 = time.perf_counter()
 
-    chunk_assign: List[np.ndarray] = []
-    chunk_offset: List[int] = []
-    chunk_epoch: List[int] = []
-    chunk_counts: List[int] = []
-    maps: List[np.ndarray] = []
-    spill_pending: List[int] = []  # chunk_assign slots still on device
-    ingest_wait_s = 0.0  # consumer time blocked on ingest (stage/queue)
-    loop_t0 = time.perf_counter()
+    @classmethod
+    def open_stream(cls, plan: FitPlan, chunks, placement_cls):
+        """Peek the first chunk (it fixes the geometry), build the machine.
 
-    def drain_spills() -> None:
+        Returns ``(machine, first, rest)``: feed them to :meth:`ingest` to
+        run the stream loop exactly as the batch executors do.
+        """
+        it = iter(chunks)
+        first = None
+        for item in it:
+            first = _normalize_chunk(item, plan.driver)
+            break
+        if first is None:
+            raise ValueError(f"{plan.driver}: the chunk stream is empty")
+        return cls(plan, placement_cls, first[0]), first, it
+
+    @property
+    def n_chunks(self) -> int:
+        """Chunks consumed so far == the next chunk's key-schedule index."""
+        return len(self.chunk_counts)
+
+    @property
+    def n_points(self) -> int:
+        """Valid rows folded so far (host bookkeeping, no device sync)."""
+        return int(sum(self.chunk_counts))
+
+    # ---- the stream loop --------------------------------------------------
+
+    def drain_spills(self) -> None:
         # deferred spill drain (§18): the per-chunk assignment maps were
         # enqueued as device buffers; copy them to host in one batch off
         # the per-chunk critical path, restoring the §12 forced-copy
         # contract before anything reads them
-        for i in spill_pending:
+        for i in self.spill_pending:
             # repro: allow[HS201]: §12 spill — forced host copy (np.array, never a view) of the chunk assignment, batch-drained off the critical path (§18)
-            chunk_assign[i] = np.array(chunk_assign[i])
-        spill_pending.clear()
+            self.chunk_assign[i] = np.array(self.chunk_assign[i])
+        self.spill_pending.clear()
 
-    def cascade():
-        nonlocal res, frontier, n_cascades
-        drain_spills()  # the cascade syncs anyway; clear the backlog first
+    def cascade(self) -> None:
+        self.drain_spills()  # the cascade syncs anyway; clear the backlog
         # repro: allow[HS202]: deliberate per-cascade sync — compaction-vs-reduction is a host decision, once per reservoir fill, not per chunk
-        occ_valid = int(jnp.sum(res[2]))
-        if occ_valid < floor:
+        occ_valid = int(jnp.sum(self.res[2]))
+        if occ_valid < self.floor:
             # the frontier is exhausted but the slots are mostly masked
             # holes (slabs whose chunks produced very few clusters): too
             # few valid prototypes for a reduction level, so squeeze the
             # holes out instead — an identity level that frees the space
             # without collapsing anything
-            res, assignment = placement.compact(res)
+            self.res, assignment = self.placement.compact(self.res)
             # repro: allow[HS201]: §12 spill — forced host copy (np.array, never a view) of the per-level map
-            maps.append(np.array(assignment))  # true host copy
-            frontier = occ_valid
+            self.maps.append(np.array(assignment))  # true host copy
+            self.frontier = occ_valid
             return
-        ck = jax.random.fold_in(key_cascade, n_cascades)
-        out = placement.level_step(*res, key=ck, n_out=cascade_out)
+        ck = jax.random.fold_in(self.key_cascade, self.n_cascades)
+        out = self.placement.level_step(*self.res, key=ck,
+                                        n_out=self.cascade_out)
         # repro: allow[HS201]: §12 spill — forced host copy (np.array, never a view) of the per-level map
-        maps.append(np.array(out.assignment))  # true host copy, not a view
-        res = placement.absorb(out, reservoir_n, res)
-        frontier = cascade_out
-        n_cascades += 1
+        self.maps.append(np.array(out.assignment))  # true host copy
+        self.res = self.placement.absorb(out, self.reservoir_n, self.res)
+        self.frontier = self.cascade_out
+        self.n_cascades += 1
 
-    def fold(px, pm, pv, slab: int) -> int:
-        nonlocal res, frontier
-        if frontier + slab > reservoir_n:
-            cascade()
-        if frontier + slab > reservoir_n:
+    def fold(self, px, pm, pv, slab: int) -> int:
+        if self.frontier + slab > self.reservoir_n:
+            self.cascade()
+        if self.frontier + slab > self.reservoir_n:
             raise ValueError(
-                f"{driver}: a {slab}-row slab does not fit the "
-                f"reservoir even after a cascade (frontier={frontier}, "
-                f"reservoir_n={reservoir_n}); increase reservoir_n")
-        offset = frontier
-        res = placement.fold(res, px, pm, pv, offset)
-        frontier += slab
+                f"{self.driver}: a {slab}-row slab does not fit the "
+                f"reservoir even after a cascade (frontier={self.frontier}, "
+                f"reservoir_n={self.reservoir_n}); increase reservoir_n")
+        offset = self.frontier
+        self.res = self.placement.fold(self.res, px, pm, pv, offset)
+        self.frontier += slab
         return offset
 
-    def process(chunk_idx: int, buf_i: Optional[int], n_valid: int) -> None:
+    def process(self, chunk_idx: int, buf_i: Optional[int],
+                n_valid: int) -> None:
         """Device half of one chunk: place the staged buffer, reduce, fold,
         record the spill — identical for the serial and pipelined loops."""
         if n_valid == 0:  # nothing to cluster; keep chunk indexing aligned
-            chunk_assign.append(np.full((chunk_buf_n,), -1, np.int32))
-            chunk_offset.append(0)
-            chunk_epoch.append(len(maps))
-            chunk_counts.append(0)
+            self.chunk_assign.append(
+                np.full((self.chunk_buf_n,), -1, np.int32))
+            self.chunk_offset.append(0)
+            self.chunk_epoch.append(len(self.maps))
+            self.chunk_counts.append(0)
             return
-        buf = pool.buffer(buf_i)
-        if n_valid < floor:
-            # too small to reduce (the itis early-stop rule): fold the valid
-            # prefix raw, with an identity assignment map
-            pv = np.arange(raw_len) < n_valid
-            px, pm, pv = placement.place_slab(
-                buf[:raw_len], pv.astype(np.float32), pv)
-            off = fold(px, pm, pv, raw_len)
+        buf = self.pool.buffer(buf_i)
+        if n_valid < self.floor:
+            # too small to reduce (the itis early-stop rule): fold the
+            # valid prefix raw, with an identity assignment map
+            pv = np.arange(self.raw_len) < n_valid
+            px, pm, pv = self.placement.place_slab(
+                buf[:self.raw_len], pv.astype(np.float32), pv)
+            off = self.fold(px, pm, pv, self.raw_len)
             # release AFTER the fold that consumed the slab: the recycle
             # dep must be the consumer's output (res), not the placed
             # array — placement may hold a zero-copy view of the host
             # buffer, so "transfer done" is not "done reading"
-            pool.release(buf_i, res[0])
+            self.pool.release(buf_i, self.res[0])
             # epoch AFTER the fold: a cascade the fold itself triggered
             # must not apply to the slots it just wrote
-            epoch = len(maps)
-            ident = np.arange(chunk_buf_n, dtype=np.int32)
-            chunk_assign.append(
+            epoch = len(self.maps)
+            ident = np.arange(self.chunk_buf_n, dtype=np.int32)
+            self.chunk_assign.append(
                 np.where(ident < n_valid, ident, -1).astype(np.int32))
-            chunk_offset.append(off)
-            chunk_epoch.append(epoch)
-            chunk_counts.append(n_valid)
+            self.chunk_offset.append(off)
+            self.chunk_epoch.append(epoch)
+            self.chunk_counts.append(n_valid)
             return
-        xj, mj, vj = placement.place_chunk(buf, n_valid)
-        sub = key_level0 if chunk_idx == 0 else jax.random.fold_in(
-            key_level0, chunk_idx)
-        out = placement.level_step(xj, mj, vj, key=sub, n_out=chunk_out)
+        xj, mj, vj = self.placement.place_chunk(buf, n_valid)
+        sub = self.key_level0 if chunk_idx == 0 else jax.random.fold_in(
+            self.key_level0, chunk_idx)
+        out = self.placement.level_step(xj, mj, vj, key=sub,
+                                        n_out=self.chunk_out)
         # release AFTER the level step that consumed xj: the recycle dep
         # must be the consumer's output — ``place_chunk`` may hold a
         # zero-copy view of the host buffer, so blocking on the placed
         # array alone proves the transfer landed, not that the reduction
         # finished reading it
-        pool.release(buf_i, out.protos)
-        off = fold(out.protos, out.mass, out.valid, chunk_out)
-        epoch = len(maps)  # after the fold — see the raw path above
-        if depth:
+        self.pool.release(buf_i, out.protos)
+        off = self.fold(out.protos, out.mass, out.valid, self.chunk_out)
+        epoch = len(self.maps)  # after the fold — see the raw path above
+        if self.depth:
             # deferred spill (§18): keep the map on device, drain in
             # batches — the cascade and the stream end drain the rest
-            chunk_assign.append(out.assignment)
-            spill_pending.append(len(chunk_assign) - 1)
-            if len(spill_pending) >= _SPILL_DRAIN_BATCH:
-                drain_spills()
+            self.chunk_assign.append(out.assignment)
+            self.spill_pending.append(len(self.chunk_assign) - 1)
+            if len(self.spill_pending) >= _SPILL_DRAIN_BATCH:
+                self.drain_spills()
         else:
             # repro: allow[HS201]: §12 spill — forced host copy (np.array, never a view) of the chunk assignment
-            chunk_assign.append(np.array(out.assignment))  # true host copy
-        chunk_offset.append(off)
-        chunk_epoch.append(epoch)
-        chunk_counts.append(n_valid)
+            self.chunk_assign.append(np.array(out.assignment))  # host copy
+        self.chunk_offset.append(off)
+        self.chunk_epoch.append(epoch)
+        self.chunk_counts.append(n_valid)
 
-    def consume(arr: np.ndarray, n_valid: int, chunk_idx: int) -> None:
+    def consume(self, arr: np.ndarray, n_valid: int, chunk_idx: int) -> None:
         """Serial (depth 0) path: validate, stage inline, process."""
-        nonlocal ingest_wait_s
-        _validate_chunk(arr, chunk_idx, chunk_n, d, driver)
+        _validate_chunk(arr, chunk_idx, self.chunk_n, self.d, self.driver)
         buf_i = None
         if n_valid > 0:
             t0 = time.perf_counter()
-            buf_i = pool.stage(arr)
-            ingest_wait_s += time.perf_counter() - t0
-        process(chunk_idx, buf_i, n_valid)
+            buf_i = self.pool.stage(arr)
+            self.ingest_wait_s += time.perf_counter() - t0
+        self.process(chunk_idx, buf_i, n_valid)
 
-    consume(*first, 0)  # chunk 0 always inline: it fixed the geometry
-    if depth == 0:
-        for chunk_idx, item in enumerate(it, start=1):
-            t0 = time.perf_counter()
-            arr, n_valid = _normalize_chunk(item, driver)
-            ingest_wait_s += time.perf_counter() - t0
-            consume(arr, n_valid, chunk_idx)
-    else:
-        pf = _Prefetcher(it, pool, driver=driver, chunk_n=chunk_n, d=d,
-                         depth=depth, start_idx=1)
+    def feed(self, item) -> int:
+        """Push-style ingest (the online fitter): normalize one chunk and
+        consume it at the next key-schedule index. Returns the number of
+        valid rows folded."""
+        arr, n_valid = _normalize_chunk(item, self.driver)
+        self.consume(arr, n_valid, self.n_chunks)
+        return n_valid
+
+    def ingest(self, it, *, first=None) -> None:
+        """Drain an iterator through the loop: serial at depth 0, through
+        the bounded background prefetcher otherwise (DESIGN.md §18). The
+        already-normalized ``first`` chunk (from :meth:`open_stream`) is
+        always consumed inline — it fixed the geometry."""
+        if first is not None:
+            self.consume(*first, self.n_chunks)
+        start = self.n_chunks
+        if self.depth == 0:
+            for chunk_idx, item in enumerate(it, start=start):
+                t0 = time.perf_counter()
+                arr, n_valid = _normalize_chunk(item, self.driver)
+                self.ingest_wait_s += time.perf_counter() - t0
+                self.consume(arr, n_valid, chunk_idx)
+            return
+        pf = _Prefetcher(it, self.pool, driver=self.driver,
+                         chunk_n=self.chunk_n, d=self.d, depth=self.depth,
+                         start_idx=start)
         try:
-            expected = 1
+            expected = start
             while True:
                 t0 = time.perf_counter()
                 tag, a, b, c = pf.get()
-                ingest_wait_s += time.perf_counter() - t0
+                self.ingest_wait_s += time.perf_counter() - t0
                 if tag == "end":
                     break
                 if tag == "err":
@@ -784,52 +884,84 @@ def _run_stream(plan: FitPlan, chunks, placement_cls) -> Reduction:
                     # the chunk key schedule is index-bound; folding out of
                     # order would silently change the estimator
                     raise RuntimeError(
-                        f"{driver}: prefetch delivered chunk {a}, expected "
-                        f"{expected} — stream order violated")
+                        f"{self.driver}: prefetch delivered chunk {a}, "
+                        f"expected {expected} — stream order violated")
                 expected += 1
-                process(a, b, c)
+                self.process(a, b, c)
         finally:
             pf.close()
-    if frontier == 0:
-        raise ValueError(
-            f"{driver}: the stream contained no valid rows (every "
-            f"chunk was empty or fully masked) — nothing to cluster")
-    drain_spills()  # stream-end drain: every spilled map back on host
-    ingest_stats = {
-        "prefetch_depth": depth,
-        "donate": bool(plan.donate_stream),
-        "n_chunks": len(chunk_counts),
-        "wall_s": time.perf_counter() - loop_t0,
-        "ingest_wait_s": ingest_wait_s,
-    }
 
-    # ---- finalize: levels 1..m-1 on the occupied reservoir prefix --------
-    size0 = round_up(frontier, mult)
-    sizes = level_sizes(size0, t, m - 1, multiple=mult) if m > 1 else [size0]
-    buf_x, buf_m, buf_v = placement.prefix(res, frontier, size0)
-    for level in range(m - 1):
-        # repro: allow[HS202]: deliberate per-level sync — the §6 early-exit floor is a host decision, m-1 times per fit, stream loop is already drained
-        n_valid = int(jnp.sum(buf_v))
-        if n_valid < floor:
-            break
-        key_chain, sub = jax.random.split(key_chain)
-        out = placement.level_step(buf_x, buf_m, buf_v, key=sub,
-                                   n_out=sizes[level + 1])
-        # repro: allow[HS201]: §12 spill — forced host copy (np.array, never a view) of the per-level map
-        maps.append(np.array(out.assignment))  # true host copy, not a view
-        buf_x, buf_m, buf_v = out.protos, out.mass, out.valid
+    # ---- the epilogue -----------------------------------------------------
 
-    spill = LabelSpill(
-        chunk_n=chunk_n, chunk_assign=chunk_assign,
-        chunk_offset=chunk_offset, chunk_epoch=chunk_epoch,
-        chunk_counts=chunk_counts, maps=maps, n_cascades=n_cascades,
-        ingest_stats=ingest_stats,
-    )
-    return Reduction(
-        protos=buf_x, mass=buf_m, valid=buf_v,
-        n_prototypes=jnp.sum(buf_v).astype(jnp.int32), assignments=[],
-        n0=spill.n_total, spill=spill,
-    )
+    def finalize(self, *, snapshot: bool = False) -> Reduction:
+        """Levels 1..m-1 on the occupied reservoir prefix + the back-out
+        spill. ``snapshot=True`` leaves the machine ready for more chunks
+        (see the class docstring for the purity contract)."""
+        if self.frontier == 0:
+            raise ValueError(
+                f"{self.driver}: the stream contained no valid rows (every "
+                f"chunk was empty or fully masked) — nothing to cluster")
+        self.drain_spills()  # every spilled map back on host
+        # snapshot composes over copies: the live lists keep growing as
+        # ingestion continues, but the returned Reduction must be frozen
+        chunk_assign = (list(self.chunk_assign) if snapshot
+                        else self.chunk_assign)
+        chunk_offset = (list(self.chunk_offset) if snapshot
+                        else self.chunk_offset)
+        chunk_epoch = list(self.chunk_epoch) if snapshot else self.chunk_epoch
+        chunk_counts = (list(self.chunk_counts) if snapshot
+                        else self.chunk_counts)
+        maps = list(self.maps) if snapshot else self.maps
+        ingest_stats = {
+            "prefetch_depth": self.depth,
+            "donate": bool(self.plan.donate_stream),
+            "n_chunks": len(chunk_counts),
+            "wall_s": time.perf_counter() - self.loop_t0,
+            "ingest_wait_s": self.ingest_wait_s,
+        }
+
+        size0 = round_up(self.frontier, self.mult)
+        sizes = (level_sizes(size0, self.t, self.m - 1, multiple=self.mult)
+                 if self.m > 1 else [size0])
+        buf_x, buf_m, buf_v = self.placement.prefix(self.res, self.frontier,
+                                                    size0)
+        if snapshot:
+            # a full-reservoir prefix is the live buffers themselves (jax
+            # returns the same array for a whole-array slice); the next
+            # donated fold would invalidate them under the snapshot
+            buf_x, buf_m, buf_v = self.placement.clone((buf_x, buf_m, buf_v))
+        key_chain = self.key_chain  # never consumed in place: snapshot purity
+        for level in range(self.m - 1):
+            # repro: allow[HS202]: deliberate per-level sync — the §6 early-exit floor is a host decision, m-1 times per fit, stream loop is already drained
+            n_valid = int(jnp.sum(buf_v))
+            if n_valid < self.floor:
+                break
+            key_chain, sub = jax.random.split(key_chain)
+            out = self.placement.level_step(buf_x, buf_m, buf_v, key=sub,
+                                            n_out=sizes[level + 1])
+            # repro: allow[HS201]: §12 spill — forced host copy (np.array, never a view) of the per-level map
+            maps.append(np.array(out.assignment))  # true host copy
+            buf_x, buf_m, buf_v = out.protos, out.mass, out.valid
+
+        spill = LabelSpill(
+            chunk_n=self.chunk_n, chunk_assign=chunk_assign,
+            chunk_offset=chunk_offset, chunk_epoch=chunk_epoch,
+            chunk_counts=chunk_counts, maps=maps,
+            n_cascades=self.n_cascades, ingest_stats=ingest_stats,
+        )
+        return Reduction(
+            protos=buf_x, mass=buf_m, valid=buf_v,
+            n_prototypes=jnp.sum(buf_v).astype(jnp.int32), assignments=[],
+            n0=spill.n_total, spill=spill,
+        )
+
+
+def _run_stream(plan: FitPlan, chunks, placement_cls) -> Reduction:
+    """One-shot stream fit: open, drain, finalize (the batch executors)."""
+    machine, first, rest = _StreamMachine.open_stream(plan, chunks,
+                                                      placement_cls)
+    machine.ingest(rest, first=first)
+    return machine.finalize()
 
 
 @register_executor("streaming")

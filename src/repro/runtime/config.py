@@ -113,6 +113,17 @@ class RuntimeConfig:
         harness interprets it as virtual ms).
       serve_default_tenant: tenant a request routes to when the caller
         names none; also the tenant a bare single-index service hosts.
+      refresh_max_points: online-lifecycle refresh trigger (DESIGN.md §19,
+        :class:`repro.serve.lifecycle.RefreshPolicy`): refresh once the
+        online fitter has folded this many new points since the last
+        installed version; 0 disables the trigger.
+      refresh_max_cascades: refresh once the fitter's reservoir has
+        cascaded this many times since the last installed version; 0
+        disables the trigger.
+      refresh_drift_ratio: refresh once the drift proxy (EMA of mean
+        nearest-prototype distance of observed traffic against the
+        *served* index, normalized by the post-install baseline) exceeds
+        this ratio; 0.0 disables the trigger.
     """
 
     impl: str = "auto"
@@ -134,6 +145,9 @@ class RuntimeConfig:
     serve_max_inflight: int = 4
     serve_max_wait_ms: float = 5.0
     serve_default_tenant: str = "default"
+    refresh_max_points: int = 0
+    refresh_max_cascades: int = 0
+    refresh_drift_ratio: float = 0.0
 
     def __post_init__(self) -> None:
         if self.impl not in _IMPLS:
@@ -162,6 +176,12 @@ class RuntimeConfig:
                              f"got {self.serve_max_wait_ms}")
         if not self.serve_default_tenant:
             raise ValueError("serve_default_tenant must be non-empty")
+        for name in ("refresh_max_points", "refresh_max_cascades",
+                     "refresh_drift_ratio"):
+            if getattr(self, name) < 0:
+                raise ValueError(
+                    f"{name} must be >= 0 (0 disables the trigger), "
+                    f"got {getattr(self, name)}")
 
     def replace(self, **overrides: Any) -> "RuntimeConfig":
         return dataclasses.replace(self, **overrides)
@@ -206,6 +226,10 @@ class RuntimeConfig:
         They change only at deployment reconfiguration, so the retrace
         cost is nil. ``serve_default_tenant`` is excluded (pure host-side
         routing name, resolved per call like ``mesh``/``axis_name``).
+        The ``refresh_*`` knobs (DESIGN.md §19) participate identically:
+        the refresh driver freezes its policy from them, a lifecycle
+        reconfiguration must never alias the previous one, and they too
+        change only at deployment reconfiguration.
         """
         if self.tune == "off":
             tune_state: object = "off"
@@ -217,7 +241,9 @@ class RuntimeConfig:
                 self.block_k, self.n_blocks, self.chunk_n, self.reservoir_n,
                 self.prefetch_depth, self.donate_stream,
                 self.executor, tune_state, self.serve_queue_depth,
-                self.serve_max_inflight, self.serve_max_wait_ms)
+                self.serve_max_inflight, self.serve_max_wait_ms,
+                self.refresh_max_points, self.refresh_max_cascades,
+                self.refresh_drift_ratio)
 
 
 def _parse_bool(s: str) -> bool:
@@ -244,6 +270,9 @@ _ENV_FIELDS = {
     "REPRO_SERVE_MAX_INFLIGHT": ("serve_max_inflight", int),
     "REPRO_SERVE_MAX_WAIT_MS": ("serve_max_wait_ms", float),
     "REPRO_SERVE_DEFAULT_TENANT": ("serve_default_tenant", str),
+    "REPRO_REFRESH_MAX_POINTS": ("refresh_max_points", int),
+    "REPRO_REFRESH_MAX_CASCADES": ("refresh_max_cascades", int),
+    "REPRO_REFRESH_DRIFT_RATIO": ("refresh_drift_ratio", float),
 }
 
 

@@ -1,15 +1,51 @@
-"""Serving: batched LM engine, IHTC KV-cache prototype compression, the
-micro-batched online cluster-assignment service, and the async
-continuous-batching front-end (DESIGN.md §11/§15)."""
-from repro.serve.async_service import (  # noqa: F401
-    AsyncClusterService,
-    AsyncioServeLoop,
-    BatchRecord,
-    InlineExecutor,
-    QueueFullError,
-    ServeError,
-    ServiceClosedError,
-    UnknownTenantError,
-)
-from repro.serve.cluster_service import ClusterService  # noqa: F401
-from repro.serve.engine import ServeConfig, ServeEngine  # noqa: F401
+"""Serving: the consolidated online surface (DESIGN.md §11/§15/§19).
+
+One import site for everything between a fit and live traffic::
+
+    from repro.serve import (
+        ClusterService,        # micro-batched sync front-end
+        AsyncClusterService,   # continuous-batching async front-end
+        OnlineFitter,          # long-lived incremental refit
+        RefreshDriver,         # drift-triggered zero-downtime refresh
+        IndexStore,            # versioned, checksummed index artifacts
+    )
+
+Names resolve lazily (PEP 562, same pattern as the top-level package):
+``import repro.serve`` stays cheap, and the artifact/lifecycle modules
+only load when used.
+"""
+
+# public name -> defining module, resolved on first attribute access
+_LAZY = {
+    "AsyncClusterService": "repro.serve.async_service",
+    "AsyncioServeLoop": "repro.serve.async_service",
+    "BatchRecord": "repro.serve.async_service",
+    "InlineExecutor": "repro.serve.async_service",
+    "QueueFullError": "repro.serve.async_service",
+    "ServeError": "repro.serve.async_service",
+    "ServiceClosedError": "repro.serve.async_service",
+    "UnknownTenantError": "repro.serve.async_service",
+    "ClusterService": "repro.serve.cluster_service",
+    "DEFAULT_BUCKETS": "repro.serve.cluster_service",
+    "OnlineFitter": "repro.serve.lifecycle",
+    "RefreshPolicy": "repro.serve.lifecycle",
+    "RefreshDriver": "repro.serve.lifecycle",
+    "IndexStore": "repro.serve.artifacts",
+    "ArtifactError": "repro.serve.artifacts",
+    "ServeConfig": "repro.serve.engine",
+    "ServeEngine": "repro.serve.engine",
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module 'repro.serve' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

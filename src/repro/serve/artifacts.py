@@ -1,0 +1,278 @@
+"""Versioned on-disk artifacts for servable indexes (DESIGN.md §19).
+
+The online lifecycle turns one fit into a *sequence* of index versions —
+refreshed, rolled back, shipped between the fitting host and serving
+hosts. This module is the artifact layer underneath that loop: an
+:class:`IndexStore` serializes a :class:`repro.core.index.ClusterIndex`
+(or any :class:`repro.core.plan.FitResult`, frozen on the way in) to a
+directory of monotonically numbered versions, each a self-describing
+manifest plus one ``.npy`` file per array with a sha256 checksum.
+
+Integrity contract — a *torn* artifact (crashed writer, truncated copy,
+bit-rotted file, manifest from a different index) must never reach a
+serving hot-swap:
+
+* **atomic publication** — a version is written into a hidden temp
+  directory and ``os.rename``d into place (same-filesystem directory
+  rename: readers see either nothing or the complete version, never a
+  half-written one);
+* **checksums + shape/dtype echo** — every array file's sha256, shape
+  and logical dtype are recorded in the manifest and re-verified on
+  load; any mismatch raises :class:`ArtifactError`;
+* **structural validation** — ``check_servable()`` runs both before save
+  and after load, so the same invariants the serve front-ends enforce at
+  install time (DESIGN.md §15) hold at the storage boundary too.
+
+bf16 buffers are stored as their uint16 bit pattern (numpy cannot
+round-trip ``ml_dtypes.bfloat16`` portably) and re-viewed on load —
+the round trip is bit-exact for every buffer, which is what makes
+save → load → ``assign`` bitwise-identical to the in-memory index
+(asserted in tier-1).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import re
+import shutil
+from typing import Any, Dict, List, Optional, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.index import ClusterIndex
+from repro.core.plan import FitResult
+
+_FORMAT = 1
+_MANIFEST = "manifest.json"
+_VERSION_RE = re.compile(r"^v(\d{4,})$")
+
+# (field, required): the ClusterIndex arrays in manifest order; optional
+# packed buffers are omitted from the manifest when the index has none
+_FIELDS = (
+    ("protos", True),
+    ("proto_mass", True),
+    ("proto_valid", True),
+    ("proto_labels", True),
+    ("n_prototypes", True),
+    ("protos_bf16", False),
+    ("protos_q8", False),
+    ("q8_scale", False),
+    ("q8_zero", False),
+)
+
+
+class ArtifactError(RuntimeError):
+    """A stored index version is missing, torn, or fails validation."""
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
+
+
+def _to_storable(arr) -> tuple:
+    """Device array → (host array to write, logical dtype, stored dtype)."""
+    # repro: allow[HS201]: artifact save — serialization is the one place the index must materialize on host; runs off the serving path
+    host = np.asarray(arr)
+    logical = str(host.dtype)
+    if host.dtype == jnp.bfloat16:  # numpy can't save ml_dtypes portably
+        return host.view(np.uint16), "bfloat16", "uint16"
+    return host, logical, logical
+
+
+def _from_stored(raw: np.ndarray, logical: str):
+    if logical == "bfloat16":
+        return jnp.asarray(raw.view(jnp.bfloat16))
+    return jnp.asarray(raw)
+
+
+class IndexStore:
+    """Directory of versioned, checksummed index artifacts.
+
+    ``IndexStore(root)`` manages ``root/v0001``, ``root/v0002``, ... —
+    one directory per version, atomically published. ``save`` assigns
+    the next version number; ``load`` defaults to the latest. The store
+    is append-only by design (refreshes only ever add versions); pruning
+    old versions is the deployment's retention policy, not the store's.
+    """
+
+    def __init__(self, root: Union[str, os.PathLike]):
+        self.root = os.fspath(root)
+        os.makedirs(self.root, exist_ok=True)
+
+    # ---- enumeration ------------------------------------------------------
+
+    def list_versions(self) -> List[int]:
+        """Published version numbers, ascending (temp dirs excluded)."""
+        out = []
+        for name in sorted(os.listdir(self.root)):
+            mt = _VERSION_RE.match(name)
+            if mt and os.path.isdir(os.path.join(self.root, name)):
+                out.append(int(mt.group(1)))
+        return sorted(out)
+
+    def latest(self) -> Optional[int]:
+        """The newest published version, or None for an empty store."""
+        versions = self.list_versions()
+        return versions[-1] if versions else None
+
+    def path(self, version: int) -> str:
+        return os.path.join(self.root, f"v{version:04d}")
+
+    # ---- save -------------------------------------------------------------
+
+    def save(
+        self,
+        source: Union[ClusterIndex, FitResult],
+        *,
+        metadata: Optional[Dict[str, Any]] = None,
+    ) -> int:
+        """Publish ``source`` as the next version; returns its number.
+
+        ``source`` is a servable :class:`ClusterIndex` or any
+        :class:`FitResult` (frozen via ``ClusterIndex.build`` on the way
+        in, packed buffers included). The artifact is validated
+        (``check_servable``) before a byte is written, written into a
+        hidden temp directory, then renamed into place — a concurrent
+        reader can never observe a partial version, and a crashed save
+        leaves only a temp directory the next save sweeps away.
+        """
+        if isinstance(source, FitResult):
+            index = ClusterIndex.build(source)
+        elif isinstance(source, ClusterIndex):
+            index = source
+        else:
+            raise TypeError(
+                f"IndexStore.save takes a ClusterIndex or FitResult, got "
+                f"{type(source).__name__}")
+        index.check_servable()
+
+        version = (self.latest() or 0) + 1
+        final = self.path(version)
+        tmp = os.path.join(self.root, f"_tmp.v{version:04d}")
+        if os.path.isdir(tmp):  # a crashed previous save; sweep it
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        try:
+            arrays: Dict[str, Dict[str, Any]] = {}
+            for name, required in _FIELDS:
+                arr = getattr(index, name)
+                if arr is None:
+                    if required:
+                        raise ArtifactError(
+                            f"index is missing required array {name!r}")
+                    continue
+                host, logical, stored = _to_storable(arr)
+                fname = f"{name}.npy"
+                np.save(os.path.join(tmp, fname), host, allow_pickle=False)
+                arrays[name] = {
+                    "file": fname,
+                    "dtype": logical,
+                    "stored_dtype": stored,
+                    "shape": [int(s) for s in host.shape],
+                    "sha256": _sha256(os.path.join(tmp, fname)),
+                }
+            manifest = {
+                "format": _FORMAT,
+                "version": version,
+                "kind": "cluster_index",
+                "dim": int(index.dim),
+                "arrays": arrays,
+                "metadata": dict(metadata or {}),
+            }
+            with open(os.path.join(tmp, _MANIFEST), "w") as f:
+                json.dump(manifest, f, indent=2, sort_keys=True)
+            if os.path.exists(final):
+                raise ArtifactError(
+                    f"version {version} already exists at {final} "
+                    f"(concurrent saver?)")
+            os.rename(tmp, final)  # atomic publication
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        return version
+
+    # ---- load -------------------------------------------------------------
+
+    def load(self, version: Optional[int] = None, *,
+             expect_dim: Optional[int] = None) -> ClusterIndex:
+        """Reconstruct a stored version (latest when ``version`` is None),
+        rejecting torn artifacts.
+
+        Every failure mode — missing/unreadable/truncated manifest, a
+        listed array file missing, checksum or shape/dtype mismatch, or
+        an index that fails ``check_servable(expect_dim)`` — raises
+        :class:`ArtifactError`, so an installer can treat "loadable" as
+        "servable" and hot-swap the result directly.
+        """
+        if version is None:
+            version = self.latest()
+            if version is None:
+                raise ArtifactError(f"index store {self.root!r} is empty")
+        vdir = self.path(version)
+        mpath = os.path.join(vdir, _MANIFEST)
+        if not os.path.isfile(mpath):
+            raise ArtifactError(
+                f"version {version} has no manifest at {mpath}")
+        try:
+            with open(mpath) as f:
+                manifest = json.load(f)
+        except (OSError, json.JSONDecodeError) as exc:
+            raise ArtifactError(
+                f"version {version}: torn manifest ({exc})") from exc
+        if manifest.get("format") != _FORMAT:
+            raise ArtifactError(
+                f"version {version}: unknown artifact format "
+                f"{manifest.get('format')!r} (this reader speaks {_FORMAT})")
+        arrays = manifest.get("arrays")
+        if not isinstance(arrays, dict):
+            raise ArtifactError(
+                f"version {version}: manifest has no arrays table")
+
+        fields: Dict[str, Any] = {}
+        for name, required in _FIELDS:
+            meta = arrays.get(name)
+            if meta is None:
+                if required:
+                    raise ArtifactError(
+                        f"version {version}: manifest is missing required "
+                        f"array {name!r}")
+                fields[name] = None
+                continue
+            apath = os.path.join(vdir, meta["file"])
+            if not os.path.isfile(apath):
+                raise ArtifactError(
+                    f"version {version}: listed array file {meta['file']!r} "
+                    f"is missing")
+            digest = _sha256(apath)
+            if digest != meta["sha256"]:
+                raise ArtifactError(
+                    f"version {version}: checksum mismatch on "
+                    f"{meta['file']!r} (stored {meta['sha256'][:12]}…, "
+                    f"recomputed {digest[:12]}…) — torn or corrupted")
+            try:
+                raw = np.load(apath, allow_pickle=False)
+            except Exception as exc:  # truncated past the checksummed copy
+                raise ArtifactError(
+                    f"version {version}: unreadable array {meta['file']!r} "
+                    f"({exc})") from exc
+            if (list(raw.shape) != list(meta["shape"])
+                    or str(raw.dtype) != meta["stored_dtype"]):
+                raise ArtifactError(
+                    f"version {version}: {meta['file']!r} is "
+                    f"{raw.dtype}{list(raw.shape)}, manifest says "
+                    f"{meta['stored_dtype']}{meta['shape']}")
+            fields[name] = _from_stored(raw, meta["dtype"])
+
+        index = ClusterIndex(**fields)
+        try:
+            index.check_servable(expect_dim)
+        except ValueError as exc:
+            raise ArtifactError(
+                f"version {version}: not servable ({exc})") from exc
+        return index

@@ -403,14 +403,39 @@ class AsyncClusterService:
             for t, s in self._tenants.items()
         }
 
+    def stats_snapshot(self, *, reset: bool = False) -> Dict[str, Any]:
+        """One consistent view of scheduler **and** per-tenant counters:
+        ``{"scheduler": {...}, "tenants": {tenant: {...}}}``.
+
+        ``reset=True`` zeroes every counter in the same step the snapshot
+        is taken, so phase-delta reporting (bench_lifecycle's per-phase
+        rows) never loses a count between a read and a reset — the
+        scheduler is single-threaded per the loop seam, so read-then-zero
+        with no interleaved callback *is* atomic here; this method exists
+        so callers don't have to know that. ``ClusterService`` exposes the
+        same method, fixing the historical asymmetry where the sync
+        service could ``reset_stats`` per phase but the async front-end's
+        tenant counters could only be read and zeroed separately."""
+        snap = {"scheduler": self.stats, "tenants": self.tenant_stats()}
+        if reset:
+            for k in self._stats:
+                self._stats[k] = 0
+            for state in self._tenants.values():
+                state.entry.service.reset_stats()
+        return snap
+
     def reset_stats(self) -> None:
         """Zero the scheduler counters and every tenant's bucket counters
         (e.g. after a warmup/probe phase, so steady-state reporting starts
         clean — the same contract as :meth:`ClusterService.warmup`)."""
-        for k in self._stats:
-            self._stats[k] = 0
-        for state in self._tenants.values():
-            state.entry.service.reset_stats()
+        self.stats_snapshot(reset=True)
+
+    def current_index(self, tenant: Optional[str] = None) -> ClusterIndex:
+        """The index new admissions to ``tenant`` would serve right now
+        (the drift proxy of :class:`repro.serve.lifecycle.RefreshDriver`
+        scores observed traffic against exactly this artifact). In-flight
+        requests may still be pinned to an older version."""
+        return self._state(tenant).entry.index
 
     # ------------------------------------------------------------------
     # scheduler core (every callback below runs as a loop callback)

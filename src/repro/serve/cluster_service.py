@@ -128,6 +128,15 @@ class ClusterService:
         for k in self._stats:
             self._stats[k] = 0
 
+    def stats_snapshot(self, *, reset: bool = False) -> Dict[str, int]:
+        """The counters as one consistent snapshot; ``reset=True`` zeroes
+        them in the same step (phase-delta reporting loses no counts) —
+        the same contract as :meth:`AsyncClusterService.stats_snapshot`."""
+        snap = dict(self._stats)
+        if reset:
+            self.reset_stats()
+        return snap
+
     @property
     def stats(self) -> Dict[str, int]:
         """Counters: requests, points, chunks, per-bucket dispatches

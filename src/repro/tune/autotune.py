@@ -213,13 +213,13 @@ def _runner(kernel: str, dims: Dict[str, int], dtype: str):
 
         nq, p, d = (pow2_bucket(dims[a]) for a in ("nq", "p", "d"))
         protos = jnp.asarray(rng.normal(size=(p, d)), jnp.float32)
-        idx = ClusterIndex(
+        idx = ClusterIndex.build(ClusterIndex(
             protos=protos,
             proto_mass=jnp.ones((p,), jnp.float32),
             proto_valid=jnp.ones((p,), bool),
             proto_labels=jnp.asarray(np.arange(p) % 16, jnp.int32),
             n_prototypes=jnp.asarray(p, jnp.int32),
-        ).with_packed_protos()
+        ))
         q = jnp.asarray(rng.normal(size=(nq, d)), jdt)
 
         def run(params):

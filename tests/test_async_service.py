@@ -60,7 +60,7 @@ _INDEX_CACHE = {}
 def _index(seed: int = 0, shift: float = 0.0) -> ClusterIndex:
     key = (seed, shift)
     if key not in _INDEX_CACHE:
-        _INDEX_CACHE[key] = ClusterIndex.fit(
+        _INDEX_CACHE[key] = ClusterIndex.build(
             jnp.asarray(_blobs(seed, shift=shift)), 2, 1, "kmeans", k=3,
             key=jax.random.PRNGKey(seed))
     return _INDEX_CACHE[key]
@@ -437,7 +437,7 @@ def test_half_installed_artifact_is_never_served():
     with pytest.raises(ValueError, match="proto_mass"):
         svc.install_index("default", torn)
     # a dim-changing swap is rejected too (live traffic would crash)
-    wide = ClusterIndex.fit(
+    wide = ClusterIndex.build(
         jnp.asarray(np.random.default_rng(0)
                     .normal(size=(60, 3)).astype(np.float32)),
         2, 1, "kmeans", k=2, key=jax.random.PRNGKey(0))

@@ -206,8 +206,8 @@ assert np.array_equal(p1.view(np.uint32),
 # is not divisible by the 8 devices (exercises the shard-pad path), and
 # assign under a configured mesh matches the single-device assign
 from repro.core import ClusterIndex
-idx1 = ClusterIndex.from_result(res1)
-idx2 = ClusterIndex.from_result(res2)
+idx1 = ClusterIndex.build(res1)
+idx2 = ClusterIndex.build(res2)
 q = x[:100]
 want = np.asarray(idx1.assign(q))
 assert np.array_equal(want, np.asarray(idx2.assign(q)))

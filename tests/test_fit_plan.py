@@ -234,20 +234,21 @@ def test_cluster_service_from_fit(rng):
     assert svc_m.stats["requests"] == 1
 
 
-def test_cluster_index_fit_takes_chunk_streams(rng):
-    """ClusterIndex.fit now routes through the planner: a chunk iterable
-    streams instead of erroring, and matches fit_streaming."""
+def test_cluster_index_build_takes_chunk_streams(rng):
+    """ClusterIndex.build routes through the planner: a chunk iterable
+    streams instead of erroring, and freezes the same artifact as the
+    explicit streaming fit."""
     x, _ = gmm_sample(256, rng)
     key = jax.random.PRNGKey(3)
-    via_fit = ClusterIndex.fit(iter([x]), 2, 2, "kmeans", k=3, key=key,
-                               chunk_n=256, reservoir_n=512)
-    via_streaming = ClusterIndex.fit_streaming(
-        iter([x]), 2, 2, "kmeans", k=3, key=key, chunk_n=256,
-        reservoir_n=512)
+    via_build = ClusterIndex.build(iter([x]), 2, 2, "kmeans", k=3, key=key,
+                                   chunk_n=256, reservoir_n=512)
+    via_streaming = ClusterIndex.build(
+        ihtc_streaming(iter([x]), 2, 2, "kmeans", k=3, key=key,
+                       chunk_n=256, reservoir_n=512))
     np.testing.assert_array_equal(
-        np.asarray(via_fit.protos).view(np.uint32),
+        np.asarray(via_build.protos).view(np.uint32),
         np.asarray(via_streaming.protos).view(np.uint32))
-    np.testing.assert_array_equal(np.asarray(via_fit.proto_labels),
+    np.testing.assert_array_equal(np.asarray(via_build.proto_labels),
                                   np.asarray(via_streaming.proto_labels))
 
 

@@ -32,7 +32,7 @@ def test_from_result_packs_low_precision_buffers(rng):
     per-request assign work only touches the queries (satellite: no more
     per-call re-cast inside jit)."""
     x = jnp.asarray(rng.normal(size=(64, 3)), jnp.float32)
-    idx = ClusterIndex.fit(x, 2, 1, "kmeans", k=3)
+    idx = ClusterIndex.build(x, 2, 1, "kmeans", k=3)
     assert idx.protos_bf16 is not None
     assert idx.protos_bf16.dtype == jnp.bfloat16
     assert idx.protos_q8 is not None and idx.protos_q8.dtype == jnp.int8
@@ -51,7 +51,7 @@ def test_hand_built_index_defaults_and_on_the_fly_quantization(rng):
     idx = _index(rng)
     assert idx.protos_bf16 is None and idx.protos_q8 is None
     q = jnp.asarray(rng.normal(size=(17, 5)) * 20.0, jnp.float32)
-    packed = idx.with_packed_protos()
+    packed = ClusterIndex.build(idx)
     for impl in ("fused_bf16", "fused_int8"):
         np.testing.assert_array_equal(
             np.asarray(idx.assign(q, impl=impl)),
@@ -66,12 +66,12 @@ def test_bfloat16_precision_uses_packed_buffer_bitwise(rng):
     q = jnp.asarray(rng.normal(size=(9, 5)), jnp.float32)
     with runtime.configure(precision="bfloat16"):
         want = idx.assign(q)                       # in-jit cast fallback
-        got = idx.with_packed_protos().assign(q)   # frozen buffer
+        got = ClusterIndex.build(idx).assign(q)    # frozen buffer
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 def test_check_servable_rejects_mismatched_packed_buffers(rng):
-    idx = _index(rng).with_packed_protos()
+    idx = ClusterIndex.build(_index(rng))
     bad = idx._replace(protos_bf16=idx.protos_bf16[:-1])
     with pytest.raises(ValueError, match="protos_bf16"):
         bad.check_servable()

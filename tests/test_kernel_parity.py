@@ -309,11 +309,11 @@ def test_quantized_assign_zero_label_disagreement(rng, impl):
     queries = jnp.asarray(
         np.asarray(centers)[rng.integers(0, c, size=64)]
         + rng.normal(size=(64, d)) * 0.05, jnp.float32)
-    idx = ClusterIndex(
+    idx = ClusterIndex.build(ClusterIndex(
         protos=protos, proto_mass=jnp.ones((c * 5,)),
         proto_valid=jnp.ones((c * 5,), bool), proto_labels=labels,
         n_prototypes=jnp.asarray(c * 5, jnp.int32),
-    ).with_packed_protos().check_servable()
+    )).check_servable()
     exact = idx.assign(queries, impl="ref")
     quant = idx.assign(queries, impl=impl)
     assert int((np.asarray(exact) != np.asarray(quant)).sum()) == 0

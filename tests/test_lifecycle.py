@@ -1,0 +1,418 @@
+"""Online index lifecycle (DESIGN.md §19): incremental refit, versioned
+artifacts, zero-downtime refresh, and the consolidated build API.
+
+Covers the ISSUE-10 acceptance surface:
+
+* ``OnlineFitter`` purity — zero observes then ``snapshot()`` is
+  bit-identical to the one-shot batch fit of the same stream, repeated
+  snapshots are bit-identical, and a snapshot survives later donated
+  folds untouched;
+* ``IndexStore`` — save→load→``assign`` bitwise parity (packed bf16/int8
+  buffers and streaming-spill indexes included), torn/truncated artifact
+  rejection;
+* the end-to-end refresh loop — an ``AsyncClusterService`` under
+  virtual-clock traffic (tests/serve_sim.py) survives a hot-swap with
+  zero failed requests, every response attributable to exactly one index
+  version, and the refreshed index measurably reducing mean assign
+  distance on drifted traffic;
+* the deprecated four-way constructor surface still works (and warns).
+"""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.core.index import ClusterIndex, nearest_valid_prototype
+from repro.serve import (
+    ArtifactError,
+    AsyncClusterService,
+    IndexStore,
+    OnlineFitter,
+    RefreshDriver,
+    RefreshPolicy,
+)
+
+from serve_sim import SimExecutor, SimLoop, run_trace
+
+
+def _blobs(seed: int, n_per: int = 60, shift: float = 0.0,
+           spread: float = 0.5) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    centers = np.array([[0.0, 0.0], [6.0, 0.0], [3.0, 6.0]]) + shift
+    x = np.concatenate([c + rng.normal(scale=spread, size=(n_per, 2))
+                        for c in centers])
+    return x.astype(np.float32)
+
+
+def _bits(a) -> np.ndarray:
+    a = np.asarray(a)
+    if a.dtype == np.float32:
+        return a.view(np.uint32)
+    if str(a.dtype) == "bfloat16":
+        return a.view(np.uint16)
+    return a
+
+
+def _assert_index_bitwise(a: ClusterIndex, b: ClusterIndex) -> None:
+    for name in ClusterIndex._fields:
+        fa, fb = getattr(a, name), getattr(b, name)
+        assert (fa is None) == (fb is None), name
+        if fa is not None:
+            np.testing.assert_array_equal(_bits(fa), _bits(fb),
+                                          err_msg=name)
+
+
+# ----------------------------------------------------------------------
+# OnlineFitter purity
+
+
+def test_zero_observe_snapshot_matches_batch_fit(rng):
+    x = rng.normal(size=(600, 6)).astype(np.float32)
+    chunks = [x[i:i + 200] for i in range(0, 600, 200)]
+    batch = repro.fit(iter(chunks), 4, 2)
+    fitter = OnlineFitter(iter(chunks), 4, 2)
+    snap = fitter.snapshot()
+    np.testing.assert_array_equal(_bits(batch.protos), _bits(snap.protos))
+    np.testing.assert_array_equal(np.asarray(batch.proto_labels),
+                                  np.asarray(snap.proto_labels))
+    np.testing.assert_array_equal(np.asarray(batch.labels),
+                                  np.asarray(snap.labels))
+
+
+def test_repeated_snapshots_bitwise_identical(rng):
+    x = rng.normal(size=(400, 4)).astype(np.float32)
+    fitter = OnlineFitter(x, 3, 2, chunk_n=100)
+    a, b = fitter.snapshot(), fitter.snapshot()
+    np.testing.assert_array_equal(_bits(a.protos), _bits(b.protos))
+    np.testing.assert_array_equal(np.asarray(a.labels),
+                                  np.asarray(b.labels))
+
+
+def test_snapshot_survives_later_donated_folds(rng):
+    """The §19 clone contract: a snapshot's buffers must stay valid (and
+    unchanged) after further observes donate the live reservoir away."""
+    x = rng.normal(size=(300, 5)).astype(np.float32)
+    fitter = OnlineFitter(x, 3, 2, chunk_n=100, donate_stream=True)
+    snap = fitter.snapshot()
+    before = _bits(snap.protos).copy()
+    for _ in range(4):  # enough folds to cascade and recycle buffers
+        fitter.observe(rng.normal(size=(250, 5)).astype(np.float32))
+    np.testing.assert_array_equal(_bits(snap.protos), before)
+    assert fitter.n_points == 300 + 4 * 250
+
+
+def test_observe_slicing_matches_prechunked_stream(rng):
+    """An oversized observe() batch folds exactly like the same data
+    pre-chunked: the key schedule is index-bound, not batch-bound."""
+    x = rng.normal(size=(800, 4)).astype(np.float32)
+    chunks = [x[i:i + 200] for i in range(0, 800, 200)]
+    a = OnlineFitter(iter(chunks), 3, 2)
+    b = OnlineFitter(x[:200], 3, 2)
+    b.observe(x[200:])  # 600 rows -> sliced into chunks 1..3
+    assert a.n_chunks == b.n_chunks == 4
+    sa, sb = a.snapshot(), b.snapshot()
+    np.testing.assert_array_equal(_bits(sa.protos), _bits(sb.protos))
+    np.testing.assert_array_equal(np.asarray(sa.labels_for(0)),
+                                  np.asarray(sb.labels_for(0)))
+
+
+def test_observe_masked_pair_and_counts(rng):
+    fitter = OnlineFitter(rng.normal(size=(200, 3)).astype(np.float32),
+                          3, 1)
+    arr = rng.normal(size=(50, 3)).astype(np.float32)
+    assert fitter.observe((arr, 20)) == 20
+    assert fitter.observe(np.zeros((0, 3), np.float32)) == 0
+    assert fitter.n_points == 220
+    stats = fitter.stats
+    assert stats["executor"] == "streaming"
+    assert stats["n_snapshots"] == 0
+
+
+def test_online_fitter_rejects_memory_executor(rng):
+    with pytest.raises(ValueError, match="chunk stream|streaming"):
+        OnlineFitter(rng.normal(size=(100, 3)).astype(np.float32),
+                     3, 1, executor="memory")
+
+
+# ----------------------------------------------------------------------
+# IndexStore artifacts
+
+
+def test_artifact_roundtrip_bitwise_parity(rng, tmp_path):
+    x = _blobs(0)
+    index = ClusterIndex.build(x, 2, 1, k=3)  # packed: bf16 + int8
+    store = IndexStore(tmp_path)
+    version = store.save(index, metadata={"note": "first"})
+    assert version == 1
+    loaded = store.load()
+    _assert_index_bitwise(index, loaded)
+    q = _blobs(7)
+    np.testing.assert_array_equal(
+        np.asarray(index.assign(jnp.asarray(q))),
+        np.asarray(loaded.assign(jnp.asarray(q))))
+
+
+def test_artifact_roundtrip_streaming_spill_index(rng, tmp_path):
+    """A streaming fit's FitResult (labels behind the spill view) saves
+    through the same path; the frozen index round-trips bitwise."""
+    x = rng.normal(size=(500, 4)).astype(np.float32)
+    result = repro.fit(iter([x[:250], x[250:]]), 3, 2)
+    store = IndexStore(tmp_path)
+    store.save(result)  # FitResult accepted directly (frozen on the way in)
+    loaded = store.load()
+    _assert_index_bitwise(ClusterIndex.build(result), loaded)
+
+
+def test_artifact_versions_are_ordered_and_isolated(tmp_path):
+    store = IndexStore(tmp_path)
+    with pytest.raises(ArtifactError, match="empty"):
+        store.load()
+    a = ClusterIndex.build(_blobs(0), 2, 1, k=3)
+    b = ClusterIndex.build(_blobs(1, shift=2.0), 2, 1, k=3)
+    assert store.save(a) == 1
+    assert store.save(b) == 2
+    assert store.list_versions() == [1, 2]
+    assert store.latest() == 2
+    _assert_index_bitwise(a, store.load(1))
+    _assert_index_bitwise(b, store.load())
+
+
+def test_artifact_rejects_torn_and_truncated(tmp_path):
+    store = IndexStore(tmp_path)
+    store.save(ClusterIndex.build(_blobs(0), 2, 1, k=3))
+    vdir = store.path(1)
+
+    # truncated manifest
+    mpath = os.path.join(vdir, "manifest.json")
+    with open(mpath) as f:
+        good = f.read()
+    with open(mpath, "w") as f:
+        f.write(good[: len(good) // 2])
+    with pytest.raises(ArtifactError, match="torn manifest"):
+        store.load(1)
+    with open(mpath, "w") as f:
+        f.write(good)
+    store.load(1)  # restored: loads again
+
+    # flipped bytes in an array file -> checksum mismatch
+    apath = os.path.join(vdir, "protos.npy")
+    raw = bytearray(open(apath, "rb").read())
+    raw[-1] ^= 0xFF
+    with open(apath, "wb") as f:
+        f.write(raw)
+    with pytest.raises(ArtifactError, match="checksum mismatch"):
+        store.load(1)
+
+    # missing array file
+    os.remove(apath)
+    with pytest.raises(ArtifactError, match="missing"):
+        store.load(1)
+
+
+def test_artifact_rejects_wrong_dim_and_bad_manifest(tmp_path):
+    store = IndexStore(tmp_path)
+    store.save(ClusterIndex.build(_blobs(0), 2, 1, k=3))
+    with pytest.raises(ArtifactError, match="not servable"):
+        store.load(1, expect_dim=7)
+
+    mpath = os.path.join(store.path(1), "manifest.json")
+    manifest = json.load(open(mpath))
+    manifest["format"] = 99
+    json.dump(manifest, open(mpath, "w"))
+    with pytest.raises(ArtifactError, match="unknown artifact format"):
+        store.load(1)
+
+
+def test_artifact_save_rejects_non_index(tmp_path):
+    with pytest.raises(TypeError, match="ClusterIndex or FitResult"):
+        IndexStore(tmp_path).save(np.zeros((3, 2), np.float32))
+
+
+# ----------------------------------------------------------------------
+# RefreshPolicy
+
+
+def test_refresh_policy_triggers():
+    p = RefreshPolicy(max_points=100, max_cascades=2, drift_ratio=0.5)
+    assert p.enabled
+    no = dict(points_since=0, cascades_since=0, drift=None)
+    assert p.should_refresh(**no) is None
+    assert p.should_refresh(**{**no, "points_since": 100}) == "max_points"
+    assert p.should_refresh(**{**no, "cascades_since": 2}) == "max_cascades"
+    assert p.should_refresh(**{**no, "drift": 1.49}) is None
+    assert p.should_refresh(**{**no, "drift": 1.5}) == "drift_ratio"
+    assert not RefreshPolicy().enabled
+    assert RefreshPolicy().should_refresh(
+        points_since=10**9, cascades_since=10**9, drift=99.0) is None
+
+
+def test_refresh_policy_from_config():
+    with repro.runtime.configure(refresh_max_points=64,
+                                 refresh_drift_ratio=0.25):
+        p = RefreshPolicy.from_config()
+    assert p == RefreshPolicy(max_points=64, max_cascades=0,
+                              drift_ratio=0.25)
+    with pytest.raises(ValueError, match="disables the trigger"):
+        repro.runtime.RuntimeConfig(refresh_max_points=-1)
+
+
+# ----------------------------------------------------------------------
+# end-to-end: virtual-clock traffic across a zero-downtime refresh
+
+
+def test_lifecycle_refresh_under_traffic(tmp_path):
+    """The ISSUE-10 acceptance loop: fit -> serve -> observe drifted
+    traffic -> policy fires -> snapshot/save/hot-swap, all while the
+    virtual-clock scheduler keeps serving. Zero failures, every response
+    attributable to exactly one version, and the refreshed index
+    measurably better on the drifted distribution."""
+    x0 = _blobs(0)                      # what the index was fitted on
+    drifted = _blobs(1, shift=8.0)      # where traffic moved
+
+    fitter = OnlineFitter(x0, 2, 1, k=3)
+    stale = fitter.build_index()
+
+    batches = []
+    loop = SimLoop()
+    executor = SimExecutor(loop, service_time=1.0)
+    svc = AsyncClusterService(stale, loop=loop, executor=executor,
+                              max_wait=2.0, observer=batches.append)
+    store = IndexStore(tmp_path)
+    driver = RefreshDriver(
+        svc, fitter, store=store,
+        policy=RefreshPolicy(max_points=120))
+
+    qrng = np.random.default_rng(3)
+    arrivals = []
+    for i in range(40):
+        pool = x0 if i < 10 else drifted  # traffic drifts at t=10
+        rows = pool[qrng.integers(0, pool.shape[0], size=8)]
+        arrivals.append((float(i), None, rows))
+
+    # feed observations mid-trace: three batches of drifted points, the
+    # second crossing the policy's 120-point threshold -> refresh fires
+    # while requests are in flight
+    for k, t_obs in enumerate((12.0, 18.0, 24.0)):
+        chunk = drifted[qrng.integers(0, drifted.shape[0], size=60)]
+        loop.call_later(t_obs, lambda c=chunk: driver.observe(c))
+
+    records = run_trace(svc, loop, arrivals)
+
+    # zero failed / dropped requests across the swap
+    for rec in records:
+        assert rec.error is None
+        assert rec.future is not None and rec.future.done()
+        assert rec.future.exception() is None
+
+    # the refresh actually happened, exactly once per threshold crossing
+    assert [v for v, _ in driver.history] == [2]
+    assert driver.history[0][1] == "max_points"
+    assert store.list_versions() == [1]
+    assert svc.version() == 2
+    stats = svc.stats_snapshot()
+    assert stats["scheduler"]["swaps"] == 1
+    assert stats["scheduler"]["failed"] == 0
+    assert stats["scheduler"]["rejected"] == 0
+
+    # every response attributable to exactly ONE index version
+    seen = {}
+    for b in batches:
+        for rid, _rows, _t in b.segments:
+            seen.setdefault(rid, set()).add(b.version)
+    assert len(seen) == len(records)
+    assert all(len(vs) == 1 for vs in seen.values())
+    assert {v for vs in seen.values() for v in vs} == {1, 2}
+
+    # the refreshed index measurably reduces mean assign distance on the
+    # drifted distribution vs the stale one
+    fresh = store.load(1)
+
+    def mean_dist(index):
+        d, _ = nearest_valid_prototype(jnp.asarray(drifted), index.protos,
+                                       index.proto_valid)
+        return float(jnp.mean(jnp.sqrt(jnp.maximum(d, 0.0))))
+
+    assert mean_dist(fresh) < 0.5 * mean_dist(stale)
+    assert driver.stats["refreshes"] == 1
+    assert driver.stats["points_since_install"] == 60  # post-swap observe
+
+
+def test_refresh_driver_drift_trigger(tmp_path):
+    """The drift proxy alone (no volume trigger) detects distribution
+    shift: baseline on in-distribution traffic, then drifted batches push
+    the EMA ratio over 1 + drift_ratio and a refresh fires."""
+    x0 = _blobs(0)
+    drifted = _blobs(2, shift=9.0)
+    fitter = OnlineFitter(x0, 2, 1, k=3)
+    loop = SimLoop()
+    svc = AsyncClusterService(fitter.build_index(), loop=loop,
+                              executor=SimExecutor(loop))
+    driver = RefreshDriver(svc, fitter,
+                           policy=RefreshPolicy(drift_ratio=1.0),
+                           drift_alpha=1.0)
+    assert driver.drift is None
+    assert driver.observe(x0[:40]) is None          # baseline: ratio 1.0
+    assert 0.99 < driver.drift < 1.01
+    version = driver.observe(drifted[:40])          # far away: fires
+    assert version == 2 and driver.history[0][1] == "drift_ratio"
+    assert driver.drift is None                     # re-baselined
+
+
+# ----------------------------------------------------------------------
+# consolidated build API + deprecated aliases
+
+
+def test_build_dispatches_on_source_type(rng):
+    x = _blobs(0)
+    result = repro.fit(jnp.asarray(x), 2, 1, k=3)
+    from_result = ClusterIndex.build(result)
+    from_raw = ClusterIndex.build(x, 2, 1, k=3)
+    _assert_index_bitwise(from_result, from_raw)
+    assert from_result.protos_bf16 is not None     # packed by default
+    bare = ClusterIndex.build(result, pack=False)
+    assert bare.protos_bf16 is None
+    repacked = ClusterIndex.build(bare)            # index -> (re)pack
+    _assert_index_bitwise(from_result, repacked)
+
+    chunks = iter([x[:90], x[90:]])
+    from_stream = ClusterIndex.build(chunks, 2, 1, k=3)
+    assert from_stream.dim == 2 and from_stream.protos_q8 is not None
+
+    with pytest.raises(TypeError, match="t/m only apply"):
+        ClusterIndex.build(result, 2, 1)
+    with pytest.raises(TypeError, match="needs t and m"):
+        ClusterIndex.build(x)
+
+
+def test_deprecated_aliases_warn_and_match_build(rng):
+    x = _blobs(0)
+    result = repro.fit(jnp.asarray(x), 2, 1, k=3)
+    want = ClusterIndex.build(result)
+    with pytest.warns(DeprecationWarning, match="ClusterIndex.build"):
+        got = ClusterIndex.from_result(result)
+    _assert_index_bitwise(want, got)
+    with pytest.warns(DeprecationWarning, match="ClusterIndex.build"):
+        got = ClusterIndex.build(x, 2, 1, k=3, pack=False).with_packed_protos()
+    _assert_index_bitwise(want, got)
+    with pytest.warns(DeprecationWarning, match="ClusterIndex.build"):
+        got = ClusterIndex.fit(jnp.asarray(x), 2, 1, "kmeans", k=3)
+    _assert_index_bitwise(want, got)
+    with pytest.warns(DeprecationWarning, match="ClusterIndex.build"):
+        streamed = ClusterIndex.fit_streaming(iter([x[:90], x[90:]]),
+                                              2, 1, "kmeans", k=3)
+    assert streamed.dim == 2
+
+
+def test_serve_surface_exports():
+    import repro.serve as serve
+
+    for name in serve.__all__:
+        assert getattr(serve, name) is not None
+    assert serve.OnlineFitter is OnlineFitter
+    assert repro.AsyncClusterService is AsyncClusterService
+    assert repro.IndexStore is IndexStore
+    with pytest.raises(AttributeError):
+        serve.not_a_thing

@@ -190,7 +190,7 @@ def test_assign_reproduces_training_labels_exactly(rng):
     prototypes than any other cluster's)."""
     x, _ = _blobs(rng)
     res = ihtc(x, 2, 2, "kmeans", k=3, key=jax.random.PRNGKey(0))
-    index = ClusterIndex.from_result(res)
+    index = ClusterIndex.build(res)
     got = np.asarray(index.assign(x))
     np.testing.assert_array_equal(got, np.asarray(res.labels))
 
@@ -201,14 +201,14 @@ def test_assign_m0_is_exact_identity(rng):
     x, _ = gmm_sample(150, rng)
     xj = jnp.asarray(x)
     res = ihtc(xj, 2, 0, "kmeans", k=3, key=jax.random.PRNGKey(1))
-    index = ClusterIndex.from_result(res)
+    index = ClusterIndex.build(res)
     np.testing.assert_array_equal(np.asarray(index.assign(xj)),
                                   np.asarray(res.labels))
 
 
 def test_assign_blocked_matches_one_shot(rng):
     x, _ = _blobs(rng)
-    index = ClusterIndex.fit(x, 2, 1, "kmeans", k=3,
+    index = ClusterIndex.build(x, 2, 1, "kmeans", k=3,
                              key=jax.random.PRNGKey(2))
     q = jnp.asarray(rng.normal(size=(64, 2)), jnp.float32) * 3.0
     np.testing.assert_array_equal(np.asarray(index.assign(q)),
@@ -218,7 +218,7 @@ def test_assign_blocked_matches_one_shot(rng):
 def test_assign_labels_new_queries_by_blob(rng):
     x, _ = _blobs(rng)
     res = ihtc(x, 2, 2, "kmeans", k=3, key=jax.random.PRNGKey(0))
-    index = ClusterIndex.from_result(res)
+    index = ClusterIndex.build(res)
     # fresh draws right on the blob centres must get the blobs' labels
     train = np.asarray(res.labels)
     blob_label = [np.bincount(train[i * 100:(i + 1) * 100]).argmax()
@@ -229,7 +229,7 @@ def test_assign_labels_new_queries_by_blob(rng):
 
 def test_assign_respects_runtime_impl(rng):
     x, _ = _blobs(rng)
-    index = ClusterIndex.fit(x, 2, 1, "kmeans", k=3,
+    index = ClusterIndex.build(x, 2, 1, "kmeans", k=3,
                              key=jax.random.PRNGKey(3))
     q = x[: 50]
     want = np.asarray(index.assign(q, impl="ref"))
@@ -240,7 +240,7 @@ def test_assign_respects_runtime_impl(rng):
 
 def test_cluster_service_buckets_and_chunking(rng):
     x, _ = _blobs(rng)
-    index = ClusterIndex.fit(x, 2, 2, "kmeans", k=3,
+    index = ClusterIndex.build(x, 2, 2, "kmeans", k=3,
                              key=jax.random.PRNGKey(0))
     svc = ClusterService(index, buckets=(16, 64, 256))
     svc.warmup()
@@ -259,7 +259,7 @@ def test_cluster_service_buckets_and_chunking(rng):
 
 def test_cluster_service_rejects_bad_buckets(rng):
     x, _ = _blobs(rng, n_per=20)
-    index = ClusterIndex.fit(x, 2, 1, "kmeans", k=3)
+    index = ClusterIndex.build(x, 2, 1, "kmeans", k=3)
     with pytest.raises(ValueError):
         ClusterService(index, buckets=())
     with pytest.raises(ValueError):
@@ -271,7 +271,7 @@ def test_cluster_service_top_bucket_boundaries(rng):
     request is one chunk; one over must chunk as top + remainder, and the
     stats counters must account for every chunk exactly."""
     x, _ = _blobs(rng, n_per=30)
-    index = ClusterIndex.fit(x, 2, 1, "kmeans", k=3,
+    index = ClusterIndex.build(x, 2, 1, "kmeans", k=3,
                              key=jax.random.PRNGKey(0))
     top = 64
     svc = ClusterService(index, buckets=(16, top))
@@ -299,7 +299,7 @@ def test_cluster_service_empty_request_under_mesh(rng):
     from repro.core.distributed import make_data_mesh
 
     x, _ = _blobs(rng, n_per=20)
-    index = ClusterIndex.fit(x, 2, 1, "kmeans", k=3,
+    index = ClusterIndex.build(x, 2, 1, "kmeans", k=3,
                              key=jax.random.PRNGKey(1))
     svc = ClusterService(index, buckets=(8, 32))
     with runtime.configure(mesh=make_data_mesh()):
@@ -338,7 +338,7 @@ def test_assign_all_noise_backend_labels(rng):
     returns the noise label -1 for every query."""
     x, _ = _blobs(rng, n_per=20)
     # dbscan with an impossible density: every prototype is noise
-    index = ClusterIndex.fit(x, 2, 1, "dbscan", eps=1e-6, min_pts=1e9,
+    index = ClusterIndex.build(x, 2, 1, "dbscan", eps=1e-6, min_pts=1e9,
                              key=jax.random.PRNGKey(2))
     assert not bool(jnp.any(index.proto_labels >= 0))
     np.testing.assert_array_equal(np.asarray(index.assign(x[:7])), -1)
@@ -418,7 +418,7 @@ def test_cluster_service_warmup_excludes_prior_traffic_from_stats(rng):
     fire a few requests before the warmup sweep) — otherwise the
     warmup-phase traffic pollutes reported steady-state throughput."""
     x, _ = _blobs(rng, n_per=20)
-    index = ClusterIndex.fit(x, 2, 1, "kmeans", k=3,
+    index = ClusterIndex.build(x, 2, 1, "kmeans", k=3,
                              key=jax.random.PRNGKey(0))
     svc = ClusterService(index, buckets=(8, 32))
     svc.assign(x[:5])   # pre-warmup probe
@@ -436,7 +436,7 @@ def test_cluster_service_warmup_excludes_prior_traffic_from_stats(rng):
 
 def test_index_check_servable_and_n_valid(rng):
     x, _ = _blobs(rng, n_per=20)
-    index = ClusterIndex.fit(x, 2, 1, "kmeans", k=3,
+    index = ClusterIndex.build(x, 2, 1, "kmeans", k=3,
                              key=jax.random.PRNGKey(1))
     assert index.check_servable() is index
     assert index.check_servable(expect_dim=2) is index

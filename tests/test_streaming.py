@@ -70,13 +70,13 @@ def test_streaming_parity_tiny_raw_fold(rng):
 
 
 def test_fit_streaming_index_matches_in_memory_fit(rng):
-    """ClusterIndex.fit_streaming on a single-buffer stream freezes the
-    same artifact as ClusterIndex.fit."""
+    """ClusterIndex.build on a single-buffer chunk stream freezes the
+    same artifact as building from the resident array."""
     x, _ = gmm_sample(256, rng)
     key = jax.random.PRNGKey(0)
-    want = ClusterIndex.fit(jnp.asarray(x), 2, 2, "kmeans", k=3, key=key)
-    got = ClusterIndex.fit_streaming(iter([x]), 2, 2, "kmeans", k=3, key=key,
-                                     chunk_n=256, reservoir_n=512)
+    want = ClusterIndex.build(jnp.asarray(x), 2, 2, "kmeans", k=3, key=key)
+    got = ClusterIndex.build(iter([x]), 2, 2, "kmeans", k=3, key=key,
+                             chunk_n=256, reservoir_n=512)
     np.testing.assert_array_equal(
         np.asarray(got.protos).view(np.uint32),
         np.asarray(want.protos).view(np.uint32))

@@ -337,11 +337,11 @@ def test_autotune_assign_cell_records_and_serves(rng, cache):
     assert sec > 0
 
     protos = jnp.asarray(rng.normal(size=(32, 4)) * 10.0, jnp.float32)
-    idx = ClusterIndex(
+    idx = ClusterIndex.build(ClusterIndex(
         protos=protos, proto_mass=jnp.ones((32,)),
         proto_valid=jnp.ones((32,), bool),
         proto_labels=jnp.arange(32, dtype=jnp.int32),
-        n_prototypes=jnp.asarray(32, jnp.int32)).with_packed_protos()
+        n_prototypes=jnp.asarray(32, jnp.int32)))
     q = jnp.asarray(rng.normal(size=(16, 4)) * 10.0, jnp.float32)
     want = idx.assign(q, impl="ref")
     # pin a fused winner for this bucket and let auto dispatch pick it up
